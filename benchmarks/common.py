@@ -1,0 +1,31 @@
+"""Shared benchmark utilities. Output convention: ``name,us_per_call,derived``."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time per call in microseconds (blocks on async dispatch)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def random_positions(rng, n: int, lo: float, hi: float) -> np.ndarray:
+    return rng.uniform(lo, hi, (n, 3)).astype(np.float32)

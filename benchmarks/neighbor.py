@@ -1,0 +1,129 @@
+"""Paper Fig 11: neighbor-search environment comparison.
+
+BioDynaMo compares its uniform grid against kd-tree (nanoflann) and octree
+(UniBN); pointer-chasing trees have no faithful XLA analogue (DESIGN.md §10.5),
+so the comparison set here is: optimized sort-based uniform grid (ours),
+scatter-table grid ('standard implementation'), spatial-hash grid, and exact
+brute force (reference). Reported separately, as in the paper: index BUILD
+time and SEARCH (force sweep) time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import agents, grid as G
+from repro.core.forces import ForceParams, make_force_pair_fn
+
+from .common import emit, random_positions, time_fn
+
+N = 30_000
+RADIUS = 4.0
+SIDE = 130.0
+
+
+def run() -> None:
+    rng = np.random.default_rng(3)
+    pos = random_positions(rng, N, 2.0, SIDE - 2.0)
+    pool = agents.make_pool(N, position=jnp.asarray(pos),
+                            diameter=jnp.full((N,), 3.0))
+    spec = G.GridSpec(dims=(33, 33, 33), max_per_box=32, query_chunk=4096)
+    origin = jnp.zeros(3)
+    r = jnp.asarray(RADIUS)
+    channels = {k: v for k, v in pool.channels().items()
+                if not k.startswith("extra.")}
+    pair = make_force_pair_fn(ForceParams())
+    out_specs = {"force": ((3,), jnp.float32), "force_nnz": ((), jnp.int32)}
+    all_idx = jnp.arange(N, dtype=jnp.int32)
+
+    # --- build times ---
+    build_u = jax.jit(lambda p: G.build(spec, p, origin, r))
+    us_build_u = time_fn(build_u, pool)
+    emit("fig11_build_uniform_grid", us_build_u, f"n={N}")
+    build_s = jax.jit(lambda p: G.build_scatter_grid(spec, p, origin, r))
+    us_build_s = time_fn(build_s, pool)
+    emit("fig11_build_scatter_grid", us_build_s,
+         f"vs_uniform={us_build_s / us_build_u:.2f}x")
+    build_h = jax.jit(lambda p: G.build_hash_grid(spec, p, origin, r))
+    us_build_h = time_fn(build_h, pool)
+    emit("fig11_build_hash_grid", us_build_h,
+         f"vs_uniform={us_build_h / us_build_u:.2f}x")
+
+    # --- search (force sweep) times ---
+    gs = build_u(pool)
+    search_u = jax.jit(lambda g: G.neighbor_apply(
+        spec, g, channels, all_idx, jnp.int32(N), pair, out_specs))
+    us_u = time_fn(search_u, gs)
+    emit("fig11_search_uniform_grid", us_u, f"n={N}")
+
+    sg = build_s(pool)
+
+    def search_scatter(g):
+        b = spec.query_chunk
+        nb = (N + b - 1) // b
+        outs = {k: jnp.zeros((N, *sfx), dt) for k, (sfx, dt) in out_specs.items()}
+
+        def body(i, outs):
+            sl = i * b
+            q_slot = jnp.minimum(sl + jnp.arange(b, dtype=jnp.int32), N - 1)
+            lane_ok = (sl + jnp.arange(b)) < N
+            q = {k: v[q_slot] for k, v in channels.items()}
+            ids, valid = G.scatter_grid_candidates(spec, g, q["position"])
+            valid &= lane_ok[:, None] & (ids != q_slot[:, None])
+            nbr = {k: v[ids] for k, v in channels.items()}
+            res = pair(q, nbr, valid, q_slot)
+            new = dict(outs)
+            for name, val in res.items():
+                val = jnp.where(lane_ok.reshape((b,) + (1,) * (val.ndim - 1)),
+                                val, 0)
+                new[name] = outs[name].at[q_slot].add(
+                    val.astype(outs[name].dtype), mode="drop")
+            return new
+
+        return jax.lax.fori_loop(0, nb, body, outs)
+
+    us_s = time_fn(jax.jit(search_scatter), sg)
+    emit("fig11_search_scatter_grid", us_s, f"vs_uniform={us_s / us_u:.2f}x")
+
+    hg = build_h(pool)
+
+    def search_hash(g):
+        b = spec.query_chunk
+        nb = (N + b - 1) // b
+        outs = {k: jnp.zeros((N, *sfx), dt) for k, (sfx, dt) in out_specs.items()}
+
+        def body(i, outs):
+            sl = i * b
+            q_slot = jnp.minimum(sl + jnp.arange(b, dtype=jnp.int32), N - 1)
+            lane_ok = (sl + jnp.arange(b)) < N
+            q = {k: v[q_slot] for k, v in channels.items()}
+            ids, valid = G.hash_grid_candidates(spec, g, q["position"])
+            valid &= lane_ok[:, None] & (ids != q_slot[:, None])
+            nbr = {k: v[ids] for k, v in channels.items()}
+            res = pair(q, nbr, valid, q_slot)
+            new = dict(outs)
+            for name, val in res.items():
+                val = jnp.where(lane_ok.reshape((b,) + (1,) * (val.ndim - 1)),
+                                val, 0)
+                new[name] = outs[name].at[q_slot].add(
+                    val.astype(outs[name].dtype), mode="drop")
+            return new
+
+        return jax.lax.fori_loop(0, nb, body, outs)
+
+    us_h = time_fn(jax.jit(search_hash), hg)
+    emit("fig11_search_hash_grid", us_h, f"vs_uniform={us_h / us_u:.2f}x")
+
+    # brute force at reduced N (quadratic — paper's trees are its stand-in)
+    nb = 3_000
+    pool_b = agents.make_pool(nb, position=jnp.asarray(pos[:nb]),
+                              diameter=jnp.full((nb,), 3.0))
+    ch_b = {k: v for k, v in pool_b.channels().items()
+            if not k.startswith("extra.")}
+    bf = jax.jit(lambda p: G.brute_force_apply(ch_b, p.alive, r, pair,
+                                               out_specs, chunk=1024))
+    us_b = time_fn(bf, pool_b)
+    emit("fig11_search_brute_force", us_b,
+         f"n={nb} (quadratic reference)")

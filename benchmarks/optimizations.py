@@ -1,0 +1,74 @@
+"""Paper Fig 9: speedup as the BioDynaMo optimizations are switched on.
+
+Baseline = 'standard implementation': scatter-table grid (O(#boxes) touch per
+rebuild), no Morton sorting, no static-region detection. Then progressively:
+  +grid     optimized sort-based uniform grid (§3.1)
+  +sort     Morton agent sorting, frequency 10 (§4.2)
+  +statics  static-region force omission (§5) — on the quiescent-front sim
+
+Two workloads mirror the paper's spread: 'cluster' (random init, everything
+moves — sorting matters) and 'front' (a static lattice with an active front —
+statics matter; paper's neuroscience case).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import EngineConfig, ForceParams, Simulation
+from repro.core.behaviors import RandomWalk
+
+from .common import emit, random_positions, time_fn
+
+N = 20_000
+ITERS = 5
+
+
+def _mk_sim(env: str, sort_freq: int, statics: bool, workload: str):
+    rng = np.random.default_rng(1)
+    side = 120.0
+    cfg = EngineConfig(capacity=N, domain_lo=(0, 0, 0), domain_hi=(side,) * 3,
+                       interaction_radius=4.0, dt=0.05,
+                       environment=env, sort_frequency=sort_freq,
+                       detect_static=statics, max_per_box=32,
+                       query_chunk=4096,
+                       force=ForceParams(max_displacement=0.5))
+    behaviors = []
+    if workload == "cluster":
+        pos = random_positions(rng, N, 2.0, side - 2.0)
+    else:  # 'front': dense static lattice + small active region
+        g = int(round(N ** (1 / 3)))
+        xs = np.stack(np.meshgrid(*[np.arange(g) * 5.0 + 5] * 3), -1
+                      ).reshape(-1, 3)[:N].astype(np.float32)
+        pos = xs
+        behaviors = [RandomWalk(sigma=0.4, applies_to=1)]
+    sim = Simulation(cfg, behaviors)
+    types = np.zeros(len(pos), np.int32)
+    if workload == "front":
+        types[: len(pos) // 20] = 1                  # 5% active front
+    st = sim.init_state(pos, diameter=np.full(len(pos), 3.0, np.float32),
+                        agent_type=types)
+    return sim, st
+
+
+def _bench(env, sort_freq, statics, workload):
+    sim, st = _mk_sim(env, sort_freq, statics, workload)
+    st = sim.step(st)
+    def run_iters(s):
+        for _ in range(ITERS):
+            s = sim.step(s)
+        return s
+    return time_fn(run_iters, st, warmup=1, iters=2) / ITERS
+
+
+def run() -> None:
+    for workload in ("cluster", "front"):
+        base = _bench("scatter_grid", 0, False, workload)
+        emit(f"fig9_{workload}_baseline", base, "scatter grid, no opts")
+        t = _bench("uniform_grid", 0, False, workload)
+        emit(f"fig9_{workload}_grid", t, f"speedup={base / t:.2f}x")
+        t2 = _bench("uniform_grid", 10, False, workload)
+        emit(f"fig9_{workload}_grid_sort", t2, f"speedup={base / t2:.2f}x")
+        t3 = _bench("uniform_grid", 10, True, workload)
+        emit(f"fig9_{workload}_grid_sort_statics", t3,
+             f"speedup={base / t3:.2f}x")

@@ -1,0 +1,46 @@
+# One module per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+#
+#   Fig 5  breakdown.py      operation runtime shares
+#   Fig 6  scaling.py        runtime vs #agents (linearity)
+#   Fig 7  cellsort.py       Biocellion cell-sorting model + throughput
+#   Fig 9  optimizations.py  progressive optimization speedups
+#   Fig 11 neighbor.py       neighbor-search environment comparison
+#   Fig 12 sorting.py        sort-frequency study
+#   Fig 13 allocator.py      pool allocator vs fresh allocation
+#
+# The roofline tables (assignment §Roofline) come from the dry-run
+# (`python -m repro.launch.dryrun --all`), not from this harness — this
+# container has one CPU core; dry-run numbers are per-device analytic terms.
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (allocator, breakdown, cellsort, neighbor, optimizations,
+                   scaling, sorting)
+
+    modules = [("fig5_breakdown", breakdown), ("fig6_scaling", scaling),
+               ("fig7_cellsort", cellsort), ("fig9_optimizations", optimizations),
+               ("fig11_neighbor", neighbor), ("fig12_sorting", sorting),
+               ("fig13_allocator", allocator)]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in modules:
+        if only and only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod.run()
+            print(f"# {name} done in {time.time() - t0:.1f}s")
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Paper Fig 6: runtime per iteration vs #agents — the linearity claim.
+
+The paper shows runtime flat until ~1e5 agents then linear to 1e9. The
+container (1 CPU core) covers 1e3→1e5 and validates the *slope*: a log-log
+fit of runtime vs N over the linear regime should give exponent ≈ 1
+(grid build is O(N log N) from the sort; forces O(N·k)).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import EngineConfig, ForceParams, Simulation
+from repro.core.behaviors import GrowDivide
+
+from .common import emit, random_positions, time_fn
+
+SIZES = (1_000, 4_000, 16_000, 64_000)
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    times = []
+    for n in SIZES:
+        side = max(40.0, (n ** (1 / 3)) * 4.0)      # constant density
+        cfg = EngineConfig(capacity=int(n * 1.3), domain_lo=(0, 0, 0),
+                           domain_hi=(side,) * 3, interaction_radius=4.0,
+                           dt=0.05, max_per_box=32, query_chunk=4096,
+                           force=ForceParams(max_displacement=0.5))
+        sim = Simulation(cfg, [GrowDivide(rate=0.01, threshold_diameter=6.0)])
+        pos = random_positions(rng, n, 2.0, side - 2.0)
+        st = sim.init_state(pos, diameter=np.full(n, 3.0, np.float32))
+        st = sim.step(st)                            # compile + warm
+        us = time_fn(lambda s: sim.step(s), st, warmup=1, iters=3)
+        times.append(us)
+        emit(f"fig6_scaling_n{n}", us, f"n={n}")
+    # slope over the linear regime (largest two decades)
+    logn = np.log(np.asarray(SIZES[1:], float))
+    logt = np.log(np.asarray(times[1:], float))
+    slope = np.polyfit(logn, logt, 1)[0]
+    emit("fig6_scaling_slope", 0.0, f"loglog_slope={slope:.3f} (paper: ~1)")

@@ -1,0 +1,45 @@
+"""Paper Fig 12: agent sorting & balancing speedup vs execution frequency.
+
+Random-initialized clustering workload (the paper's best case: peak 4.56×);
+baseline is no sorting. Frequencies {1, 5, 10, 20} as in the paper.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import EngineConfig, ForceParams, Simulation
+
+from .common import emit, random_positions, time_fn
+
+N = 20_000
+ITERS = 5
+
+
+def _bench(sort_freq: int) -> float:
+    rng = np.random.default_rng(2)
+    side = 110.0
+    cfg = EngineConfig(capacity=N, domain_lo=(0, 0, 0), domain_hi=(side,) * 3,
+                       interaction_radius=4.0, dt=0.05,
+                       sort_frequency=sort_freq, max_per_box=32,
+                       query_chunk=4096,
+                       force=ForceParams(max_displacement=0.5))
+    sim = Simulation(cfg, [])
+    pos = random_positions(rng, N, 2.0, side - 2.0)
+    st = sim.init_state(pos, diameter=np.full(N, 3.0, np.float32))
+    st = sim.step(st)
+
+    def run_iters(s):
+        for _ in range(ITERS):
+            s = sim.step(s)
+        return s
+
+    return time_fn(run_iters, st, warmup=1, iters=2) / ITERS
+
+
+def run() -> None:
+    base = _bench(0)
+    emit("fig12_sort_freq_off", base, "baseline (no sorting)")
+    for freq in (1, 5, 10, 20):
+        t = _bench(freq)
+        emit(f"fig12_sort_freq_{freq}", t, f"speedup={base / t:.2f}x")

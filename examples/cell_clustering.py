@@ -1,0 +1,48 @@
+"""Cell clustering (paper Table 1): chemotaxis toward self-secreted substance.
+
+Agents secrete a diffusing chemoattractant and climb its gradient — the
+engine's diffusion substrate + behavior composition. Mean pairwise distance
+shrinks as clusters form.
+
+    PYTHONPATH=src python examples/cell_clustering.py
+"""
+
+import numpy as np
+
+from repro.core import EngineConfig, Simulation
+from repro.core.behaviors import Chemotaxis, Secretion
+from repro.core.diffusion import DiffusionSpec
+
+
+def mean_pairwise(p, k=512):
+    idx = np.random.default_rng(0).choice(len(p), size=min(k, len(p)), replace=False)
+    q = p[idx]
+    d = np.sqrt(((q[:, None] - q[None]) ** 2).sum(-1))
+    return d[np.triu_indices(len(q), 1)].mean()
+
+
+def main():
+    rng = np.random.default_rng(4)
+    n = 4_000
+    side = 64.0
+    cfg = EngineConfig(
+        capacity=n, domain_lo=(0, 0, 0), domain_hi=(side,) * 3,
+        interaction_radius=3.0, use_forces=False, query_chunk=4096,
+        diffusion=DiffusionSpec(dims=(32, 32, 32), coefficient=0.5,
+                                decay=0.01, voxel=2.0))
+    sim = Simulation(cfg, [Secretion(rate=2.0), Chemotaxis(speed=0.35)])
+    pos = rng.uniform(4, side - 4, (n, 3)).astype(np.float32)
+    state = sim.init_state(pos, diameter=np.full(n, 1.0, np.float32))
+    p0 = np.asarray(state.pool.position[:n])
+    print(f"initial mean pairwise distance: {mean_pairwise(p0):.2f}")
+    for epoch in range(6):
+        state = sim.run(state, 10)
+        p = np.asarray(state.pool.position[:n])
+        print(f"iter {int(state.iteration):3d}: mean pairwise "
+              f"{mean_pairwise(p):.2f}  substance max {float(state.conc.max()):.1f}")
+    assert mean_pairwise(np.asarray(state.pool.position[:n])) < mean_pairwise(p0)
+    print("OK: clusters formed")
+
+
+if __name__ == "__main__":
+    main()

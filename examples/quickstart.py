@@ -1,0 +1,39 @@
+"""Quickstart: cell proliferation (the paper's first benchmark simulation).
+
+A cluster of cells grows and divides under mechanical collision forces.
+Runs in ~1 min on one CPU core.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import EngineConfig, ForceParams, Simulation
+from repro.core.behaviors import GrowDivide
+
+
+def main():
+    rng = np.random.default_rng(0)
+    cfg = EngineConfig(
+        capacity=32768,
+        domain_lo=(0, 0, 0), domain_hi=(120, 120, 120),
+        interaction_radius=14.0,
+        dt=0.2,
+        sort_frequency=10,              # paper §4.2 memory-layout optimization
+        max_per_box=64,
+        force=ForceParams(max_displacement=1.0),
+    )
+    sim = Simulation(cfg, [GrowDivide(rate=1.0, threshold_diameter=12.0)])
+    pos = rng.uniform(50, 70, (128, 3)).astype(np.float32)
+    state = sim.init_state(pos, diameter=np.full(128, 8.0, np.float32))
+
+    for epoch in range(6):
+        state = sim.run(state, 10, check_overflow=True)
+        print(f"iter {int(state.iteration):3d}: n_live={int(state.stats['n_live']):5d} "
+              f"births={int(state.stats['births'])}")
+    assert int(state.stats["n_live"]) > 128
+    print("OK: population grew under mechanical constraints")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Batched serving with continuous batching + the paged KV pool (paper §4.3).
+
+A small LM serves a queue of requests through fixed decode slots; finished
+sequences release their pages back to the pool and queued requests are
+admitted — the paper's parallel add/remove (§3.2) as admission control.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models import build_model
+from repro.serve import ContinuousBatcher, Request
+from repro.serve import kv_cache as kvc
+
+
+def main():
+    arch = dataclasses.replace(
+        ARCHS["qwen2-1.5b"], name="qwen2-serve", n_layers=2, d_model=128,
+        n_heads=4, n_kv_heads=2, d_head=32, d_ff=512, vocab_size=8192,
+        param_dtype="float32", activation_dtype="float32", remat="none")
+    model = build_model(arch)
+    params = model.init_params(jax.random.PRNGKey(0))
+    s_max = 128
+
+    spec = kvc.PagedCacheSpec(
+        n_layers=arch.n_layers, n_kv_heads=arch.n_kv_heads,
+        d_head=arch.d_head, page_size=16, n_pages=96, max_seqs=4,
+        max_pages_per_seq=s_max // 16, dtype="float32")
+
+    # dense decode caches per slot (model side); the paged pool manages
+    # admission/lengths (allocator side)
+    caches = model.init_decode_caches(spec.max_seqs, s_max)
+    lens = np.zeros(spec.max_seqs, np.int64)
+
+    def prefill_fn(prompt, slot, batcher):
+        # write the prompt into this slot's dense cache via decode steps
+        nonlocal caches, lens
+        tok = None
+        for t, p in enumerate(prompt):
+            one = jnp.full((spec.max_seqs,), int(p), jnp.int32)
+            logits, caches = model.decode_step(params, one, caches,
+                                               jnp.int32(int(lens[slot])))
+            lens[slot] += 1
+            tok = int(jnp.argmax(logits[slot]))
+        return None, tok
+
+    decode_calls = {"n": 0}
+
+    def decode_fn(p, tokens, pool_state, active):
+        nonlocal caches, lens
+        decode_calls["n"] += 1
+        logits, caches = model.decode_step(p, tokens, caches,
+                                           jnp.int32(int(lens.max())))
+        lens[np.asarray(active)] += 1
+        nxt = jnp.argmax(logits, axis=-1)
+        # keep the paged pool in lock-step (admission control ground truth)
+        knew = jnp.zeros((spec.n_layers, spec.max_seqs, spec.n_kv_heads,
+                          spec.d_head), jnp.float32)
+        pool_state2, _ = kvc.append_token(spec, batcher.state, knew, knew)
+        batcher.state = pool_state2
+        return nxt, pool_state2
+
+    batcher = ContinuousBatcher(spec, prefill_fn, decode_fn, eos_token=0)
+    rng = np.random.default_rng(0)
+    for uid in range(10):
+        prompt = rng.integers(2, 8192, size=rng.integers(4, 12)).astype(np.int32)
+        batcher.submit(Request(uid=uid, prompt=prompt, max_new_tokens=12))
+
+    batcher.run_until_drained(params, max_steps=500)
+    done = sorted(f.uid for f in batcher.finished)
+    print(f"finished {len(done)} requests: uids={done}")
+    print(f"decode engine iterations: {decode_calls['n']} "
+          f"(continuous batching packs multiple requests per iteration)")
+    assert done == list(range(10))
+    assert int(batcher.state.n_free) == spec.n_pages, "all pages returned"
+    print("OK: continuous batching drained the queue; pool leaked nothing")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Insert generated dry-run/roofline/perf tables into EXPERIMENTS.md markers.
+
+Usage: PYTHONPATH=src python scripts/assemble_experiments.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.roofline import report  # noqa: E402
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def main() -> None:
+    results = os.path.join(ROOT, "results", "dryrun")
+    perf = os.path.join(ROOT, "results", "perf")
+    recs = report.load(results)
+
+    dry = ("### Single pod (16×16 = 256 chips)\n\n"
+           + report.dryrun_table(recs, "pod1")
+           + "\n\n### Multi-pod (2×16×16 = 512 chips)\n\n"
+           + report.dryrun_table(recs, "pod2"))
+    roof = ("### Single-pod baseline (all cells)\n\n"
+            + report.roofline_table(recs, "pod1")
+            + "\n\n### Multi-pod (512 chips)\n\n"
+            + report.roofline_table(recs, "pod2"))
+    perf_md = report.perf_table(perf)
+
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(path) as f:
+        text = f.read()
+    text = text.replace("<!-- DRYRUN_TABLES -->", dry)
+    text = text.replace("<!-- ROOFLINE_TABLE -->", roof)
+    text = text.replace("<!-- PERF_LOG -->", perf_md)
+    with open(path, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md assembled")
+
+
+if __name__ == "__main__":
+    main()

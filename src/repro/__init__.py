@@ -1,0 +1,19 @@
+"""repro — BioDynaMo-JAX: TPU-native high-performance agent-based simulation engine.
+
+Reproduction (and TPU adaptation) of:
+  "High-Performance and Scalable Agent-Based Simulation with BioDynaMo"
+  Breitwieser, Hesam, Rademakers, Gomez-Luna, Mutlu (CS.DC 2023)
+
+Package layout:
+  repro.core      -- the paper's engine (grid neighbor search, Morton sort,
+                     parallel add/remove, static-region detection, forces)
+  repro.kernels   -- Pallas TPU kernels for perf-critical hot spots
+  repro.models    -- LM substrate for the assigned architecture pool
+  repro.configs   -- architecture configs (10 assigned + ABM-native)
+  repro.train     -- optimizer / train_step / checkpointing
+  repro.serve     -- paged KV cache + decode + continuous batching
+  repro.launch    -- mesh, multi-pod dry-run, drivers
+  repro.roofline  -- roofline analysis from compiled HLO
+"""
+
+__version__ = "1.0.0"

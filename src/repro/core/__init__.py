@@ -1,0 +1,9 @@
+"""repro.core — the paper's simulation engine (BioDynaMo optimizations O1-O6)."""
+
+from .agents import AgentPool, make_pool
+from .engine import EngineConfig, EngineState, Simulation, StepContext
+from .forces import ForceParams
+from .grid import GridSpec
+
+__all__ = ["AgentPool", "make_pool", "EngineConfig", "EngineState",
+           "Simulation", "StepContext", "ForceParams", "GridSpec"]

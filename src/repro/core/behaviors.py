@@ -1,0 +1,273 @@
+"""Behavior system — paper §2: behaviors are per-agent actions; operations apply them.
+
+Behaviors read the step context (pool, grid, diffusion, RNG) and return
+*effects*: channel updates, staged births, death marks, substance secretion.
+The engine merges effects and commits them in the iteration epilogue —
+mirroring BioDynaMo's thread-local staging + end-of-iteration commit (§3.2).
+
+The catalogue below covers the paper's five benchmark simulations (Table 1):
+  GrowDivide          cell proliferation / oncology (create agents)
+  RandomWalk          epidemiology / oncology (agents move randomly)
+  Infection+Recovery  epidemiology (SIR over spatial neighbors)
+  Chemotaxis          cell clustering (move along substance gradient)
+  Secretion           cell clustering / neuroscience (substance sources)
+  RandomDeath         oncology (delete agents)
+  NeuriteGrowth       neuroscience (growth cones + static trail + bifurcation)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .agents import AgentPool
+
+
+@dataclasses.dataclass
+class BehaviorEffects:
+    """What a behavior wants to change. All optional; engine merges in order."""
+    set_channels: Dict[str, jnp.ndarray] = dataclasses.field(default_factory=dict)
+    birth_channels: Optional[Dict[str, jnp.ndarray]] = None   # (Q, ...) staged agents
+    birth_valid: Optional[jnp.ndarray] = None                 # (Q,) bool
+    death_mask: Optional[jnp.ndarray] = None                  # (C,) bool
+    secretion: Optional[jnp.ndarray] = None                   # (C,) amounts
+
+
+class Behavior:
+    """Base class. Subclasses override extra_specs() and __call__()."""
+
+    name: str = "behavior"
+
+    def extra_specs(self) -> Dict[str, tuple]:
+        """Channels this behavior needs: name → (shape_suffix, dtype, fill)."""
+        return {}
+
+    def __call__(self, ctx, pool: AgentPool, rng: jax.Array) -> BehaviorEffects:
+        raise NotImplementedError
+
+
+class GrowDivide(Behavior):
+    """Grow diameter at ``rate``; split once above ``threshold_diameter``.
+
+    Division: mother shrinks to volume/2, daughter (staged birth) placed at a
+    random direction at center distance = mother radius (BioDynaMo CellDivision).
+    """
+
+    name = "grow_divide"
+
+    def __init__(self, rate: float = 1.0, threshold_diameter: float = 12.0,
+                 applies_to: int | None = None):
+        self.rate = rate
+        self.threshold = threshold_diameter
+        self.applies_to = applies_to
+
+    def _mask(self, pool):
+        m = pool.alive
+        if self.applies_to is not None:
+            m &= pool.agent_type == self.applies_to
+        return m
+
+    def __call__(self, ctx, pool: AgentPool, rng: jax.Array) -> BehaviorEffects:
+        mask = self._mask(pool)
+        new_dia = jnp.where(mask, pool.diameter + self.rate * ctx.dt, pool.diameter)
+        divide = mask & (new_dia >= self.threshold)
+        # halve the volume: d' = d / 2^(1/3)
+        halved = new_dia * (0.5 ** (1.0 / 3.0))
+        mother_dia = jnp.where(divide, halved, new_dia)
+        # daughter placement
+        k1, _ = jax.random.split(rng)
+        direction = jax.random.normal(k1, pool.position.shape, pool.position.dtype)
+        direction /= jnp.sqrt(
+            jnp.sum(direction * direction, -1, keepdims=True) + 1e-12)
+        d_pos = pool.position + direction * (mother_dia * 0.5)[:, None]
+        return BehaviorEffects(
+            set_channels={"diameter": mother_dia},
+            birth_channels={"position": d_pos, "diameter": mother_dia,
+                            "agent_type": pool.agent_type},
+            birth_valid=divide,
+        )
+
+
+class RandomWalk(Behavior):
+    """Brownian step of scale sigma (epidemiology/oncology random movement)."""
+
+    name = "random_walk"
+
+    def __init__(self, sigma: float = 1.0, applies_to: int | None = None):
+        self.sigma = sigma
+        self.applies_to = applies_to
+
+    def __call__(self, ctx, pool: AgentPool, rng: jax.Array) -> BehaviorEffects:
+        mask = pool.alive
+        if self.applies_to is not None:
+            mask &= pool.agent_type == self.applies_to
+        step = self.sigma * jax.random.normal(rng, pool.position.shape,
+                                              pool.position.dtype)
+        new_pos = jnp.where(mask[:, None], pool.position + step * ctx.dt,
+                            pool.position)
+        new_pos = jnp.clip(new_pos, ctx.domain_lo, ctx.domain_hi)
+        return BehaviorEffects(set_channels={"position": new_pos})
+
+
+# SIR agent_type encoding used by the epidemiology simulation.
+SUSCEPTIBLE, INFECTED, RECOVERED = 0, 1, 2
+
+
+class Infection(Behavior):
+    """SIR infection over spatial neighbors (paper epidemiology use case).
+
+    Susceptible agents with ≥1 infected neighbor within ``radius`` become
+    infected with probability ``beta``; infected agents recover after
+    ``recovery_time`` iterations (timer channel).
+    """
+
+    name = "infection"
+
+    def __init__(self, radius: float = 2.0, beta: float = 0.3,
+                 recovery_time: int = 50):
+        self.radius = radius
+        self.beta = beta
+        self.recovery_time = recovery_time
+
+    def extra_specs(self):
+        return {"infect_timer": ((), jnp.int32, 0)}
+
+    def __call__(self, ctx, pool: AgentPool, rng: jax.Array) -> BehaviorEffects:
+        r = self.radius
+
+        def pair_fn(q, nbr, valid, q_slot):
+            d = nbr["position"] - q["position"][:, None, :]
+            dist2 = jnp.sum(d * d, axis=-1)
+            exposed = valid & nbr["alive"] & (nbr["agent_type"] == INFECTED) \
+                & (dist2 <= r * r)
+            return {"exposed": jnp.any(exposed, axis=-1).astype(jnp.int32)}
+
+        res = ctx.neighbor_apply(pair_fn, {"exposed": ((), jnp.int32)})
+        exposed = res["exposed"] > 0
+        u = jax.random.uniform(rng, (pool.capacity,))
+        newly = pool.alive & (pool.agent_type == SUSCEPTIBLE) & exposed \
+            & (u < self.beta)
+        timer = pool.extra["infect_timer"]
+        timer = jnp.where(newly, self.recovery_time, timer)
+        is_inf = pool.agent_type == INFECTED
+        timer = jnp.where(is_inf, timer - 1, timer)
+        recovered = is_inf & (timer <= 0)
+        new_type = jnp.where(newly, INFECTED, pool.agent_type)
+        new_type = jnp.where(recovered, RECOVERED, new_type)
+        return BehaviorEffects(
+            set_channels={"agent_type": new_type, "extra.infect_timer": timer})
+
+
+class Chemotaxis(Behavior):
+    """Move up the gradient of the diffusion substance (cell clustering)."""
+
+    name = "chemotaxis"
+
+    def __init__(self, speed: float = 0.5):
+        self.speed = speed
+
+    def __call__(self, ctx, pool: AgentPool, rng: jax.Array) -> BehaviorEffects:
+        g = ctx.substance_gradient(pool.position)           # (C, 3)
+        norm = jnp.sqrt(jnp.sum(g * g, -1, keepdims=True) + 1e-12)
+        step = self.speed * ctx.dt * g / norm
+        new_pos = jnp.where(pool.alive[:, None], pool.position + step,
+                            pool.position)
+        new_pos = jnp.clip(new_pos, ctx.domain_lo, ctx.domain_hi)
+        return BehaviorEffects(set_channels={"position": new_pos})
+
+
+class Secretion(Behavior):
+    """Secrete ``rate`` into the substance grid at the agent's voxel."""
+
+    name = "secretion"
+
+    def __init__(self, rate: float = 1.0, applies_to: int | None = None):
+        self.rate = rate
+        self.applies_to = applies_to
+
+    def __call__(self, ctx, pool: AgentPool, rng: jax.Array) -> BehaviorEffects:
+        mask = pool.alive
+        if self.applies_to is not None:
+            mask &= pool.agent_type == self.applies_to
+        return BehaviorEffects(
+            secretion=jnp.where(mask, self.rate * ctx.dt, 0.0))
+
+
+class RandomDeath(Behavior):
+    """Remove agents with probability ``rate`` per iteration (oncology)."""
+
+    name = "random_death"
+
+    def __init__(self, rate: float = 0.001, applies_to: int | None = None):
+        self.rate = rate
+        self.applies_to = applies_to
+
+    def __call__(self, ctx, pool: AgentPool, rng: jax.Array) -> BehaviorEffects:
+        mask = pool.alive
+        if self.applies_to is not None:
+            mask &= pool.agent_type == self.applies_to
+        u = jax.random.uniform(rng, (pool.capacity,))
+        return BehaviorEffects(death_mask=mask & (u < self.rate))
+
+
+# Neuroscience: growth cones extend and leave a static trail (paper §5:
+# "neural development simulations might only have an active growth front,
+# while the remaining part of the neuron is unchanged").
+SOMA, NEURITE_SEGMENT, GROWTH_CONE = 10, 11, 12
+
+
+class NeuriteGrowth(Behavior):
+    """Growth cones elongate along a persistent direction with noise, deposit
+    NEURITE_SEGMENT agents behind them, and occasionally bifurcate."""
+
+    name = "neurite_growth"
+
+    def __init__(self, speed: float = 1.0, noise: float = 0.15,
+                 bifurcation_prob: float = 0.004, segment_every: float = 2.0):
+        self.speed = speed
+        self.noise = noise
+        self.bif_prob = bifurcation_prob
+        self.segment_every = segment_every
+
+    def extra_specs(self):
+        return {"direction": ((3,), jnp.float32, 0.0),
+                "path_len": ((), jnp.float32, 0.0)}
+
+    def __call__(self, ctx, pool: AgentPool, rng: jax.Array) -> BehaviorEffects:
+        k1, k2, k3 = jax.random.split(rng, 3)
+        cones = pool.alive & (pool.agent_type == GROWTH_CONE)
+        d = pool.extra["direction"]
+        d = d + self.noise * jax.random.normal(k1, d.shape, d.dtype)
+        d /= jnp.sqrt(jnp.sum(d * d, -1, keepdims=True) + 1e-12)
+        step = self.speed * ctx.dt
+        new_pos = jnp.where(cones[:, None], pool.position + d * step, pool.position)
+        new_pos = jnp.clip(new_pos, ctx.domain_lo, ctx.domain_hi)
+        path = jnp.where(cones, pool.extra["path_len"] + step, pool.extra["path_len"])
+
+        # deposit a (soon static) segment agent at the old position
+        deposit = cones & (path >= self.segment_every)
+        path = jnp.where(deposit, 0.0, path)
+        seg_type = jnp.full_like(pool.agent_type, NEURITE_SEGMENT)
+
+        # bifurcation: stage a second cone with a rotated direction
+        u = jax.random.uniform(k2, (pool.capacity,))
+        bif = cones & (u < self.bif_prob)
+        rot = d + 0.8 * jax.random.normal(k3, d.shape, d.dtype)
+        rot /= jnp.sqrt(jnp.sum(rot * rot, -1, keepdims=True) + 1e-12)
+        cone_type = jnp.full_like(pool.agent_type, GROWTH_CONE)
+
+        birth = {
+            "position": jnp.concatenate([pool.position, new_pos], 0),
+            "diameter": jnp.concatenate([pool.diameter, pool.diameter], 0),
+            "agent_type": jnp.concatenate([seg_type, cone_type], 0),
+            "extra.direction": jnp.concatenate([jnp.zeros_like(d), rot], 0),
+            "extra.path_len": jnp.zeros((2 * pool.capacity,), path.dtype),
+        }
+        valid = jnp.concatenate([deposit, bif], 0)
+        return BehaviorEffects(
+            set_channels={"position": new_pos, "extra.direction": d,
+                          "extra.path_len": path},
+            birth_channels=birth, birth_valid=valid)

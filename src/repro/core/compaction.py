@@ -1,0 +1,120 @@
+"""Parallel agent addition/removal — paper §3.2, as prefix-sum stream compaction.
+
+The paper parallelizes removal with swap-with-last bookkeeping (to_right /
+not_to_left auxiliary arrays + prefix sums) so that holes never exist in the
+ResourceManager. The TPU-native equivalent of the same idea is data-parallel
+stream compaction: one ``cumsum`` over the alive mask yields every surviving
+agent's destination slot, and a scatter moves all channels at once. Work is
+O(capacity) fully parallel (the paper's is O(removed) on a PRAM; under SPMD/XLA
+the masked full-width scan is the faster realization because it is a single
+vectorized pass with no data-dependent control flow).
+
+Additions mirror the paper's thread-local queues: behaviors stage newborn agents
+in a fixed-capacity *birth queue*; the commit reserves contiguous slots at the
+tail ``[n_live, n_live + n_new)`` via the same prefix sum.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .agents import AgentPool
+
+
+def compaction_permutation(alive: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Permutation placing live slots first (stable), dead after (stable).
+
+    Returns (perm, n_live): ``new[i] = old[perm[i]]``.
+    """
+    c = alive.shape[0]
+    alive_i = alive.astype(jnp.int32)
+    n_live = jnp.sum(alive_i)
+    # destination of each old slot
+    dst_live = jnp.cumsum(alive_i) - 1                      # valid where alive
+    dst_dead = n_live + jnp.cumsum(1 - alive_i) - 1         # valid where dead
+    dst = jnp.where(alive, dst_live, dst_dead)              # (C,) a permutation
+    # invert: perm[dst[i]] = i
+    perm = jnp.zeros((c,), jnp.int32).at[dst].set(jnp.arange(c, dtype=jnp.int32))
+    return perm, n_live
+
+
+def apply_permutation(pool: AgentPool, perm: jnp.ndarray) -> AgentPool:
+    """Gather-reorder every SoA channel by ``perm``."""
+    ch = pool.channels()
+    return pool.with_channels({k: jnp.take(v, perm, axis=0) for k, v in ch.items()})
+
+
+def compact(pool: AgentPool) -> AgentPool:
+    """Remove dead agents: live agents move (stably) to slots [0, n_live)."""
+    perm, _ = compaction_permutation(pool.alive)
+    return apply_permutation(pool, perm)
+
+
+def commit_births(pool: AgentPool, queue: Dict[str, jnp.ndarray],
+                  queue_valid: jnp.ndarray, iteration: jnp.ndarray) -> AgentPool:
+    """Append staged newborn agents at the tail of the live region.
+
+    queue: dict of (Q, ...) channel arrays (same channel names as the pool,
+           missing channels default to zeros / sensible flags).
+    queue_valid: (Q,) bool — which queue slots hold a real newborn.
+    Newborns whose destination exceeds capacity are dropped (counted by the
+    engine as overflow; capacity sizing is a config responsibility).
+    """
+    c = pool.capacity
+    n_live = pool.n_live
+    qv = queue_valid.astype(jnp.int32)
+    dst = n_live + jnp.cumsum(qv) - 1                      # (Q,) destination slots
+    ok = queue_valid & (dst < c)
+    dst = jnp.where(ok, dst, c)                            # parked writes go to c (dropped)
+
+    ch = pool.channels()
+    out = {}
+    for k, v in ch.items():
+        if k in queue:
+            src = queue[k]
+        elif k == "alive":
+            src = jnp.ones(queue_valid.shape, bool)
+        elif k == "static":
+            src = jnp.zeros(queue_valid.shape, bool)
+        elif k == "moved":
+            src = jnp.ones(queue_valid.shape, bool)        # newborns wake neighborhoods
+        elif k == "grew":
+            src = jnp.ones(queue_valid.shape, bool)
+        elif k == "born_iter":
+            src = jnp.full(queue_valid.shape, iteration, jnp.int32)
+        elif k == "force_nnz":
+            src = jnp.zeros(queue_valid.shape, jnp.int32)
+        else:
+            src = jnp.zeros(queue_valid.shape + v.shape[1:], v.dtype)
+        # scatter with drop semantics for parked index c
+        out[k] = v.at[dst].set(src.astype(v.dtype), mode="drop")
+    return pool.with_channels(out)
+
+
+def birth_overflow(pool: AgentPool, queue_valid: jnp.ndarray) -> jnp.ndarray:
+    """Number of staged newborns that will not fit in capacity."""
+    n_new = jnp.sum(queue_valid.astype(jnp.int32))
+    free = pool.capacity - pool.n_live
+    return jnp.maximum(n_new - free, 0)
+
+
+def active_index_list(active: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Compact the indices of active agents to the front (static-region support).
+
+    Returns (idx, n_active): ``idx[:n_active]`` are the active slots in order,
+    the tail is padded with the last active index (safe to compute, ignored).
+    Used to run the force computation over ⌈n_active/B⌉ blocks only (§5 / O6).
+    """
+    c = active.shape[0]
+    a = active.astype(jnp.int32)
+    n_active = jnp.sum(a)
+    dst = jnp.where(active, jnp.cumsum(a) - 1, c)          # parked for inactive
+    idx = jnp.zeros((c,), jnp.int32).at[dst].set(
+        jnp.arange(c, dtype=jnp.int32), mode="drop")
+    # pad the tail with a safe index (0 if none active)
+    pad_val = jnp.where(n_active > 0, idx[jnp.maximum(n_active - 1, 0)], 0)
+    idx = jnp.where(jnp.arange(c) < n_active, idx, pad_val)
+    return idx, n_active

@@ -1,0 +1,223 @@
+"""Distributed ABM engine — the paper's §8 'future work' (multi-node), realized.
+
+Design (DESIGN.md §7):
+  * **1-D slab domain decomposition** along x over mesh axis ``data``: each
+    device owns agents with x ∈ [b_i, b_{i+1}). Slab boundaries come from
+    population *quantiles* — the paper's §4.2 balancing (equal agents per NUMA
+    domain) lifted to devices. Within a slab, the Morton sort still provides
+    memory locality (§4.2) — the two mechanisms compose.
+  * **Ring halo exchange**: interaction radius r ≤ slab width ⇒ every cross-
+    shard interaction partner lives in the adjacent slab; one
+    ``collective_permute`` left + one right per step ships the boundary layer
+    (ghost agents, force *sources* only). O(surface) bytes, independent of the
+    number of shards — the property that scales to 1000+ nodes.
+  * **Ring migration**: agents that cross a slab boundary are shipped to the
+    neighbor with the same prefix-sum packing as §3.2 and appended via the
+    birth-commit path; leavers are compacted out. Fixed-capacity buffers with
+    overflow flags (never silent loss).
+
+Everything runs under one ``shard_map`` program: the whole distributed step is
+a single XLA executable per device, with exactly 4 collective-permutes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import compaction, grid as grid_mod, morton
+from .agents import AgentPool, make_pool
+from .engine import EngineConfig
+from .forces import displacement, make_force_pair_fn
+
+# ghost/migration channel layout: x, y, z, diameter, type, alive
+_GHOST_CH = 6
+
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    engine: EngineConfig
+    n_shards: int
+    local_capacity: int
+    halo_capacity: int = 1024
+    migrate_capacity: int = 256
+
+
+def quantile_boundaries(x: jnp.ndarray, alive: jnp.ndarray, n_shards: int,
+                        lo: float, hi: float) -> jnp.ndarray:
+    """Equal-population slab boundaries (paper §4.2 balancing)."""
+    big = jnp.where(alive, x, jnp.inf)
+    xs = jnp.sort(big)
+    n = jnp.sum(alive.astype(jnp.int32))
+    qs = (jnp.arange(1, n_shards) * n) // n_shards
+    inner = xs[jnp.clip(qs, 0, x.shape[0] - 1)]
+    return jnp.concatenate([jnp.asarray([lo]), inner, jnp.asarray([hi])])
+
+
+def partition_global(pool_channels: Dict[str, jnp.ndarray],
+                     boundaries: jnp.ndarray, dcfg: DistConfig
+                     ) -> Dict[str, jnp.ndarray]:
+    """Host-side: scatter agents into per-shard slots [shard, local_capacity].
+
+    Returns channels with leading dim n_shards*local_capacity, agents of shard
+    i in slice [i*C, i*C + n_i). (Used at init and at rebalance epochs.)"""
+    x = pool_channels["position"][:, 0]
+    alive = pool_channels["alive"]
+    shard = jnp.clip(jnp.searchsorted(boundaries[1:-1], x, side="right"),
+                     0, dcfg.n_shards - 1)
+    out = {}
+    c = dcfg.local_capacity
+    # rank within shard via stable sort by (shard, index)
+    order = jnp.argsort(jnp.where(alive, shard, dcfg.n_shards),
+                        stable=True)
+    sorted_shard = shard[order]
+    first = jnp.searchsorted(sorted_shard, jnp.arange(dcfg.n_shards))
+    rank_in_shard = jnp.arange(x.shape[0]) - first[jnp.clip(sorted_shard, 0,
+                                                            dcfg.n_shards - 1)]
+    dst = sorted_shard * c + rank_in_shard
+    ok = alive[order] & (rank_in_shard < c)
+    dst = jnp.where(ok, dst, dcfg.n_shards * c)
+    for k, v in pool_channels.items():
+        buf_shape = (dcfg.n_shards * c,) + v.shape[1:]
+        if k == "alive":
+            buf = jnp.zeros(buf_shape, v.dtype)
+        else:
+            buf = jnp.zeros(buf_shape, v.dtype)
+        out[k] = buf.at[dst].set(v[order], mode="drop")
+    # fix alive: only packed slots alive
+    out["alive"] = jnp.zeros((dcfg.n_shards * c,), bool).at[dst].set(
+        alive[order], mode="drop")
+    return out
+
+
+def _pack(mask: jnp.ndarray, channels: Dict[str, jnp.ndarray], cap: int
+          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pack masked agents into a fixed (cap, _GHOST_CH) buffer. Returns
+    (buffer, overflow_count)."""
+    idx, n = compaction.active_index_list(mask)
+    take = idx[:cap]
+    lane_ok = jnp.arange(cap) < jnp.minimum(n, cap)
+    buf = jnp.stack([
+        channels["position"][take, 0], channels["position"][take, 1],
+        channels["position"][take, 2], channels["diameter"][take],
+        channels["agent_type"][take].astype(jnp.float32),
+        lane_ok.astype(jnp.float32),
+    ], axis=-1)
+    buf = jnp.where(lane_ok[:, None], buf, 0.0)
+    return buf, jnp.maximum(n - cap, 0)
+
+
+def make_distributed_step(dcfg: DistConfig, mesh, axis: str = "data"):
+    """Build the jitted shard_map step: (channels, boundaries, iteration) →
+    (channels, stats). Channels are the global SoA arrays sharded on dim 0."""
+    cfg = dcfg.engine
+    spec = cfg.grid_spec
+    n_shards = dcfg.n_shards
+    c_local = dcfg.local_capacity
+    hcap, mcap = dcfg.halo_capacity, dcfg.migrate_capacity
+    origin = jnp.asarray(cfg.domain_lo, jnp.float32)
+    dlo = jnp.asarray(cfg.domain_lo, jnp.float32)
+    dhi = jnp.asarray(cfg.domain_hi, jnp.float32)
+    box = jnp.asarray(cfg.interaction_radius, jnp.float32)
+    pair_fn = make_force_pair_fn(cfg.force,
+                                 jnp.asarray(cfg.adhesion, jnp.float32)
+                                 if cfg.adhesion is not None else None)
+    fwd = [(i, i + 1) for i in range(n_shards - 1)]
+    bwd = [(i + 1, i) for i in range(n_shards - 1)]
+
+    def step_shard(channels: Dict[str, jnp.ndarray], boundaries: jnp.ndarray):
+        i = jax.lax.axis_index(axis)
+        my_lo = boundaries[i]
+        my_hi = boundaries[i + 1]
+        alive = channels["alive"]
+        x = channels["position"][:, 0]
+        r = cfg.interaction_radius
+
+        # ---- halo exchange: boundary layers to ring neighbors ----
+        left_b, ovf_l = _pack(alive & (x < my_lo + r), channels, hcap)
+        right_b, ovf_r = _pack(alive & (x > my_hi - r), channels, hcap)
+        ghosts_from_left = jax.lax.ppermute(right_b, axis, fwd)   # i-1 → i
+        ghosts_from_right = jax.lax.ppermute(left_b, axis, bwd)   # i+1 → i
+        ghosts = jnp.concatenate([ghosts_from_left, ghosts_from_right], 0)
+
+        # ---- combined view: local agents + ghost force-sources ----
+        comb = {
+            "position": jnp.concatenate(
+                [channels["position"], ghosts[:, 0:3]], 0),
+            "diameter": jnp.concatenate([channels["diameter"], ghosts[:, 3]], 0),
+            "agent_type": jnp.concatenate(
+                [channels["agent_type"], ghosts[:, 4].astype(jnp.int32)], 0),
+            "alive": jnp.concatenate([alive, ghosts[:, 5] > 0.5], 0),
+        }
+        pool_like = make_pool(comb["position"].shape[0])
+        pool_like = dataclasses.replace(
+            pool_like, position=comb["position"], diameter=comb["diameter"],
+            agent_type=comb["agent_type"], alive=comb["alive"])
+        genv = grid_mod.build(spec, pool_like, origin, box)
+
+        n_local_live = jnp.sum(alive.astype(jnp.int32))
+        idx, _ = compaction.active_index_list(
+            jnp.concatenate([alive, jnp.zeros((2 * hcap,), bool)], 0))
+        res = grid_mod.neighbor_apply(
+            spec, genv, comb, idx, n_local_live, pair_fn,
+            {"force": ((3,), jnp.float32), "force_nnz": ((), jnp.int32)},
+            pvary_axes=(axis,))
+        dx = displacement(res["force"][:c_local], cfg.force, cfg.dt)
+        new_pos = jnp.clip(channels["position"] + dx, dlo, dhi)
+        new_pos = jnp.where(alive[:, None], new_pos, channels["position"])
+        channels = {**channels, "position": new_pos}
+
+        # ---- migration: leavers to ring neighbors ----
+        x2 = channels["position"][:, 0]
+        go_left = alive & (x2 < my_lo) & (i > 0)
+        go_right = alive & (x2 >= my_hi) & (i < n_shards - 1)
+        mig_l, ovf_ml = _pack(go_left, channels, mcap)
+        mig_r, ovf_mr = _pack(go_right, channels, mcap)
+        arrive_from_left = jax.lax.ppermute(mig_r, axis, fwd)
+        arrive_from_right = jax.lax.ppermute(mig_l, axis, bwd)
+        arrivals = jnp.concatenate([arrive_from_left, arrive_from_right], 0)
+
+        # remove leavers, compact, append arrivals (paper §3.2 machinery)
+        stay = alive & ~go_left & ~go_right
+        perm, n_stay = compaction.compaction_permutation(stay)
+        packed = {k: jnp.take(v, perm, axis=0) for k, v in channels.items()}
+        packed["alive"] = jnp.take(stay, perm)
+
+        arr_valid = arrivals[:, 5] > 0.5
+        dst = n_stay + jnp.cumsum(arr_valid.astype(jnp.int32)) - 1
+        ok = arr_valid & (dst < c_local)
+        dst = jnp.where(ok, dst, c_local)
+        ovf_in = jnp.sum(arr_valid.astype(jnp.int32)) - jnp.sum(
+            ok.astype(jnp.int32))
+        packed["position"] = packed["position"].at[dst].set(
+            arrivals[:, 0:3], mode="drop")
+        packed["diameter"] = packed["diameter"].at[dst].set(
+            arrivals[:, 3], mode="drop")
+        packed["agent_type"] = packed["agent_type"].at[dst].set(
+            arrivals[:, 4].astype(jnp.int32), mode="drop")
+        packed["alive"] = packed["alive"].at[dst].set(ok, mode="drop")
+
+        stats = {
+            "n_live": jnp.sum(packed["alive"].astype(jnp.int32)),
+            "halo_overflow": ovf_l + ovf_r,
+            "migrate_overflow": ovf_ml + ovf_mr + ovf_in,
+            "box_overflow": (genv.max_count > spec.max_per_box).astype(jnp.int32),
+        }
+        stats = {k: v.reshape(1) for k, v in stats.items()}   # (1,) per shard
+        return packed, stats
+
+    sharded = jax.shard_map(
+        step_shard, mesh=mesh,
+        in_specs=({k: P(axis) for k in ("position", "diameter", "agent_type",
+                                        "alive")}, P()),
+        out_specs=({k: P(axis) for k in ("position", "diameter", "agent_type",
+                                         "alive")},
+                   {k: P(axis) for k in ("n_live", "halo_overflow",
+                                         "migrate_overflow", "box_overflow")}),
+    )
+    return jax.jit(sharded)

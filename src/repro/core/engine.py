@@ -1,0 +1,364 @@
+"""Simulation engine — paper §2 Algorithm 1, one fused XLA program per iteration.
+
+Iteration structure (paper L2–L19):
+  pre-standalone ops:   periodic Morton sort (§4.2), grid rebuild (§3.1),
+                        diffusion step, static-flag update (§5, from last
+                        iteration's bookkeeping)
+  agent ops:            mechanical forces over the *active* set (§5 skipping),
+                        displacement integration, behaviors
+  post-standalone ops:  death compaction + birth commit (§3.2), statistics
+
+The paper's two thread barriers (L6/L15) vanish: under jit the whole iteration
+is a single XLA program — the strongest possible form of 'maximize the parallel
+part' (Amdahl, paper Challenge 1).
+
+Environment selection mirrors the paper's environment interface: the optimized
+uniform grid (default), the scatter-table 'standard' grid, or brute force
+(Fig 11 comparison).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import compaction, diffusion as diff_mod, forces as force_mod, grid as grid_mod
+from . import morton, statics as statics_mod
+from .agents import AgentPool, make_pool
+from .behaviors import Behavior, BehaviorEffects
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static engine configuration (part of the jit closure)."""
+    capacity: int
+    domain_lo: Tuple[float, float, float]
+    domain_hi: Tuple[float, float, float]
+    interaction_radius: float
+    dt: float = 1.0
+    use_forces: bool = True
+    detect_static: bool = False            # paper detect_static_agents
+    sort_frequency: int = 0                # paper Fig 12 (0 = never sort)
+    environment: str = "uniform_grid"      # uniform_grid | scatter_grid | hash_grid | brute_force
+    force_impl: str = "xla"                # xla | pallas (K1 windowed kernel;
+                                           # interpret mode on CPU, native on TPU)
+    max_per_box: int = 16
+    query_chunk: int = 2048
+    adhesion: Optional[Tuple[Tuple[float, ...], ...]] = None  # type adhesion matrix
+    force: force_mod.ForceParams = dataclasses.field(default_factory=force_mod.ForceParams)
+    diffusion: Optional[diff_mod.DiffusionSpec] = None
+    diffusion_substeps: int = 1
+
+    @property
+    def grid_spec(self) -> grid_mod.GridSpec:
+        dims = tuple(max(1, int(math.ceil((hi - lo) / self.interaction_radius)))
+                     for lo, hi in zip(self.domain_lo, self.domain_hi))
+        return grid_mod.GridSpec(dims=dims, max_per_box=self.max_per_box,
+                                 query_chunk=self.query_chunk)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EngineState:
+    pool: AgentPool
+    conc: jnp.ndarray                    # diffusion grid ((1,1,1) dummy if unused)
+    rng: jax.Array
+    iteration: jnp.ndarray               # () int32
+    stats: Dict[str, jnp.ndarray]        # per-iteration scalars
+
+
+@dataclasses.dataclass
+class StepContext:
+    """What behaviors may read/use during one iteration."""
+    config: EngineConfig
+    dt: float
+    domain_lo: jnp.ndarray
+    domain_hi: jnp.ndarray
+    iteration: jnp.ndarray
+    neighbor_apply: Callable                 # (pair_fn, out_specs) -> dict
+    substance_gradient: Callable             # positions -> (N, 3)
+    substance_value: Callable                # positions -> (N,)
+
+
+class Simulation:
+    """Builds and runs the jitted iteration for a config + behavior list."""
+
+    def __init__(self, config: EngineConfig, behaviors: Sequence[Behavior] = ()):
+        self.config = config
+        self.behaviors = list(behaviors)
+        self.spec = config.grid_spec
+        self._step_fn = jax.jit(self._build_step())
+
+    # -- state construction -------------------------------------------------
+    def init_state(self, position, diameter=None, agent_type=None,
+                   extra_init: Dict[str, jnp.ndarray] | None = None,
+                   seed: int = 0) -> EngineState:
+        specs: Dict[str, tuple] = {}
+        for b in self.behaviors:
+            specs.update(b.extra_specs())
+        pool = make_pool(self.config.capacity, position=jnp.asarray(position),
+                         diameter=None if diameter is None else jnp.asarray(diameter),
+                         agent_type=None if agent_type is None else jnp.asarray(agent_type),
+                         extra_specs=specs)
+        if extra_init:
+            n = jnp.asarray(position).shape[0]
+            for k, v in extra_init.items():
+                pool.extra[k] = pool.extra[k].at[:n].set(jnp.asarray(v))
+        dspec = self.config.diffusion
+        conc = jnp.zeros(dspec.dims, jnp.float32) if dspec else jnp.zeros((1, 1, 1))
+        stats = {k: jnp.zeros((), jnp.int32) for k in
+                 ("n_live", "n_active", "births", "deaths", "box_overflow",
+                  "birth_overflow")}
+        return EngineState(pool=pool, conc=conc, rng=jax.random.PRNGKey(seed),
+                           iteration=jnp.zeros((), jnp.int32), stats=stats)
+
+    # -- environment dispatch ------------------------------------------------
+    def _make_neighbor_apply(self, pool: AgentPool, grid_env, channels):
+        cfg, spec = self.config, self.spec
+
+        def via_uniform(pair_fn, out_specs, query_idx=None, n_query=None):
+            if query_idx is None:
+                query_idx = jnp.arange(pool.capacity, dtype=jnp.int32)
+                n_query = pool.n_live
+            return grid_mod.neighbor_apply(spec, grid_env, channels, query_idx,
+                                           n_query, pair_fn, out_specs)
+
+        def via_candidates(cand_fn):
+            def apply(pair_fn, out_specs, query_idx=None, n_query=None):
+                # chunked loop shared with the uniform path, different candidates
+                if query_idx is None:
+                    query_idx = jnp.arange(pool.capacity, dtype=jnp.int32)
+                    n_query = pool.n_live
+                c = pool.capacity
+                b = min(cfg.query_chunk, c)
+                n_chunks_max = (c + b - 1) // b
+                qi = jnp.pad(query_idx, (0, n_chunks_max * b - c))
+                outs = {name: jnp.zeros((c, *sfx), dt)
+                        for name, (sfx, dt) in out_specs.items()}
+
+                def body(i, outs):
+                    sl = i * b
+                    q_slot = jax.lax.dynamic_slice(qi, (sl,), (b,))
+                    lane_ok = (sl + jnp.arange(b)) < n_query
+                    q = {k: v[q_slot] for k, v in channels.items()}
+                    ids, valid = cand_fn(q["position"])
+                    valid &= lane_ok[:, None]
+                    valid &= ids != q_slot[:, None]
+                    nbr = {k: v[ids] for k, v in channels.items()}
+                    res = pair_fn(q, nbr, valid, q_slot)
+                    new = dict(outs)
+                    for name, val in res.items():
+                        val = jnp.where(lane_ok.reshape((b,) + (1,) * (val.ndim - 1)),
+                                        val, 0)
+                        new[name] = outs[name].at[q_slot].add(
+                            val.astype(outs[name].dtype), mode="drop")
+                    return new
+
+                n_chunks = jnp.minimum((n_query + b - 1) // b, n_chunks_max)
+                return jax.lax.fori_loop(0, n_chunks, body, outs)
+            return apply
+
+        if cfg.environment == "uniform_grid":
+            return via_uniform
+        if cfg.environment == "scatter_grid":
+            return via_candidates(
+                lambda qp: grid_mod.scatter_grid_candidates(spec, grid_env, qp))
+        if cfg.environment == "hash_grid":
+            return via_candidates(
+                lambda qp: grid_mod.hash_grid_candidates(spec, grid_env, qp))
+        if cfg.environment == "brute_force":
+            ids_all = jnp.arange(pool.capacity, dtype=jnp.int32)
+
+            def cand(qp):
+                q = qp.shape[0]
+                ids = jnp.broadcast_to(ids_all[None], (q, pool.capacity))
+                valid = jnp.broadcast_to(pool.alive[None], (q, pool.capacity))
+                return ids, valid
+            return via_candidates(cand)
+        raise ValueError(f"unknown environment {cfg.environment}")
+
+    def _build_env(self, pool, origin, box_size):
+        cfg, spec = self.config, self.spec
+        if cfg.environment in ("uniform_grid", "brute_force"):
+            # brute force still builds the uniform grid for statics bookkeeping
+            return grid_mod.build(spec, pool, origin, box_size)
+        if cfg.environment == "scatter_grid":
+            return grid_mod.build_scatter_grid(spec, pool, origin, box_size)
+        if cfg.environment == "hash_grid":
+            return grid_mod.build_hash_grid(spec, pool, origin, box_size)
+        raise ValueError(cfg.environment)
+
+    # -- the iteration -------------------------------------------------------
+    def _build_step(self):
+        cfg = self.config
+        spec = self.spec
+        behaviors = self.behaviors
+        origin = jnp.asarray(cfg.domain_lo, jnp.float32)
+        dlo = jnp.asarray(cfg.domain_lo, jnp.float32)
+        dhi = jnp.asarray(cfg.domain_hi, jnp.float32)
+        box_size = jnp.asarray(cfg.interaction_radius, jnp.float32)
+        adhesion = (jnp.asarray(cfg.adhesion, jnp.float32)
+                    if cfg.adhesion is not None else None)
+        force_pair = force_mod.make_force_pair_fn(cfg.force, adhesion)
+
+        def sort_pool(pool: AgentPool) -> AgentPool:
+            keys = morton.morton_keys(pool.position, origin, box_size, spec.dims)
+            keys = jnp.where(pool.alive, keys, grid_mod._DEAD_KEY)
+            order = jnp.argsort(keys).astype(jnp.int32)
+            return compaction.apply_permutation(pool, order)
+
+        def step(state: EngineState) -> EngineState:
+            pool = state.pool
+            it = state.iteration
+            rng, k_force, *bkeys = jax.random.split(state.rng, 2 + len(behaviors))
+            stats = dict(state.stats)
+
+            # ---------------- pre standalone ops ----------------
+            if cfg.sort_frequency > 0:
+                pool = jax.lax.cond(it % cfg.sort_frequency == 0,
+                                    sort_pool, lambda p: p, pool)
+            grid_env = self._build_env(pool, origin, box_size)
+            if cfg.environment == "uniform_grid":
+                stats["box_overflow"] = (grid_env.max_count > spec.max_per_box
+                                         ).astype(jnp.int32)
+
+            conc = state.conc
+            if cfg.diffusion is not None:
+                sub_dt = cfg.dt / cfg.diffusion_substeps
+                for _ in range(cfg.diffusion_substeps):
+                    conc = diff_mod.step(cfg.diffusion, conc, sub_dt)
+
+            channels = {k: v for k, v in pool.channels().items()
+                        if not k.startswith("extra.")}
+            nbr_apply = self._make_neighbor_apply(pool, grid_env, channels)
+
+            # static flags from last iteration's bookkeeping (paper §5)
+            if cfg.detect_static and cfg.environment == "uniform_grid":
+                static = statics_mod.update_static_flags(
+                    spec, grid_env, pool, box_size, it)
+                pool = dataclasses.replace(pool, static=static)
+
+            pos0 = pool.position
+            dia0 = pool.diameter
+
+            # ---------------- agent ops: forces ----------------
+            if cfg.use_forces:
+                if cfg.detect_static:
+                    active = pool.alive & ~pool.static
+                else:
+                    active = pool.alive
+                idx, n_active = compaction.active_index_list(active)
+                stats["n_active"] = n_active
+                if cfg.force_impl == "pallas":
+                    # K1: Morton-sorted windowed tile kernel; static rows are
+                    # skipped at block granularity (kernels/collision_force.py)
+                    from ..kernels import ops as kops
+                    f, nnz, _ovf = kops.collision_force(
+                        pool.position, pool.diameter, pool.agent_type,
+                        pool.alive, active, origin, box_size,
+                        dims=spec.dims, k_rep=cfg.force.k_rep,
+                        adhesion=cfg.adhesion,
+                        adhesion_band=cfg.force.adhesion_band)
+                    res = {"force": f, "force_nnz": nnz}
+                else:
+                    res = nbr_apply(force_pair,
+                                    {"force": ((3,), jnp.float32),
+                                     "force_nnz": ((), jnp.int32)},
+                                    query_idx=idx, n_query=n_active)
+                dx = force_mod.displacement(res["force"], cfg.force, cfg.dt)
+                new_pos = jnp.clip(pool.position + dx, dlo, dhi)
+                new_pos = jnp.where(active[:, None], new_pos, pool.position)
+                force_nnz = jnp.where(active, res["force_nnz"], pool.force_nnz)
+                pool = dataclasses.replace(pool, position=new_pos,
+                                           force_nnz=force_nnz)
+            else:
+                stats["n_active"] = pool.n_live
+
+            # ---------------- agent ops: behaviors ----------------
+            ctx = StepContext(
+                config=cfg, dt=cfg.dt, domain_lo=dlo, domain_hi=dhi,
+                iteration=it, neighbor_apply=nbr_apply,
+                substance_gradient=(
+                    (lambda p: diff_mod.gradient(cfg.diffusion, conc, p, origin))
+                    if cfg.diffusion else (lambda p: jnp.zeros_like(p))),
+                substance_value=(
+                    (lambda p: diff_mod.sample(cfg.diffusion, conc, p, origin))
+                    if cfg.diffusion else (lambda p: jnp.zeros(p.shape[:-1]))),
+            )
+            birth_queues: List[Tuple[Dict[str, jnp.ndarray], jnp.ndarray]] = []
+            death_mask = jnp.zeros((pool.capacity,), bool)
+            for b, bk in zip(behaviors, bkeys):
+                eff = b(ctx, pool, bk)
+                if eff.set_channels:
+                    ch = pool.channels()
+                    for name, val in eff.set_channels.items():
+                        ch[name] = val
+                    pool = pool.with_channels(ch)
+                if eff.birth_channels is not None:
+                    birth_queues.append((eff.birth_channels, eff.birth_valid))
+                if eff.death_mask is not None:
+                    death_mask |= eff.death_mask
+                if eff.secretion is not None and cfg.diffusion is not None:
+                    conc = diff_mod.add_sources(cfg.diffusion, conc,
+                                                pool.position, eff.secretion,
+                                                origin)
+
+            # bookkeeping for the next static detection
+            move_d = pool.position - pos0
+            moved = jnp.sum(move_d * move_d, -1) > cfg.force.move_eps ** 2
+            grew = pool.diameter > dia0 + 1e-12
+            pool = dataclasses.replace(pool, moved=moved & pool.alive,
+                                       grew=grew & pool.alive)
+
+            # ---------------- post standalone ops: commit ----------------
+            deaths = jnp.sum((death_mask & pool.alive).astype(jnp.int32))
+            stats["deaths"] = deaths
+            pool = dataclasses.replace(pool, alive=pool.alive & ~death_mask)
+            pool = jax.lax.cond(deaths > 0, compaction.compact,
+                                lambda p: p, pool)
+
+            births = jnp.zeros((), jnp.int32)
+            overflow = jnp.zeros((), jnp.int32)
+            for q, valid in birth_queues:
+                overflow += compaction.birth_overflow(pool, valid)
+                births += jnp.sum(valid.astype(jnp.int32))
+                pool = compaction.commit_births(pool, q, valid, it)
+            stats["births"] = births
+            stats["birth_overflow"] = overflow
+            stats["n_live"] = pool.n_live
+
+            return EngineState(pool=pool, conc=conc, rng=rng,
+                               iteration=it + 1, stats=stats)
+
+        return step
+
+    # -- public API ----------------------------------------------------------
+    def step(self, state: EngineState) -> EngineState:
+        return self._step_fn(state)
+
+    def run(self, state: EngineState, n_iterations: int,
+            callback: Callable[[int, EngineState], None] | None = None,
+            check_overflow: bool = False) -> EngineState:
+        """Run ``n_iterations``. With ``check_overflow`` the host checks the
+        box/birth overflow flags each iteration and raises — the engine never
+        silently drops interactions (DESIGN.md §4.2 fallback contract); callers
+        respond by raising ``max_per_box`` / ``capacity`` (a recompile, mirroring
+        BioDynaMo's dynamic grid growth)."""
+        for i in range(n_iterations):
+            state = self._step_fn(state)
+            if check_overflow:
+                if int(state.stats["box_overflow"]) :
+                    raise RuntimeError(
+                        f"iteration {i}: grid box overflow (> max_per_box="
+                        f"{self.spec.max_per_box}); raise EngineConfig.max_per_box")
+                if int(state.stats["birth_overflow"]):
+                    raise RuntimeError(
+                        f"iteration {i}: birth overflow; raise EngineConfig.capacity")
+            if callback is not None:
+                callback(i, state)
+        return state

@@ -1,0 +1,328 @@
+"""Uniform-grid neighbor search — paper §3.1, adapted sort-based for TPU.
+
+BioDynaMo's grid stores each box's agents in an array-based linked list and
+avoids zeroing boxes with a timestamp trick. Pointer chasing and per-box
+timestamps are CPU idioms; the TPU-native formulation is:
+
+  build:  box key per agent (Morton code of its cell) → parallel sort by key →
+          per-box (start, count) via vectorized ``searchsorted`` over the dense
+          Morton-indexed table. O(#agents log #agents) fully parallel work and
+          O(#boxes) *vector* memset equivalents — no serial O(#boxes) pass, which
+          is what the paper's timestamp trick was avoiding (DESIGN.md §2).
+  query:  the 27 surrounding boxes (3×3×3, paper §3.1) are contiguous runs in
+          sorted order; gather up to K candidates per box and mask by radius.
+
+The sort is shared with the memory-layout optimization (§4.2): when the pool was
+just Morton-sorted, ``order`` is near-identity and gathers stream linearly.
+
+Alternative environments (paper Fig 11 comparison, DESIGN.md §10.5):
+  * BruteForceEnvironment — exact O(N²) masked sweep (small N oracle).
+  * ScatterGridEnvironment — 'standard' grid materializing a dense (boxes × K)
+    table by scatter; models the cost of touching O(#boxes) memory that the
+    paper's timestamp trick addresses.
+  * HashGridEnvironment — fixed-bucket spatial hash (collisions filtered by the
+    radius mask); models a memory-capped alternative.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import morton
+from .agents import AgentPool
+
+# 27 neighbor offsets of the 3x3x3 cube (static python constant).
+_OFFSETS = np.array([(dx, dy, dz)
+                     for dx in (-1, 0, 1)
+                     for dy in (-1, 0, 1)
+                     for dz in (-1, 0, 1)], dtype=np.int32)   # (27, 3)
+
+
+@dataclasses.dataclass(frozen=True)
+class GridSpec:
+    """Static grid configuration (hashable; part of the jit cache key)."""
+    dims: Tuple[int, int, int]          # boxes per axis
+    max_per_box: int = 16               # K: query gather capacity per box
+    query_chunk: int = 2048             # agents per neighbor-apply chunk
+
+    @property
+    def table_size(self) -> int:
+        return morton.code_space_size(self.dims)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GridState:
+    """Per-iteration neighbor index (rebuilt every step, paper Algorithm 1 L3-5)."""
+    origin: jnp.ndarray        # (3,) float — grid origin (traced: domain may move)
+    box_size: jnp.ndarray      # ()   float — box edge = interaction radius
+    keys: jnp.ndarray          # (C,) uint32 — Morton box code per slot (dead → MAX)
+    order: jnp.ndarray         # (C,) int32 — slot ids sorted by key (dead at end)
+    rank: jnp.ndarray          # (C,) int32 — inverse of order
+    starts: jnp.ndarray        # (M,) int32 — first sorted position of each box
+    counts: jnp.ndarray        # (M,) int32 — agents in each box
+    max_count: jnp.ndarray     # ()   int32 — max agents in any box (overflow check)
+
+
+_DEAD_KEY = jnp.uint32(0xFFFFFFFF)
+
+
+def build(spec: GridSpec, pool: AgentPool, origin: jnp.ndarray,
+          box_size: jnp.ndarray) -> GridState:
+    """Build the grid index. O(#agents) parallel work + one parallel sort."""
+    keys = morton.morton_keys(pool.position, origin, box_size, spec.dims)
+    keys = jnp.where(pool.alive, keys, _DEAD_KEY)
+    order = jnp.argsort(keys).astype(jnp.int32)              # stable radix-ish sort
+    sorted_keys = keys[order]
+    rank = jnp.zeros_like(order).at[order].set(
+        jnp.arange(order.shape[0], dtype=jnp.int32))
+    box_ids = jnp.arange(spec.table_size, dtype=jnp.uint32)
+    starts = jnp.searchsorted(sorted_keys, box_ids, side="left").astype(jnp.int32)
+    ends = jnp.searchsorted(sorted_keys, box_ids, side="right").astype(jnp.int32)
+    counts = ends - starts
+    return GridState(origin=jnp.asarray(origin), box_size=jnp.asarray(box_size),
+                     keys=keys, order=order, rank=rank, starts=starts,
+                     counts=counts, max_count=jnp.max(counts))
+
+
+def neighbor_candidates(spec: GridSpec, grid: GridState, query_pos: jnp.ndarray
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Candidate neighbor slot ids for each query position.
+
+    query_pos: (Q, 3). Returns (ids, valid): (Q, 27*K) int32 slot ids and bool
+    mask. Candidates are *box-level*; callers apply the radius test.
+    """
+    k = spec.max_per_box
+    cell = morton.cell_of(query_pos, grid.origin, grid.box_size, spec.dims)  # (Q,3)
+    ncell = cell[:, None, :] + jnp.asarray(_OFFSETS)[None, :, :]             # (Q,27,3)
+    dims = jnp.asarray(spec.dims, jnp.int32)
+    inside = jnp.all((ncell >= 0) & (ncell < dims), axis=-1)                 # (Q,27)
+    ncell_c = jnp.clip(ncell, 0, dims - 1)
+    codes = morton.encode3(ncell_c[..., 0], ncell_c[..., 1], ncell_c[..., 2])
+    s = grid.starts[codes]                                                   # (Q,27)
+    n = jnp.where(inside, grid.counts[codes], 0)
+    lane = jnp.arange(k, dtype=jnp.int32)                                    # (K,)
+    sorted_pos = s[..., None] + lane                                         # (Q,27,K)
+    valid = lane < jnp.minimum(n, k)[..., None]                              # (Q,27,K)
+    sorted_pos = jnp.where(valid, sorted_pos, 0)
+    ids = grid.order[sorted_pos]                                             # (Q,27,K)
+    q = query_pos.shape[0]
+    return ids.reshape(q, 27 * k), valid.reshape(q, 27 * k)
+
+
+def neighbor_apply(spec: GridSpec,
+                   grid: GridState,
+                   channels: Dict[str, jnp.ndarray],
+                   query_idx: jnp.ndarray,
+                   n_query: jnp.ndarray,
+                   pair_fn: Callable[[Dict[str, jnp.ndarray],
+                                      Dict[str, jnp.ndarray],
+                                      jnp.ndarray, jnp.ndarray], Dict[str, jnp.ndarray]],
+                   out_specs: Dict[str, Tuple[Tuple[int, ...], jnp.dtype]],
+                   pvary_axes: Tuple[str, ...] = (),
+                   ) -> Dict[str, jnp.ndarray]:
+    """Apply ``pair_fn`` over each query agent's candidate neighborhood, chunked.
+
+    The chunk loop has a *dynamic* trip count ⌈n_query / chunk⌉ — with
+    static-region detection on, compute really does shrink with the active set
+    (paper §5 / O6; DESIGN.md §2).
+
+    channels: full per-slot SoA dict (what pair_fn may read).
+    query_idx: (C,) int32 — compacted active slots (tail padded, see
+      compaction.active_index_list); n_query: traced count.
+    pair_fn(q, nbr, valid, q_slot) -> dict of per-query reductions; q entries are
+      (B, ...) chunk slices, nbr entries are (B, 27K, ...) gathers, valid is
+      (B, 27K) bool, q_slot is (B,) the query slot ids.
+    out_specs: name → (shape_suffix, dtype) of per-agent outputs; results are
+      scattered back to slot positions, zeros elsewhere.
+    """
+    c = channels["position"].shape[0]
+    b = min(spec.query_chunk, c)
+    n_chunks_max = (c + b - 1) // b
+    # pad so dynamic_slice never clamps (clamping would desync q_slot vs lane_ok)
+    qi = jnp.pad(query_idx, (0, n_chunks_max * b - c))
+    outs = {name: jnp.zeros((c, *sfx), dt) for name, (sfx, dt) in out_specs.items()}
+    if pvary_axes:   # under shard_map: mark the carry varying on those axes
+        outs = {k: jax.lax.pcast(v, pvary_axes, to="varying")
+                for k, v in outs.items()}
+
+    def body(i, outs):
+        sl = i * b
+        q_slot = jax.lax.dynamic_slice(qi, (sl,), (b,))                     # (B,)
+        lane_ok = (sl + jnp.arange(b)) < n_query                            # (B,)
+        q = {k: v[q_slot] for k, v in channels.items()}
+        ids, valid = neighbor_candidates(spec, grid, q["position"])
+        valid &= lane_ok[:, None]
+        valid &= ids != q_slot[:, None]                                     # exclude self
+        nbr = {k: v[ids] for k, v in channels.items()}
+        res = pair_fn(q, nbr, valid, q_slot)
+        new_outs = {}
+        for name, val in res.items():
+            val = jnp.where(
+                lane_ok.reshape((b,) + (1,) * (val.ndim - 1)), val, 0)
+            new_outs[name] = outs[name].at[q_slot].add(val.astype(outs[name].dtype),
+                                                       mode="drop")
+        for name in outs:
+            if name not in res:
+                new_outs[name] = outs[name]
+        return new_outs
+
+    n_chunks = jnp.minimum((n_query + b - 1) // b, n_chunks_max)
+    return jax.lax.fori_loop(0, n_chunks, body, outs)
+
+
+# ---------------------------------------------------------------------------
+# Alternative environments (Fig 11 comparison)
+# ---------------------------------------------------------------------------
+
+def brute_force_apply(channels: Dict[str, jnp.ndarray],
+                      alive: jnp.ndarray,
+                      radius: jnp.ndarray,
+                      pair_fn,
+                      out_specs,
+                      chunk: int = 512) -> Dict[str, jnp.ndarray]:
+    """Exact O(N²) neighbor apply (oracle + Fig-11 baseline).
+
+    pair_fn has the same signature as in neighbor_apply; candidates are *all*
+    agents (validity = alive & within radius is left to pair_fn via ``valid``
+    carrying alive & not-self; radius masking is pair_fn's own distance test,
+    identical to the grid path).
+    """
+    c = channels["position"].shape[0]
+    chunk = min(chunk, c)
+    n_chunks = (c + chunk - 1) // chunk
+    outs = {name: jnp.zeros((c, *sfx), dt) for name, (sfx, dt) in out_specs.items()}
+
+    def body(i, outs):
+        sl = i * chunk
+        q_slot = sl + jnp.arange(chunk, dtype=jnp.int32)
+        q_slot = jnp.minimum(q_slot, c - 1)
+        lane_ok = (sl + jnp.arange(chunk)) < c
+        q = {k: v[q_slot] for k, v in channels.items()}
+        ids = jnp.arange(c, dtype=jnp.int32)
+        valid = alive[None, :] & lane_ok[:, None]
+        valid &= ids[None, :] != q_slot[:, None]
+        nbr = {k: jnp.broadcast_to(v[None], (chunk, *v.shape)) for k, v in channels.items()}
+        res = pair_fn(q, nbr, valid, q_slot)
+        new_outs = dict(outs)
+        for name, val in res.items():
+            val = jnp.where(lane_ok.reshape((chunk,) + (1,) * (val.ndim - 1)), val, 0)
+            new_outs[name] = outs[name].at[q_slot].add(val.astype(outs[name].dtype),
+                                                       mode="drop")
+        return new_outs
+
+    return jax.lax.fori_loop(0, n_chunks, body, outs)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ScatterGridState:
+    """'Standard implementation' grid: dense (boxes × K) member table via scatter.
+
+    Models BioDynaMo's *unoptimized* path: the table is re-zeroed and re-scattered
+    every iteration, touching O(#boxes · K) memory — the cost the paper's
+    timestamp trick (and our sort-based build) avoids.
+    """
+    origin: jnp.ndarray
+    box_size: jnp.ndarray
+    table: jnp.ndarray         # (M, K) int32 slot ids, -1 = empty
+    counts: jnp.ndarray        # (M,)
+
+
+def build_scatter_grid(spec: GridSpec, pool: AgentPool, origin, box_size
+                       ) -> ScatterGridState:
+    m, k = spec.table_size, spec.max_per_box
+    keys = morton.morton_keys(pool.position, origin, box_size, spec.dims)
+    keys = jnp.where(pool.alive, keys, m)  # park dead at row m (dropped)
+    # slot-within-box via sort (the CPU version uses sequential insertion;
+    # the data-parallel equivalent needs a sort or atomics — we sort).
+    order = jnp.argsort(keys)
+    sorted_keys = keys[order]
+    first = jnp.searchsorted(sorted_keys, sorted_keys, side="left")
+    slot_in_box = jnp.arange(keys.shape[0]) - first                  # rank within box
+    table = jnp.full((m + 1, k), -1, jnp.int32)
+    sk = jnp.minimum(slot_in_box, k - 1)
+    table = table.at[sorted_keys.astype(jnp.int32), sk].set(order.astype(jnp.int32),
+                                                            mode="drop")
+    counts = jnp.zeros((m + 1,), jnp.int32).at[keys.astype(jnp.int32)].add(
+        pool.alive.astype(jnp.int32), mode="drop")
+    return ScatterGridState(origin=jnp.asarray(origin), box_size=jnp.asarray(box_size),
+                            table=table[:m], counts=counts[:m])
+
+
+def scatter_grid_candidates(spec: GridSpec, g: ScatterGridState, query_pos
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    k = spec.max_per_box
+    cell = morton.cell_of(query_pos, g.origin, g.box_size, spec.dims)
+    ncell = cell[:, None, :] + jnp.asarray(_OFFSETS)[None, :, :]
+    dims = jnp.asarray(spec.dims, jnp.int32)
+    inside = jnp.all((ncell >= 0) & (ncell < dims), axis=-1)
+    ncell_c = jnp.clip(ncell, 0, dims - 1)
+    codes = morton.encode3(ncell_c[..., 0], ncell_c[..., 1], ncell_c[..., 2]).astype(jnp.int32)
+    members = g.table[codes]                                      # (Q,27,K)
+    valid = (members >= 0) & inside[..., None]
+    q = query_pos.shape[0]
+    return jnp.maximum(members, 0).reshape(q, 27 * k), valid.reshape(q, 27 * k)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HashGridState:
+    """Spatial-hash grid with a fixed bucket table (memory-capped alternative)."""
+    origin: jnp.ndarray
+    box_size: jnp.ndarray
+    keys: jnp.ndarray
+    order: jnp.ndarray
+    starts: jnp.ndarray
+    counts: jnp.ndarray
+
+
+def _hash_cell(cell: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
+    # classic 3-prime spatial hash (Teschner et al.)
+    p = jnp.asarray([73856093, 19349663, 83492791], jnp.uint32)
+    h = (cell[..., 0].astype(jnp.uint32) * p[0]
+         ^ cell[..., 1].astype(jnp.uint32) * p[1]
+         ^ cell[..., 2].astype(jnp.uint32) * p[2])
+    return h % jnp.uint32(n_buckets)
+
+
+def build_hash_grid(spec: GridSpec, pool: AgentPool, origin, box_size,
+                    n_buckets: int = 1 << 14) -> HashGridState:
+    cell = morton.cell_of(pool.position, origin, box_size, spec.dims)
+    keys = _hash_cell(cell, n_buckets)
+    keys = jnp.where(pool.alive, keys, jnp.uint32(n_buckets))
+    order = jnp.argsort(keys).astype(jnp.int32)
+    sorted_keys = keys[order]
+    bucket_ids = jnp.arange(n_buckets, dtype=jnp.uint32)
+    starts = jnp.searchsorted(sorted_keys, bucket_ids, side="left").astype(jnp.int32)
+    ends = jnp.searchsorted(sorted_keys, bucket_ids, side="right").astype(jnp.int32)
+    return HashGridState(origin=jnp.asarray(origin), box_size=jnp.asarray(box_size),
+                         keys=keys, order=order, starts=starts, counts=ends - starts)
+
+
+def hash_grid_candidates(spec: GridSpec, g: HashGridState, query_pos,
+                         n_buckets: int = 1 << 14, k_mult: int = 4
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Collisions inflate buckets, so gather capacity is k_mult×max_per_box."""
+    k = spec.max_per_box * k_mult
+    cell = morton.cell_of(query_pos, g.origin, g.box_size, spec.dims)
+    ncell = cell[:, None, :] + jnp.asarray(_OFFSETS)[None, :, :]
+    dims = jnp.asarray(spec.dims, jnp.int32)
+    inside = jnp.all((ncell >= 0) & (ncell < dims), axis=-1)
+    ncell_c = jnp.clip(ncell, 0, dims - 1)
+    h = _hash_cell(ncell_c, n_buckets)
+    s = g.starts[h]
+    n = jnp.where(inside, g.counts[h], 0)
+    lane = jnp.arange(k, dtype=jnp.int32)
+    pos = s[..., None] + lane
+    valid = lane < jnp.minimum(n, k)[..., None]
+    pos = jnp.where(valid, pos, 0)
+    ids = g.order[pos]
+    q = query_pos.shape[0]
+    return ids.reshape(q, 27 * k), valid.reshape(q, 27 * k)

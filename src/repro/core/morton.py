@@ -1,0 +1,129 @@
+"""Morton (Z-order) space-filling curve codes — paper §4.2 (Agent Sorting and Balancing).
+
+The paper sorts agents along a Morton curve so that agents close in 3-D space are
+close in memory, improving cache hit rate and minimizing remote-DRAM traffic.
+On TPU the same sort improves gather locality and — crucially — makes each grid
+box's agents *contiguous* in the pool, which is what the sort-based uniform grid
+(grid.py) and the windowed Pallas force kernel (kernels/collision_force.py) rely on.
+
+The paper's gap-skipping quadtree traversal (to enumerate Morton codes of a
+non-power-of-two grid in linear time without a sort) is a serial-CPU trick; on
+TPU the fully-parallel XLA sort is faster, so we intentionally do not port it
+(DESIGN.md §10). We keep the paper's choice of Morton over Hilbert (paper
+measured only 0.54% difference, Morton decode is far cheaper).
+
+Supports 10 bits per dimension in 3-D (grids up to 1024^3 boxes) and 16 bits per
+dimension in 2-D, using uint32 codes (no x64 requirement).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Maximum bits per coordinate for the uint32 3-D code.
+MAX_BITS_3D = 10
+MAX_BITS_2D = 16
+
+
+def part1by2(x: jnp.ndarray) -> jnp.ndarray:
+    """Spread the low 10 bits of ``x`` so there are two zero bits between each.
+
+    Classic magic-number bit spread; input/output uint32.
+    """
+    x = x.astype(jnp.uint32) & jnp.uint32(0x3FF)
+    x = (x | (x << 16)) & jnp.uint32(0x030000FF)
+    x = (x | (x << 8)) & jnp.uint32(0x0300F00F)
+    x = (x | (x << 4)) & jnp.uint32(0x030C30C3)
+    x = (x | (x << 2)) & jnp.uint32(0x09249249)
+    return x
+
+
+def compact1by2(x: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`part1by2` (keeps every third bit)."""
+    x = x.astype(jnp.uint32) & jnp.uint32(0x09249249)
+    x = (x ^ (x >> 2)) & jnp.uint32(0x030C30C3)
+    x = (x ^ (x >> 4)) & jnp.uint32(0x0300F00F)
+    x = (x ^ (x >> 8)) & jnp.uint32(0x030000FF)
+    x = (x ^ (x >> 16)) & jnp.uint32(0x000003FF)
+    return x
+
+
+def part1by1(x: jnp.ndarray) -> jnp.ndarray:
+    """Spread the low 16 bits of ``x`` with one zero bit between each."""
+    x = x.astype(jnp.uint32) & jnp.uint32(0xFFFF)
+    x = (x | (x << 8)) & jnp.uint32(0x00FF00FF)
+    x = (x | (x << 4)) & jnp.uint32(0x0F0F0F0F)
+    x = (x | (x << 2)) & jnp.uint32(0x33333333)
+    x = (x | (x << 1)) & jnp.uint32(0x55555555)
+    return x
+
+
+def compact1by1(x: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`part1by1`."""
+    x = x.astype(jnp.uint32) & jnp.uint32(0x55555555)
+    x = (x ^ (x >> 1)) & jnp.uint32(0x33333333)
+    x = (x ^ (x >> 2)) & jnp.uint32(0x0F0F0F0F)
+    x = (x ^ (x >> 4)) & jnp.uint32(0x00FF00FF)
+    x = (x ^ (x >> 8)) & jnp.uint32(0x0000FFFF)
+    return x
+
+
+def encode3(ix: jnp.ndarray, iy: jnp.ndarray, iz: jnp.ndarray) -> jnp.ndarray:
+    """3-D Morton code from integer cell coordinates (each < 2**10). uint32."""
+    return part1by2(ix) | (part1by2(iy) << 1) | (part1by2(iz) << 2)
+
+
+def decode3(code: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Inverse of :func:`encode3` → (ix, iy, iz) uint32."""
+    code = code.astype(jnp.uint32)
+    return compact1by2(code), compact1by2(code >> 1), compact1by2(code >> 2)
+
+
+def encode2(ix: jnp.ndarray, iy: jnp.ndarray) -> jnp.ndarray:
+    """2-D Morton code from integer cell coordinates (each < 2**16). uint32."""
+    return part1by1(ix) | (part1by1(iy) << 1)
+
+
+def decode2(code: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    code = code.astype(jnp.uint32)
+    return compact1by1(code), compact1by1(code >> 1)
+
+
+def cell_of(position: jnp.ndarray, origin: jnp.ndarray, box_size: float,
+            dims: tuple[int, int, int]) -> jnp.ndarray:
+    """Integer cell coordinates of 3-D positions, clipped into the grid.
+
+    position: (..., 3) float; origin: (3,) float; dims: static grid extents.
+    Returns (..., 3) int32.
+    """
+    rel = (position - origin) / box_size
+    cell = jnp.floor(rel).astype(jnp.int32)
+    hi = jnp.asarray([dims[0] - 1, dims[1] - 1, dims[2] - 1], dtype=jnp.int32)
+    return jnp.clip(cell, 0, hi)
+
+
+def morton_keys(position: jnp.ndarray, origin: jnp.ndarray, box_size: float,
+                dims: tuple[int, int, int]) -> jnp.ndarray:
+    """Morton sort key (uint32) per agent — box id in Morton space.
+
+    Agents in the same grid box share a key; sorting by this key groups agents
+    by box *and* orders boxes along the space-filling curve (paper §3.1 + §4.2
+    synergy: 'linked-list elements will be closer to each other').
+    """
+    cell = cell_of(position, origin, box_size, dims)
+    return encode3(cell[..., 0], cell[..., 1], cell[..., 2])
+
+
+def code_space_size(dims: tuple[int, int, int]) -> int:
+    """Size of the dense Morton-indexed table covering grid ``dims``.
+
+    The Morton code space is the cube of the next power of two of max(dims):
+    2**(3*bits). For non-pow2 grids this over-allocates (the paper's 'gaps');
+    we accept the dense table because vectorized ops over it are cheap on TPU
+    and it keeps start/count lookup O(1) (DESIGN.md §4.2).
+    """
+    m = max(dims)
+    bits = max(1, (m - 1).bit_length())
+    if bits > MAX_BITS_3D:
+        raise ValueError(f"grid dim {m} needs {bits} bits/axis > {MAX_BITS_3D}")
+    return 1 << (3 * bits)

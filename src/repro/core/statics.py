@@ -1,0 +1,66 @@
+"""Static-region detection — paper §5 (omit collision force calculation).
+
+An agent is *static* next iteration iff, in the last iteration (paper
+conditions i–iv):
+  (i)   the agent and none of its neighbors moved,
+  (ii)  neither the agent's nor any neighbor's force-relevant attributes grew
+        (e.g. larger diameter),
+  (iii) no new agent was added within the interaction radius, and
+  (iv)  at most one neighbor force was non-zero (so removals cannot release a
+        previously-cancelled force).
+
+Per-agent flags (moved / grew / born_iter / force_nnz) are maintained by the
+engine; this module computes the neighborhood aggregates with one pass of the
+same grid machinery and combines them. Static agents are excluded from the
+force computation via active-index compaction — on TPU, per-lane predication
+saves nothing, so compute is skipped at *block* granularity
+(compaction.active_index_list + dynamic trip count in grid.neighbor_apply;
+DESIGN.md §2/O6).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from . import grid as grid_mod
+from .agents import AgentPool
+
+
+def statics_pair_fn(interaction_radius: jnp.ndarray, iteration: jnp.ndarray):
+    """pair_fn aggregating neighborhood disturbance within the interaction radius."""
+
+    def pair_fn(q: Dict[str, jnp.ndarray], nbr: Dict[str, jnp.ndarray],
+                valid: jnp.ndarray, q_slot: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        d = nbr["position"] - q["position"][:, None, :]
+        dist2 = jnp.sum(d * d, axis=-1)
+        in_r = valid & nbr["alive"] & (dist2 <= interaction_radius ** 2)
+        nbr_moved = jnp.any(in_r & nbr["moved"], axis=-1)
+        nbr_grew = jnp.any(in_r & nbr["grew"], axis=-1)
+        nbr_new = jnp.any(in_r & (nbr["born_iter"] == iteration), axis=-1)
+        disturbed = nbr_moved | nbr_grew | nbr_new
+        return {"neigh_disturbed": disturbed.astype(jnp.int32)}
+
+    return pair_fn
+
+
+def update_static_flags(spec: grid_mod.GridSpec,
+                        grid: grid_mod.GridState,
+                        pool: AgentPool,
+                        interaction_radius: jnp.ndarray,
+                        iteration: jnp.ndarray) -> jnp.ndarray:
+    """Recompute ``static`` for every live agent (paper §5 conditions i–iv)."""
+    channels = {k: v for k, v in pool.channels().items() if not k.startswith("extra.")}
+    c = pool.capacity
+    all_idx = jnp.arange(c, dtype=jnp.int32)
+    res = grid_mod.neighbor_apply(
+        spec, grid, channels,
+        query_idx=all_idx, n_query=pool.n_live,  # live agents occupy the front
+        pair_fn=statics_pair_fn(interaction_radius, iteration),
+        out_specs={"neigh_disturbed": ((), jnp.int32)},
+    )
+    neigh_disturbed = res["neigh_disturbed"] > 0
+    self_ok = ~pool.moved & ~pool.grew & (pool.born_iter != iteration)
+    cond_iv = pool.force_nnz <= 1
+    return pool.alive & self_ok & ~neigh_disturbed & cond_iv

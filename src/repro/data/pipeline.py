@@ -1,0 +1,52 @@
+"""Deterministic synthetic token pipeline, shardable across hosts.
+
+Real deployments stream tokenized shards; here the substrate provides the same
+interface backed by a counter-based PRNG (stateless → any host can produce any
+batch index, which is what makes the pipeline elastic and restart-safe: the
+data state IS the step counter, carried by the checkpoint).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 1234
+    frontend_tokens: int = 0
+    d_model: int = 0          # for frontend embeds
+
+
+def batch_at(cfg: DataConfig, step: int,
+             host_id: int = 0, n_hosts: int = 1) -> Dict[str, jnp.ndarray]:
+    """Batch for `step`, restricted to this host's shard (host-data-parallel)."""
+    per_host = cfg.global_batch // n_hosts
+    rng = np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, step, host_id]))
+    # zipf-ish marginal: realistic token frequency skew
+    z = rng.zipf(1.3, size=(per_host, cfg.seq_len)).astype(np.int64)
+    tokens = (z % (cfg.vocab_size - 2)) + 2
+    out = {"tokens": jnp.asarray(tokens, jnp.int32),
+           "labels": jnp.asarray(tokens, jnp.int32)}
+    if cfg.frontend_tokens:
+        fe = rng.standard_normal((per_host, cfg.frontend_tokens,
+                                  cfg.d_model)).astype(np.float32)
+        out["frontend_embeds"] = jnp.asarray(fe)
+    return out
+
+
+def iterate(cfg: DataConfig, start_step: int = 0,
+            host_id: int = 0, n_hosts: int = 1) -> Iterator[Dict[str, jnp.ndarray]]:
+    step = start_step
+    while True:
+        yield batch_at(cfg, step, host_id, n_hosts)
+        step += 1

@@ -1,0 +1,144 @@
+"""K1: tiled pairwise collision force — Pallas TPU kernel.
+
+The paper identifies the pairwise mechanical force as the dominant cost (§5).
+On TPU we exploit the Morton sort (§4.2): after sorting, each grid box's agents
+are contiguous, so the candidate neighbors of a *block* of 128 consecutive
+agents live in a small set of 128-wide column blocks. The engine precomputes a
+block-sparse column map (ops.build_block_cols); the kernel sweeps
+(row_block × listed col_blocks), computing a 128×128 pairwise force tile in
+VMEM per step — flash-attention-like structure with VPU math instead of MXU.
+
+Correctness does not depend on the column map being tight: any pair within the
+interaction radius is necessarily inside the 27-box neighborhood (box ≥ radius),
+and the map covers those ranges, so extra candidates are masked by the radius
+test. Sentinel (-1) column entries are skipped with ``pl.when`` — the same
+block-skipping mechanism that realizes the paper's static-region optimization
+at block granularity (DESIGN.md §2/O6).
+
+Data layout (TPU-friendly): agents are packed along *lanes*:
+  data_t: (8, N_pad) f32 rows = [x, y, z, diameter, type, alive, 0, 0]
+  out_t:  (8, N_pad) f32 rows = [fx, fy, fz, nnz, 0, 0, 0, 0]
+so each (8, 128) tile is one native VREG tile set.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK = 128
+ROW_X, ROW_Y, ROW_Z, ROW_DIA, ROW_TYPE, ROW_ALIVE = 0, 1, 2, 3, 4, 5
+ROW_FX, ROW_FY, ROW_FZ, ROW_NNZ = 0, 1, 2, 3
+
+
+def _force_tile(row: jnp.ndarray, col: jnp.ndarray,
+                row_base: jnp.ndarray, col_base: jnp.ndarray,
+                k_rep: float, adhesion: Optional[Tuple[Tuple[float, ...], ...]],
+                adhesion_band: float) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(8,128) row tile × (8,128) col tile → per-row (fx, fy, fz, nnz)."""
+    rx, ry, rz = row[ROW_X], row[ROW_Y], row[ROW_Z]        # (128,)
+    cx, cy, cz = col[ROW_X], col[ROW_Y], col[ROW_Z]
+    dx = cx[None, :] - rx[:, None]                          # (128,128) q->n
+    dy = cy[None, :] - ry[:, None]
+    dz = cz[None, :] - rz[:, None]
+    dist2 = dx * dx + dy * dy + dz * dz
+    dist = jnp.sqrt(jnp.maximum(dist2, 1e-18))
+    r_q = row[ROW_DIA][:, None] * 0.5
+    r_n = col[ROW_DIA][None, :] * 0.5
+    delta = r_q + r_n - dist
+    r_eff = jnp.maximum(r_q * r_n / jnp.maximum(r_q + r_n, 1e-12), 1e-12)
+    f_rep = k_rep * jnp.sqrt(r_eff) * jnp.power(jnp.maximum(delta, 0.0), 1.5)
+    if adhesion is not None:
+        # tiny type-count: unroll the (T,T) adhesion table as select terms
+        t = len(adhesion)
+        ti = row[ROW_TYPE][:, None]
+        tj = col[ROW_TYPE][None, :]
+        mu = jnp.zeros_like(dist)
+        for a in range(t):
+            for b in range(t):
+                coeff = adhesion[a][b]
+                if coeff != 0.0:
+                    mu += coeff * ((ti == a) & (tj == b)).astype(dist.dtype)
+        band = jnp.maximum(delta + adhesion_band, 0.0)
+        f_adh = jnp.where(delta + adhesion_band > 0.0, mu * jnp.sqrt(r_eff * band), 0.0)
+    else:
+        f_adh = jnp.zeros_like(dist)
+    f_mag = f_rep - f_adh
+
+    row_ids = row_base + jax.lax.broadcasted_iota(jnp.int32, (BLOCK, BLOCK), 0)
+    col_ids = col_base + jax.lax.broadcasted_iota(jnp.int32, (BLOCK, BLOCK), 1)
+    valid = ((row[ROW_ALIVE][:, None] > 0.5) & (col[ROW_ALIVE][None, :] > 0.5)
+             & (row_ids != col_ids) & (delta + adhesion_band > 0.0))
+    f = jnp.where(valid, -f_mag, 0.0)
+    inv = 1.0 / dist
+    fx = jnp.sum(f * dx * inv, axis=1)
+    fy = jnp.sum(f * dy * inv, axis=1)
+    fz = jnp.sum(f * dz * inv, axis=1)
+    mag2 = f * f
+    nnz = jnp.sum((mag2 > (1e-7) ** 2).astype(jnp.float32), axis=1)
+    return fx, fy, fz, nnz
+
+
+def _kernel(cols_ref,            # scalar prefetch: (n_row_blocks, maxb) int32
+            data_row_ref,        # (8, BLOCK) row agents
+            data_col_ref,        # (8, BLOCK) candidate col agents
+            out_ref,             # (8, BLOCK) accumulated [fx fy fz nnz ...]
+            *, k_rep: float, adhesion, adhesion_band: float):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    col_id = cols_ref[i, j]
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(col_id >= 0)
+    def _accum():
+        row = data_row_ref[...]
+        col = data_col_ref[...]
+        fx, fy, fz, nnz = _force_tile(
+            row, col, i * BLOCK, col_id * BLOCK,
+            k_rep, adhesion, adhesion_band)
+        acc = out_ref[...]
+        upd = jnp.zeros_like(acc)
+        upd = upd.at[ROW_FX].set(fx).at[ROW_FY].set(fy)
+        upd = upd.at[ROW_FZ].set(fz).at[ROW_NNZ].set(nnz)
+        out_ref[...] = acc + upd
+
+
+def collision_force_kernel(data_t: jnp.ndarray,
+                           block_cols: jnp.ndarray,
+                           *, k_rep: float,
+                           adhesion: Optional[Tuple[Tuple[float, ...], ...]],
+                           adhesion_band: float,
+                           interpret: bool = True) -> jnp.ndarray:
+    """Run the kernel. data_t: (8, N_pad); block_cols: (N_pad/128, MAXB) int32.
+
+    Returns out_t (8, N_pad): rows [fx, fy, fz, nnz]. The container is CPU-only,
+    so interpret=True is the validated path; on TPU pass interpret=False.
+    """
+    n_pad = data_t.shape[1]
+    n_row_blocks = n_pad // BLOCK
+    maxb = block_cols.shape[1]
+    kern = functools.partial(_kernel, k_rep=k_rep, adhesion=adhesion,
+                             adhesion_band=adhesion_band)
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_row_blocks, maxb),
+            in_specs=[
+                pl.BlockSpec((8, BLOCK), lambda i, j, cols: (0, i)),
+                pl.BlockSpec((8, BLOCK),
+                             lambda i, j, cols: (0, jnp.maximum(cols[i, j], 0))),
+            ],
+            out_specs=pl.BlockSpec((8, BLOCK), lambda i, j, cols: (0, i)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((8, n_pad), jnp.float32),
+        interpret=interpret,
+    )(block_cols, data_t, data_t)

@@ -1,0 +1,130 @@
+"""K2: flash attention (online-softmax tiling) — Pallas TPU kernel.
+
+Prefill attention at 32k tokens is the LM substrate's compute hot spot; the
+full (Sq × Sk) score matrix never fits VMEM, so we tile with the standard
+online-softmax recurrence (running row-max m, normalizer l, accumulator acc).
+
+Grid: (batch, q_heads, Sq/Bq, Sk/Bk) with the key axis innermost; causal
+blocks strictly above the diagonal are skipped via ``pl.when`` (block-level
+work elision, the same mechanism K1 uses for static regions). GQA is handled
+in the BlockSpec index map: query head h reads KV head h // group.
+
+Validated in interpret mode on CPU (the container has no TPU); on TPU pass
+interpret=False. Numerics: fp32 accumulation regardless of input dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr,
+                  *, scale: float, causal: bool, sk_actual: int,
+                  block_q: int, block_k: int, kv_offset: int):
+    i_q = pl.program_id(2)
+    i_k = pl.program_id(3)
+    n_k = pl.num_programs(3)
+
+    @pl.when(i_k == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal block skip: query block rows span [qlo, qhi]; keys start at klo.
+    qhi = (i_q + 1) * block_q - 1 + kv_offset
+    klo = i_k * block_k
+    should = (klo <= qhi) if causal else True
+
+    @pl.when(should)
+    def _accum():
+        q = q_ref[0, 0].astype(jnp.float32)            # (Bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)            # (Bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)            # (Bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = klo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < sk_actual                        # key padding
+        if causal:
+            qpos = i_q * block_q + kv_offset + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 0)
+            mask &= kpos <= qpos
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                            # (Bq, 128) replicated
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1)                     # (Bq,)
+        m_new = jnp.maximum(m_prev[:, 0], m_cur)
+        alpha = jnp.exp(m_prev[:, 0] - m_new)          # (Bq,)
+        p = jnp.exp(s - m_new[:, None])                # (Bq, Bk)
+        p = jnp.where(mask, p, 0.0)
+        l_new = l_prev[:, 0] * alpha + jnp.sum(p, axis=1)
+        acc = acc_scr[...] * alpha[:, None]
+        acc += jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new[:, None], m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new[:, None], l_scr.shape)
+        acc_scr[...] = acc
+
+    @pl.when(i_k == n_k - 1)
+    def _finish():
+        l = l_scr[...][:, 0]
+        denom = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           *, causal: bool = True, scale: float | None = None,
+                           block_q: int = 128, block_k: int = 128,
+                           sk_actual: int | None = None,
+                           kv_offset: int | None = None,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D), Hq % Hkv == 0.
+
+    Sq/Sk must be multiples of block_q/block_k (ops.flash_attention pads).
+    ``sk_actual`` masks trailing key padding; ``kv_offset`` is the causal
+    position of query row 0 (defaults to sk_actual - Sq; pass the *unpadded*
+    offset when Sq was padded).
+    """
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    sk_actual = sk if sk_actual is None else sk_actual
+    if kv_offset is None:
+        kv_offset = sk_actual - sq          # query block aligned to sequence end
+    n_q, n_k = sq // block_q, sk // block_k
+
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, sk_actual=sk_actual,
+        block_q=block_q, block_k=block_k, kv_offset=kv_offset)
+
+    return pl.pallas_call(
+        kern,
+        grid=(b, hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, iq, ik, g=group: (b_, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, iq, ik, g=group: (b_, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h, iq, ik: (b_, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

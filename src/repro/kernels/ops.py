@@ -1,0 +1,177 @@
+"""jit'd wrappers around the Pallas kernels (sort, pack, column-map build, unsort)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import morton
+from . import collision_force as k1
+from . import flash_attention as k2
+
+BLOCK = k1.BLOCK
+
+
+# ---------------------------------------------------------------------------
+# K1: collision force
+# ---------------------------------------------------------------------------
+
+def build_block_cols(sorted_cells: jnp.ndarray,      # (Npad, 3) int32 cells (sorted order)
+                     starts: jnp.ndarray,            # (M,) per-box first sorted index
+                     counts: jnp.ndarray,            # (M,)
+                     row_active: jnp.ndarray,        # (Npad,) bool — needs own force
+                     dims: Tuple[int, int, int],
+                     maxb: int,
+                     span: int = 4) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Block-sparse column map: for each 128-row block, the unique 128-wide
+    column blocks covering all 27-box neighbor ranges of its *active* rows.
+
+    Fully-static row blocks get an empty column list — the kernel then skips
+    them entirely (paper §5 static regions at block granularity).
+
+    Returns (block_cols (n_row_blocks, maxb) int32 with -1 padding, overflow
+    flag ()). ``span`` bounds blocks per box range (covers counts ≤ span·128).
+    """
+    n_pad = sorted_cells.shape[0]
+    n_rb = n_pad // BLOCK
+    dims_arr = jnp.asarray(dims, jnp.int32)
+    offsets = jnp.asarray(k1_offsets(), jnp.int32)            # (27, 3)
+    sentinel = jnp.int32(2 ** 30)
+
+    def per_row_block(i):
+        rows = i * BLOCK + jnp.arange(BLOCK, dtype=jnp.int32)
+        cell = sorted_cells[rows]                              # (128, 3)
+        act = row_active[rows]
+        ncell = cell[:, None, :] + offsets[None, :, :]         # (128, 27, 3)
+        inside = jnp.all((ncell >= 0) & (ncell < dims_arr), axis=-1)
+        nc = jnp.clip(ncell, 0, dims_arr - 1)
+        codes = morton.encode3(nc[..., 0], nc[..., 1], nc[..., 2])
+        s = starts[codes]                                      # (128, 27)
+        n = jnp.where(inside & act[:, None], counts[codes], 0)
+        b0 = s // BLOCK
+        b_last = jnp.where(n > 0, (s + n - 1) // BLOCK, -1)
+        ks = jnp.arange(span, dtype=jnp.int32)
+        cand = b0[..., None] + ks                              # (128, 27, span)
+        ok = (n[..., None] > 0) & (cand <= b_last[..., None])
+        ids = jnp.where(ok, cand, sentinel).reshape(-1)
+        ids = jnp.sort(ids)
+        uniq = jnp.concatenate([jnp.ones((1,), bool), ids[1:] != ids[:-1]])
+        uniq &= ids < sentinel
+        pos = jnp.cumsum(uniq.astype(jnp.int32)) - 1
+        n_uniq = jnp.sum(uniq.astype(jnp.int32))
+        out = jnp.full((maxb,), -1, jnp.int32)
+        write = jnp.where(uniq & (pos < maxb), pos, maxb)
+        out = out.at[write].set(ids.astype(jnp.int32), mode="drop")
+        # span overflow: a box range longer than span blocks would be cut
+        span_ovf = jnp.any((b_last - b0 + 1) > span)
+        return out, (n_uniq > maxb) | span_ovf
+
+    cols, ovf = jax.lax.map(per_row_block,
+                            jnp.arange(n_rb, dtype=jnp.int32),
+                            batch_size=min(64, max(n_rb, 1)))
+    return cols, jnp.any(ovf)
+
+
+def k1_offsets():
+    import numpy as np
+    return np.array([(dx, dy, dz) for dx in (-1, 0, 1) for dy in (-1, 0, 1)
+                     for dz in (-1, 0, 1)], dtype=np.int32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "dims", "k_rep", "adhesion", "adhesion_band", "maxb", "interpret"))
+def collision_force(position: jnp.ndarray, diameter: jnp.ndarray,
+                    agent_type: jnp.ndarray, alive: jnp.ndarray,
+                    active: jnp.ndarray,
+                    origin: jnp.ndarray, box_size: jnp.ndarray,
+                    *, dims: Tuple[int, int, int], k_rep: float = 2.0,
+                    adhesion: Optional[Tuple[Tuple[float, ...], ...]] = None,
+                    adhesion_band: float = 0.4, maxb: int = 64,
+                    interpret: bool = True
+                    ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """End-to-end K1 op: Morton sort → column map → kernel → unsort.
+
+    active: agents whose own force is required (alive & ~static). Static agents
+    still *contribute* force to active neighbors (they are columns, not rows).
+    Returns (force (C,3) f32, nnz (C,) i32, overflow flag ()).
+
+    Exactness contract (same as the engine grid, paper §3.1): ``box_size`` must
+    be ≥ the maximum interaction distance max(r_i + r_j) + adhesion_band, so
+    every interacting pair falls inside the 3×3×3 neighborhood.
+    """
+    c = position.shape[0]
+    n_pad = ((c + BLOCK - 1) // BLOCK) * BLOCK
+
+    keys = morton.morton_keys(position, origin, box_size, dims)
+    keys = jnp.where(alive, keys, jnp.uint32(0xFFFFFFFF))
+    order = jnp.argsort(keys).astype(jnp.int32)
+    sorted_keys = keys[order]
+
+    m = morton.code_space_size(dims)
+    box_ids = jnp.arange(m, dtype=jnp.uint32)
+    starts = jnp.searchsorted(sorted_keys, box_ids, side="left").astype(jnp.int32)
+    ends = jnp.searchsorted(sorted_keys, box_ids, side="right").astype(jnp.int32)
+    counts = ends - starts
+
+    pad = n_pad - c
+    def padded(x, fill):
+        return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1),
+                       constant_values=fill)
+
+    sp = padded(position[order], 0.0)
+    sd = padded(diameter[order], 0.0)
+    st = padded(agent_type[order], 0)
+    sa = padded(alive[order], False)
+    sact = padded((active & alive)[order], False)
+    cells = morton.cell_of(sp, origin, box_size, dims)
+
+    block_cols, ovf = build_block_cols(cells, starts, counts, sact, dims, maxb)
+
+    data_t = jnp.zeros((8, n_pad), jnp.float32)
+    data_t = data_t.at[k1.ROW_X].set(sp[:, 0]).at[k1.ROW_Y].set(sp[:, 1])
+    data_t = data_t.at[k1.ROW_Z].set(sp[:, 2]).at[k1.ROW_DIA].set(sd)
+    data_t = data_t.at[k1.ROW_TYPE].set(st.astype(jnp.float32))
+    data_t = data_t.at[k1.ROW_ALIVE].set(sa.astype(jnp.float32))
+
+    out_t = k1.collision_force_kernel(
+        data_t, block_cols, k_rep=k_rep, adhesion=adhesion,
+        adhesion_band=adhesion_band, interpret=interpret)
+
+    f_sorted = jnp.stack([out_t[k1.ROW_FX], out_t[k1.ROW_FY], out_t[k1.ROW_FZ]],
+                         axis=-1)[:c]
+    nnz_sorted = out_t[k1.ROW_NNZ][:c].astype(jnp.int32)
+    # rows that were inactive produced zeros; also zero anything masked
+    f_sorted = jnp.where(sact[:c, None], f_sorted, 0.0)
+    nnz_sorted = jnp.where(sact[:c], nnz_sorted, 0)
+    # unsort
+    force = jnp.zeros((c, 3), jnp.float32).at[order[:c]].set(f_sorted)
+    nnz = jnp.zeros((c,), jnp.int32).at[order[:c]].set(nnz_sorted)
+    return force, nnz, ovf
+
+
+# ---------------------------------------------------------------------------
+# K2: flash attention
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    *, causal: bool = True, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Padding-safe wrapper: pads Sq/Sk to block multiples, masks, unpads."""
+    b, hq, sq, d = q.shape
+    sk = k.shape[2]
+    block_q = min(block_q, max(16, 1 << (sq - 1).bit_length() if sq > 1 else 16))
+    block_k = min(block_k, max(16, 1 << (sk - 1).bit_length() if sk > 1 else 16))
+    sq_pad = ((sq + block_q - 1) // block_q) * block_q
+    sk_pad = ((sk + block_k - 1) // block_k) * block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sq_pad - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, sk_pad - sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, sk_pad - sk), (0, 0)))
+    out = k2.flash_attention_kernel(qp, kp, vp, causal=causal, scale=scale,
+                                    block_q=block_q, block_k=block_k,
+                                    sk_actual=sk, kv_offset=sk - sq,
+                                    interpret=interpret)
+    return out[:, :, :sq, :]

@@ -1,0 +1,298 @@
+"""Dry-run cell assembly: input_specs + shardings for every (arch × shape).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, zero device allocation. ``cell_shardings``
+returns matching NamedSharding trees. Together they define exactly what
+``dryrun.py`` lowers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, LayerDesc, ShapeSpec
+from ..models import build_model
+from ..models.layers import MeshAxes, resolve_spec
+from ..train import AdamWConfig
+from ..train.optimizer import init_state as opt_init
+
+# per-cell microbatch counts (activation-memory fits; FLOPs unchanged).
+MICROBATCHES: Dict[Tuple[str, str], int] = {
+    ("kimi-k2-1t-a32b", "train_4k"): 16,
+    ("jamba-v0.1-52b", "train_4k"): 4,
+    ("deepseek-v2-lite-16b", "train_4k"): 2,
+    ("qwen3-14b", "train_4k"): 2,
+    ("yi-9b", "train_4k"): 2,
+}
+
+
+def microbatches(arch: str, shape: str) -> int:
+    return MICROBATCHES.get((arch, shape), 1)
+
+
+def _batch_axes(axes: MeshAxes):
+    b = axes.batch
+    return b if len(b) > 1 else b[0]
+
+
+def _dt(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+@dataclasses.dataclass
+class Cell:
+    """Everything dryrun needs to lower one (arch × shape) on one mesh."""
+    fn: Any                       # the step function to jit
+    args: Tuple                   # ShapeDtypeStruct pytrees
+    in_shardings: Tuple
+    model: Any
+    n_params: int
+    n_active_params: int
+    model_flops: float            # 6ND train / 2ND decode-prefill
+    note: str = ""
+
+
+def _count_active_params(model, cfg: ArchConfig) -> int:
+    """Total params minus the unrouted share of expert weights."""
+    total = model.ps.n_params()
+    if not cfg.n_experts:
+        return total
+    import math
+    expert = sum(math.prod(i.shape) for p, i in model.ps.infos.items()
+                 if "/moe/w_" in p)
+    return int(total - expert * (1.0 - cfg.top_k / cfg.n_experts))
+
+
+def _param_structs(model, axes: MeshAxes, mesh) -> Tuple[Any, Any]:
+    shapes = model.ps.shape_tree()
+    specs = model.ps.spec_tree(axes)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    return shapes, shardings
+
+
+def _opt_structs(model, cfg: ArchConfig, axes: MeshAxes, mesh):
+    mdt = _dt(cfg.opt_moment_dtype)
+    shapes = model.ps.shape_tree()
+    mom = jax.tree.map(lambda sd: jax.ShapeDtypeStruct(sd.shape, mdt), shapes)
+    state = {"mu": mom, "nu": jax.tree.map(lambda x: x, mom),
+             "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    specs = model.ps.spec_tree(axes)
+    sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                      is_leaf=lambda x: isinstance(x, P))
+    state_sh = {"mu": sh, "nu": jax.tree.map(lambda x: x, sh),
+                "step": NamedSharding(mesh, P())}
+    return state, state_sh
+
+
+def _batch_structs(cfg: ArchConfig, shape: ShapeSpec, axes: MeshAxes, mesh,
+                   adt) -> Tuple[Dict, Dict]:
+    b, s = shape.global_batch, shape.seq_len
+    ba = _batch_axes(axes)
+    fe_len = cfg.frontend_tokens
+    if cfg.encoder_layers > 0:
+        # enc-dec: frames on the encoder, tokens on the decoder (both seq_len)
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                 "frontend_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                         adt)}
+        sh = {"tokens": NamedSharding(mesh, P(ba, None)),
+              "labels": NamedSharding(mesh, P(ba, None)),
+              "frontend_embeds": NamedSharding(mesh, P(ba, None, None))}
+        return batch, sh
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    sh = {"tokens": NamedSharding(mesh, P(ba, None)),
+          "labels": NamedSharding(mesh, P(ba, None))}
+    if cfg.frontend != "none":
+        batch["frontend_embeds"] = jax.ShapeDtypeStruct((b, fe_len, cfg.d_model),
+                                                        adt)
+        sh["frontend_embeds"] = NamedSharding(mesh, P(ba, None, None))
+    return batch, sh
+
+
+def _cache_shardings(model, cfg: ArchConfig, shape: ShapeSpec,
+                     axes: MeshAxes, mesh, specs_tree,
+                     cache_seq_axis: str | None = None) -> Any:
+    """decode_32k: shard caches on batch. long_500k (B=1): shard the sequence
+    axis of attention caches over 'data' (sequence-parallel decode); small SSM
+    states stay replicated."""
+    ba = _batch_axes(axes)
+    seq_parallel = shape.global_batch == 1
+
+    def leaf_spec(sd: jax.ShapeDtypeStruct) -> NamedSharding:
+        dims: list = [None] * len(sd.shape)
+        if seq_parallel:
+            for i, d in enumerate(sd.shape):
+                if d == shape.seq_len:
+                    dims[i] = "data"
+                    break
+        else:
+            # batch axis: the axis matching global_batch (after the optional
+            # leading n_blocks stack dim)
+            for i, d in enumerate(sd.shape):
+                if d == shape.global_batch:
+                    dims[i] = ba
+                    break
+            if cache_seq_axis:   # §Perf: additionally shard the KV seq dim
+                for i, d in enumerate(sd.shape):
+                    if d == shape.seq_len and dims[i] is None:
+                        dims[i] = cache_seq_axis
+                        break
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree.map(leaf_spec, specs_tree)
+
+
+def analytic_step_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """Exact GLOBAL FLOPs of one step from the architecture definition.
+
+    XLA's CPU-backend cost_analysis miscounts partitioned MoE einsums (hand
+    verification against HLO dot shapes in EXPERIMENTS.md §Perf B4), so the
+    roofline *compute* term uses this analytic count; HLO-probe numbers are
+    recorded alongside. Conventions: matmul = 2mnk FLOPs; causal attention
+    averages S/2 context; train = 3× fwd (+1× fwd when remat='full');
+    dispatched MoE tokens include the capacity factor.
+    """
+    d, v = cfg.d_model, ((cfg.vocab_size + 127) // 128) * 128
+    s, b = shape.seq_len, shape.global_batch
+
+    def attn_layer(per_ctx: float) -> float:
+        if cfg.mla:
+            r, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_dim,
+                             cfg.qk_rope_dim, cfg.v_head_dim)
+            h = cfg.n_heads
+            proj = 2 * d * h * (dn + dr) + 2 * d * (r + dr) \
+                + 2 * r * h * (dn + dv) + 2 * h * dv * d
+            attn = 2 * 2 * per_ctx * h * (dn + dr + dv) / 2
+        else:
+            h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+            proj = 2 * d * (h + 2 * hk) * dh + 2 * h * dh * d
+            attn = 2 * 2 * per_ctx * h * dh        # scores + values, avg ctx
+        return proj + attn
+
+    def mlp_dense() -> float:
+        return 3 * 2 * d * cfg.d_ff
+
+    def mlp_moe() -> float:
+        f = cfg.moe_d_ff
+        routed = 3 * 2 * cfg.top_k * cfg.capacity_factor * d * f
+        shared = 3 * 2 * d * f * cfg.n_shared_experts
+        return 2 * d * cfg.n_experts + routed + shared
+
+    def ssm_layer(per_ctx: float) -> float:
+        di = cfg.ssm_expand * d
+        h = di // cfg.ssm_head_dim
+        n = cfg.ssm_state
+        proj = 2 * d * (2 * di + 2 * n + h) + 2 * di * d
+        l = min(cfg.ssm_chunk, max(int(per_ctx), 1))
+        ssd = 2 * l * n + 2 * l * di + 8 * di * n     # intra + states, per token
+        return proj + ssd
+
+    # per-token flops for one pass over all layers
+    per_ctx = s / 2 if shape.kind != "decode" else s   # decode reads full cache
+    total = 2 * d * v                                   # logits
+    pat = cfg.layer_pattern()
+    reps = (cfg.n_layers - cfg.first_dense_layers) // len(pat)
+    layers = [LayerDesc(kind="attn", mlp="dense")] * cfg.first_dense_layers \
+        + list(pat) * reps
+    for ld in layers:
+        if ld.kind == "attn":
+            total += attn_layer(per_ctx)
+        else:
+            total += ssm_layer(per_ctx)
+        if ld.mlp == "dense":
+            total += mlp_dense()
+        elif ld.mlp == "moe":
+            total += mlp_moe()
+    if cfg.encoder_layers:
+        enc = sum(attn_layer(s / 2) + mlp_dense()
+                  for _ in range(cfg.encoder_layers))
+        total += enc
+
+    n_tokens = b * (1 if shape.kind == "decode" else s)
+    passes = 1.0
+    if shape.kind == "train":
+        passes = 3.0 + (1.0 if cfg.remat == "full" else 0.0)
+    return float(total) * n_tokens * passes
+
+
+def probe_config(cfg: ArchConfig, k: int) -> ArchConfig:
+    """Depth-k variant for FLOPs/bytes probing.
+
+    XLA's ``cost_analysis`` counts while-loop (lax.scan) bodies ONCE, so the
+    full compile under-reports per-step FLOPs by ~n_blocks×. We compile the
+    same cell at depths 1 and 2; the difference isolates exactly one pattern
+    block, and total = base + n_blocks·delta reconstructs the true per-device
+    cost (probes force n_microbatches=1: FLOPs are microbatch-invariant)."""
+    pat = cfg.layer_pattern()
+    upd: dict = {"n_layers": cfg.first_dense_layers + len(pat) * k}
+    if cfg.encoder_layers:
+        upd["encoder_layers"] = k
+        upd["n_layers"] = k
+    return dataclasses.replace(cfg, **upd)
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh, axes: MeshAxes,
+               attn_impl: str = "xla", force_micro: int | None = None,
+               unroll_scan: bool = False,
+               grad_sync_dtype: str | None = None,
+               cache_seq_axis: str | None = None) -> Cell:
+    from ..models.layers import set_hint_axes
+    from ..train.train_step import (make_decode_step, make_prefill_step,
+                                    make_train_step)
+
+    set_hint_axes(axes)   # activation sharding hints resolve on this mesh
+    model = build_model(cfg, attn_impl=attn_impl, unroll_scan=unroll_scan)
+    adt = _dt(cfg.activation_dtype)
+    n_params = model.ps.n_params()
+    n_active = _count_active_params(model, cfg)
+    tokens = shape.global_batch * shape.seq_len
+    param_shapes, param_sh = _param_structs(model, axes, mesh)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(moment_dtype=cfg.opt_moment_dtype)
+        opt_shapes, opt_sh = _opt_structs(model, cfg, axes, mesh)
+        batch, batch_sh = _batch_structs(cfg, shape, axes, mesh, adt)
+        nm = force_micro or microbatches(cfg.name, shape.name)
+        fn = make_train_step(model, opt_cfg, n_microbatches=nm,
+                             grad_sync_dtype=grad_sync_dtype)
+        return Cell(fn=fn, args=(param_shapes, opt_shapes, batch),
+                    in_shardings=(param_sh, opt_sh, batch_sh),
+                    model=model, n_params=n_params, n_active_params=n_active,
+                    model_flops=6.0 * n_active * tokens,
+                    note=f"microbatches={nm}")
+
+    if shape.kind == "prefill":
+        batch, batch_sh = _batch_structs(cfg, shape, axes, mesh, adt)
+        batch.pop("labels"); batch_sh.pop("labels")
+        fn = make_prefill_step(model)
+        return Cell(fn=fn, args=(param_shapes, batch),
+                    in_shardings=(param_sh, batch_sh),
+                    model=model, n_params=n_params, n_active_params=n_active,
+                    model_flops=2.0 * n_active * tokens)
+
+    # decode: one new token against a seq_len-deep cache
+    b = shape.global_batch
+    s_max = shape.seq_len
+    if cfg.encoder_layers > 0:
+        cache_specs = model.decode_cache_specs(b, s_max, s_enc=s_max)
+    else:
+        cache_specs = model.decode_cache_specs(b, s_max)
+    cache_sh = _cache_shardings(model, cfg, shape, axes, mesh, cache_specs,
+                                cache_seq_axis=cache_seq_axis)
+    ba = _batch_axes(axes)
+    token = jax.ShapeDtypeStruct((b,), jnp.int32)
+    token_sh = NamedSharding(mesh, P(ba if b > 1 else None))
+    cur_len = jax.ShapeDtypeStruct((), jnp.int32)
+    cur_sh = NamedSharding(mesh, P())
+    fn = make_decode_step(model)
+    return Cell(fn=fn, args=(param_shapes, token, cache_specs, cur_len),
+                in_shardings=(param_sh, token_sh, cache_sh, cur_sh),
+                model=model, n_params=n_params, n_active_params=n_active,
+                model_flops=2.0 * n_active * b)

@@ -1,0 +1,191 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+For every (architecture × input shape) cell: build the step function, jit with
+explicit in_shardings on the production mesh, ``.lower().compile()``, print
+``memory_analysis()`` and ``cost_analysis()``, run the roofline analysis on the
+optimized HLO, and persist one JSON per cell under results/dryrun/.
+
+The two XLA_FLAGS lines above MUST precede every other import (jax locks the
+device count at first init). Smoke tests and benches never import this module.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCHS, SHAPES, shape_applicable
+from ..roofline import analysis as roofline
+from .cells import analytic_step_flops, build_cell, microbatches, probe_config
+from .mesh import make_production_mesh, mesh_axes
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save: bool = True, hlo_dir: str | None = None) -> dict:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    tag = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}"
+    if not ok:
+        rec = {"cell": tag, "status": "skipped", "reason": why}
+        if save:
+            _save(tag, rec)
+        print(json.dumps(rec))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = mesh_axes(multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    cell = build_cell(cfg, shape, mesh, axes)
+    with mesh:
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    print(ma)                                  # proves it fits (bytes/device)
+    ca = compiled.cost_analysis()
+    print({k: ca.get(k) for k in ("flops", "bytes accessed")})
+    hlo = compiled.as_text()
+
+    # depth-probe correction: cost_analysis counts scan bodies once — compile
+    # depth-1 and depth-2 probes to reconstruct true per-device FLOPs/bytes
+    # (see cells.probe_config).
+    def _probe_cost(k: int) -> dict:
+        pcfg = probe_config(cfg, k)
+        pcell = build_cell(pcfg, shape, mesh, axes, force_micro=1,
+                           unroll_scan=True)
+        with mesh:
+            pc = jax.jit(pcell.fn, in_shardings=pcell.in_shardings
+                         ).lower(*pcell.args).compile()
+        return pc.cost_analysis()
+
+    pat_blocks = cell.model.n_blocks if hasattr(cell.model, "n_blocks") \
+        else cfg.n_layers
+    try:
+        c1, c2 = _probe_cost(1), _probe_cost(2)
+        corrected = {}
+        for key in ("flops", "bytes accessed"):
+            delta = max(float(c2.get(key, 0.0)) - float(c1.get(key, 0.0)), 0.0)
+            corrected[key] = max(float(c1.get(key, 0.0))
+                                 + delta * (pat_blocks - 1),
+                                 float(ca.get(key, 0.0)))
+        probe_note = "depth-probe corrected"
+    except Exception as e:  # noqa: BLE001
+        corrected = {k: float(ca.get(k, 0.0))
+                     for k in ("flops", "bytes accessed")}
+        probe_note = f"probe failed ({e!r}); raw cost_analysis"
+
+    # compute term: analytic (EXPERIMENTS.md §Roofline method — XLA CPU-backend
+    # cost_analysis undercounts partitioned MoE dots; §Perf B4). memory term:
+    # probe-corrected HLO bytes. collective term: parsed HLO wire bytes.
+    analytic_global = analytic_step_flops(cfg, shape)
+    rl = roofline.analyze(
+        {"flops": analytic_global / n_dev,
+         "bytes accessed": corrected["bytes accessed"]},
+        hlo, default_group=n_dev)
+
+    total_flops_global = analytic_global
+    step_time = max(rl.compute_s, rl.memory_s, rl.collective_s)
+    # useful-MFU bound: fraction of peak devoted to *model* FLOPs during the
+    # bound step time (the honest roofline score; 1.0 = at the compute wall
+    # with zero waste)
+    useful_mfu = ((cell.model_flops / n_dev / roofline.PEAK_FLOPS) / step_time
+                  if step_time else None)
+    rec = {
+        "cell": tag,
+        "status": "ok",
+        "arch": arch, "shape": shape_name,
+        "mesh": list(mesh.shape.values()), "n_devices": int(n_dev),
+        "n_params": int(cell.n_params),
+        "n_active_params": int(cell.n_active_params),
+        "note": cell.note,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes_per_device": ma.argument_size_in_bytes,
+            "output_bytes_per_device": ma.output_size_in_bytes,
+            "temp_bytes_per_device": ma.temp_size_in_bytes,
+            "code_bytes": ma.generated_code_size_in_bytes,
+            "total_bytes_per_device": (ma.argument_size_in_bytes
+                                       + ma.output_size_in_bytes
+                                       + ma.temp_size_in_bytes
+                                       - ma.alias_size_in_bytes),
+            "hbm_budget_bytes": 16 * 1024 ** 3,
+        },
+        "roofline": rl.as_dict(),
+        "cost_raw": {k: float(ca.get(k, 0.0))
+                     for k in ("flops", "bytes accessed")},
+        "hlo_probe": corrected,
+        "probe_note": probe_note,
+        "model_flops": cell.model_flops,
+        "analytic_flops_global": analytic_global,
+        "useful_flops_ratio": (cell.model_flops / total_flops_global
+                               if total_flops_global else None),
+        "roofline_fraction": useful_mfu,
+        "step_time_bound_s": step_time,
+    }
+    if hlo_dir:
+        os.makedirs(hlo_dir, exist_ok=True)
+        with open(os.path.join(hlo_dir, tag + ".hlo.txt"), "w") as f:
+            f.write(hlo)
+    if save:
+        _save(tag, rec)
+    print(json.dumps({k: rec[k] for k in
+                      ("cell", "status", "compile_s", "roofline_fraction")}))
+    return rec
+
+
+def _save(tag: str, rec: dict) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--hlo-dir", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for a, s in cells:
+        try:
+            run_cell(a, s, args.multi_pod, hlo_dir=args.hlo_dir)
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((a, s, repr(e)))
+            _save(f"{a}__{s}__{'pod2' if args.multi_pod else 'pod1'}",
+                  {"cell": f"{a}__{s}", "status": "error", "error": repr(e)})
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

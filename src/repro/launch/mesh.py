@@ -1,0 +1,31 @@
+"""Production meshes. IMPORTANT: functions, not module-level constants — importing
+this module never touches jax device state."""
+
+from __future__ import annotations
+
+import jax
+
+from ..models.layers import MeshAxes
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16×16 = 256 chips (data, model). Multi-pod: 2×16×16 = 512
+    chips (pod, data, model) — the pod axis carries cross-pod data parallelism
+    (DCN-ish in real deployments; the dry-run proves it shards)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_axes(multi_pod: bool = False) -> MeshAxes:
+    """Placeholder-axis resolution for this mesh (models/layers.resolve_spec)."""
+    return MeshAxes(fsdp=("pod", "data") if multi_pod else ("data",),
+                    tp="model")
+
+
+def make_host_mesh():
+    """Degenerate 1×1 mesh for CPU smoke/e2e runs (same code path as prod)."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,7 @@
+"""repro.models — LM substrate for the assigned architecture pool."""
+
+from .lm import LM
+from .encdec import EncDecLM
+from .zoo import build_model, reduced_config
+
+__all__ = ["LM", "EncDecLM", "build_model", "reduced_config"]

@@ -1,0 +1,243 @@
+"""Attention layers: GQA (optionally qk_norm / qkv bias) and DeepSeek MLA.
+
+Two execution modes per layer:
+  * full-sequence (train / prefill): softmax attention over the whole sequence
+    (XLA einsum path by default; the Pallas flash kernel K2 is the TPU target
+    for prefill — selected with attn_impl="pallas").
+  * cached decode: one new token against a preallocated KV cache. For MLA the
+    cache stores the *compressed* c_kv (+ rope key) — the memory win that makes
+    MLA attractive at 32k context — and uses the absorbed-weight formulation.
+
+KV caches are dense (B, S_max, ...) tensors here; the paged pool-allocator
+cache (paper §4.3 transfer) lives in repro.serve.kv_cache and is exercised by
+the serving substrate.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import ParamSet, hint, rms_norm, rope
+
+
+# ---------------------------------------------------------------------------
+# Parameter registration
+# ---------------------------------------------------------------------------
+
+def register_attn(ps: ParamSet, prefix: str, cfg: ArchConfig,
+                  stack: Tuple[int, ...]) -> None:
+    """GQA projection weights. ``stack`` is the leading scan dims (n_blocks,)."""
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    s = tuple(stack)
+    ns = (None,) * len(s)
+    ps.add(f"{prefix}/wq", s + (d, h * dh), ns + ("fsdp", "tp"))
+    ps.add(f"{prefix}/wk", s + (d, hk * dh), ns + ("fsdp", "tp"))
+    ps.add(f"{prefix}/wv", s + (d, hk * dh), ns + ("fsdp", "tp"))
+    ps.add(f"{prefix}/wo", s + (h * dh, d), ns + ("tp", "fsdp"))
+    if cfg.qkv_bias:
+        ps.add(f"{prefix}/bq", s + (h * dh,), ns + ("tp",), init="zeros")
+        ps.add(f"{prefix}/bk", s + (hk * dh,), ns + ("tp",), init="zeros")
+        ps.add(f"{prefix}/bv", s + (hk * dh,), ns + ("tp",), init="zeros")
+    if cfg.qk_norm:
+        ps.add(f"{prefix}/q_norm", s + (dh,), ns + (None,), init="ones")
+        ps.add(f"{prefix}/k_norm", s + (dh,), ns + (None,), init="ones")
+    ps.add(f"{prefix}/norm", s + (d,), ns + (None,), init="ones")
+
+
+def register_mla(ps: ParamSet, prefix: str, cfg: ArchConfig,
+                 stack: Tuple[int, ...]) -> None:
+    """DeepSeek-V2 MLA: compressed KV (kv_lora_rank) + decoupled rope key."""
+    d, h = cfg.d_model, cfg.n_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    s = tuple(stack)
+    ns = (None,) * len(s)
+    ps.add(f"{prefix}/wq", s + (d, h * (dn + dr)), ns + ("fsdp", "tp"))
+    ps.add(f"{prefix}/w_dkv", s + (d, r), ns + ("fsdp", None))       # down proj
+    ps.add(f"{prefix}/w_kpe", s + (d, dr), ns + ("fsdp", None))      # rope key
+    ps.add(f"{prefix}/w_uk", s + (r, h * dn), ns + (None, "tp"))     # up: key
+    ps.add(f"{prefix}/w_uv", s + (r, h * dv), ns + (None, "tp"))     # up: value
+    ps.add(f"{prefix}/wo", s + (h * dv, d), ns + ("tp", "fsdp"))
+    ps.add(f"{prefix}/norm", s + (d,), ns + (None,), init="ones")
+    ps.add(f"{prefix}/kv_norm", s + (r,), ns + (None,), init="ones")
+
+
+# ---------------------------------------------------------------------------
+# Core softmax attention (XLA path; K2 pallas is the TPU prefill target)
+# ---------------------------------------------------------------------------
+
+def _sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, causal: bool,
+          kv_len: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """q: (B,H,Sq,Dh); k,v: (B,Hkv,Sk,Dh'). Returns (B,H,Sq,Dv)."""
+    b, h, sq, dh = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, sq, dh)
+    logits = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (dh ** 0.5)
+    kpos = jnp.arange(sk)
+    neg = jnp.asarray(-1e30, jnp.float32)
+    if causal:
+        qpos = jnp.arange(sq) + (sk - sq)
+        logits = jnp.where(kpos[None, :] <= qpos[:, None], logits, neg)
+    if kv_len is not None:   # decode: mask unwritten cache slots
+        logits = jnp.where(kpos[None, None, None, None, :] < kv_len, logits, neg)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, sq, v.shape[-1]).astype(q.dtype)
+
+
+def _split_heads(x: jnp.ndarray, n: int) -> jnp.ndarray:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, -1).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+# ---------------------------------------------------------------------------
+# GQA layer
+# ---------------------------------------------------------------------------
+
+def gqa_full(p: Dict, x: jnp.ndarray, cfg: ArchConfig, causal: bool = True,
+             positions: Optional[jnp.ndarray] = None, attn_impl: str = "xla"
+             ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence GQA. Returns (output, kv_for_cache)."""
+    b, s, d = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = hint(jnp.einsum("bsd,de->bse", xn, p["wq"]), "batch", None, "tp")
+    k = hint(jnp.einsum("bsd,de->bse", xn, p["wk"]), "batch", None, "tp")
+    v = hint(jnp.einsum("bsd,de->bse", xn, p["wv"]), "batch", None, "tp")
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q, k, v = _split_heads(q, h), _split_heads(k, hk), _split_heads(v, hk)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    pos = positions if positions is not None else jnp.arange(s)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    if attn_impl == "pallas":
+        from ..kernels import ops as kops
+        o = kops.flash_attention(q, k, v, causal=causal, interpret=True)
+    else:
+        o = _sdpa(q, k, v, causal)
+    out = jnp.einsum("bse,ed->bsd", _merge_heads(o), p["wo"])
+    return x + hint(out, "batch", None, None), {"k": k, "v": v}
+
+
+def gqa_decode(p: Dict, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+               cur_len: jnp.ndarray, cfg: ArchConfig
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token decode. x: (B, 1, D); cache k/v: (B, Hkv, S_max, Dh)."""
+    b = x.shape[0]
+    h, hk = cfg.n_heads, cfg.n_kv_heads
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,de->bse", xn, p["wq"])
+    k = jnp.einsum("bsd,de->bse", xn, p["wk"])
+    v = jnp.einsum("bsd,de->bse", xn, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q, k, v = _split_heads(q, h), _split_heads(k, hk), _split_heads(v, hk)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    pos = cur_len[None] if cur_len.ndim == 0 else cur_len
+    q = rope(q, pos.reshape(1, 1, -1), cfg.rope_theta)
+    k = rope(k, pos.reshape(1, 1, -1), cfg.rope_theta)
+    kc = cache["k"].at[:, :, cur_len, :].set(k[:, :, 0, :])
+    vc = cache["v"].at[:, :, cur_len, :].set(v[:, :, 0, :])
+    o = _sdpa(q, kc, vc, causal=False, kv_len=cur_len + 1)
+    out = jnp.einsum("bse,ed->bsd", _merge_heads(o), p["wo"])
+    return x + out, {"k": kc, "v": vc}
+
+
+def gqa_cache_spec(cfg: ArchConfig, batch: int, s_max: int, dtype
+                   ) -> Dict[str, jax.ShapeDtypeStruct]:
+    shp = (batch, cfg.n_kv_heads, s_max, cfg.d_head)
+    return {"k": jax.ShapeDtypeStruct(shp, dtype),
+            "v": jax.ShapeDtypeStruct(shp, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# MLA layer (DeepSeek-V2): train/prefill materialized; decode absorbed
+# ---------------------------------------------------------------------------
+
+def mla_full(p: Dict, x: jnp.ndarray, cfg: ArchConfig, causal: bool = True
+             ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,de->bse", xn, p["wq"]).reshape(b, s, h, dn + dr)
+    q = q.transpose(0, 2, 1, 3)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    pos = jnp.arange(s)
+    q_pe = rope(q_pe, pos, cfg.rope_theta)
+
+    c_kv = rms_norm(jnp.einsum("bsd,dr->bsr", xn, p["w_dkv"]), p["kv_norm"],
+                    cfg.norm_eps)                                   # (B,S,r)
+    k_pe = rope(jnp.einsum("bsd,dr->bsr", xn, p["w_kpe"])[:, None, :, :],
+                pos, cfg.rope_theta)                                # (B,1,S,dr)
+    k_nope = jnp.einsum("bsr,re->bse", c_kv, p["w_uk"]).reshape(
+        b, s, h, dn).transpose(0, 2, 1, 3)
+    v = jnp.einsum("bsr,re->bse", c_kv, p["w_uv"]).reshape(
+        b, s, h, dv).transpose(0, 2, 1, 3)
+
+    qf = jnp.concatenate([q_nope, q_pe], axis=-1)
+    kf = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe, (b, h, s, dr))], axis=-1)
+    o = _sdpa(qf, kf, v, causal)
+    out = jnp.einsum("bse,ed->bsd", _merge_heads(o), p["wo"])
+    return x + out, {"c_kv": c_kv, "k_pe": k_pe[:, 0]}
+
+
+def mla_decode(p: Dict, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+               cur_len: jnp.ndarray, cfg: ArchConfig
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Absorbed-weight MLA decode: cache holds compressed c_kv (B,S,r) and
+    k_pe (B,S,dr) — 512+64 floats/token vs h*(dn+dv)=4096 for materialized KV:
+    an 18× cache-memory reduction (the technique's raison d'être)."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    dn, dr, dv, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,de->bse", xn, p["wq"]).reshape(b, 1, h, dn + dr)
+    q = q.transpose(0, 2, 1, 3)                                   # (B,h,1,dn+dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = rope(q_pe, cur_len.reshape(1, 1, 1), cfg.rope_theta)
+
+    c_new = rms_norm(jnp.einsum("bsd,dr->bsr", xn, p["w_dkv"]), p["kv_norm"],
+                     cfg.norm_eps)                                 # (B,1,r)
+    kpe_new = rope(jnp.einsum("bsd,dr->bsr", xn, p["w_kpe"])[:, None],
+                   cur_len.reshape(1, 1, 1), cfg.rope_theta)[:, 0]  # (B,1,dr)
+    c_kv = cache["c_kv"].at[:, cur_len, :].set(c_new[:, 0])
+    k_pe = cache["k_pe"].at[:, cur_len, :].set(kpe_new[:, 0])
+
+    # absorb W_uk into the query:  score = (q_nope W_uk^T) · c_kv + q_pe · k_pe
+    w_uk = p["w_uk"].reshape(r, h, dn)
+    q_abs = jnp.einsum("bhsd,rhd->bhsr", q_nope, w_uk)             # (B,h,1,r)
+    logits = (jnp.einsum("bhsr,btr->bhst", q_abs.astype(jnp.float32),
+                         c_kv.astype(jnp.float32))
+              + jnp.einsum("bhsr,btr->bhst", q_pe.astype(jnp.float32),
+                           k_pe.astype(jnp.float32))) / ((dn + dr) ** 0.5)
+    mask = jnp.arange(c_kv.shape[1])[None, None, None, :] < cur_len + 1
+    logits = jnp.where(mask, logits, -1e30)
+    pr = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhst,btr->bhsr", pr, c_kv.astype(jnp.float32))  # (B,h,1,r)
+    w_uv = p["w_uv"].reshape(r, h, dv)
+    o = jnp.einsum("bhsr,rhv->bhsv", ctx, w_uv.astype(jnp.float32)
+                   ).astype(x.dtype)                               # (B,h,1,dv)
+    out = jnp.einsum("bse,ed->bsd", _merge_heads(o), p["wo"])
+    return x + out, {"c_kv": c_kv, "k_pe": k_pe}
+
+
+def mla_cache_spec(cfg: ArchConfig, batch: int, s_max: int, dtype
+                   ) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {"c_kv": jax.ShapeDtypeStruct((batch, s_max, cfg.kv_lora_rank), dtype),
+            "k_pe": jax.ShapeDtypeStruct((batch, s_max, cfg.qk_rope_dim), dtype)}

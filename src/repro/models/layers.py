@@ -1,0 +1,200 @@
+"""Model-layer primitives + parameter/sharding registry.
+
+Parameters are nested dicts of arrays. A ``ParamSet`` records, for every
+parameter: shape, dtype, init std, and a ``PartitionSpec`` — so a single
+definition yields (a) real initialization for training/smoke tests, (b)
+``jax.eval_shape`` trees for the dry-run, and (c) in/out shardings for pjit.
+
+Sharding axis convention (DESIGN.md §7):
+  "fsdp"  — placeholder resolved to ("pod","data") (multi-pod) or ("data",)
+  "tp"    — placeholder resolved to "model"
+Resolution happens in resolve_specs() so one model definition serves every mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Parameter registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ParamInfo:
+    shape: Tuple[int, ...]
+    dtype: Any
+    spec: Tuple[Optional[str], ...]       # axis names: "fsdp" | "tp" | None
+    init: str = "normal"                  # normal | zeros | ones
+    std: float = 0.02
+
+
+class ParamSet:
+    """Collects ParamInfo under nested string paths ('a/b/c')."""
+
+    def __init__(self, dtype=jnp.float32):
+        self.infos: Dict[str, ParamInfo] = {}
+        self.default_dtype = dtype
+
+    def add(self, path: str, shape: Sequence[int],
+            spec: Sequence[Optional[str]], init: str = "normal",
+            std: float = 0.02, dtype=None) -> None:
+        assert path not in self.infos, f"duplicate param {path}"
+        assert len(spec) == len(shape), (path, shape, spec)
+        self.infos[path] = ParamInfo(tuple(shape), dtype or self.default_dtype,
+                                     tuple(spec), init, std)
+
+    # -- materialization ----------------------------------------------------
+    def init_params(self, rng: jax.Array) -> Dict[str, Any]:
+        keys = jax.random.split(rng, max(len(self.infos), 1))
+        out: Dict[str, Any] = {}
+        for (path, info), key in zip(sorted(self.infos.items()), keys):
+            if info.init == "zeros":
+                val = jnp.zeros(info.shape, info.dtype)
+            elif info.init == "ones":
+                val = jnp.ones(info.shape, info.dtype)
+            else:
+                val = (jax.random.normal(key, info.shape, jnp.float32)
+                       * info.std).astype(info.dtype)
+            _set(out, path, val)
+        return out
+
+    def shape_tree(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {}
+        for path, info in self.infos.items():
+            _set(out, path, jax.ShapeDtypeStruct(info.shape, info.dtype))
+        return out
+
+    def spec_tree(self, axes: "MeshAxes") -> Dict[str, Any]:
+        out: Dict[str, Any] = {}
+        for path, info in self.infos.items():
+            _set(out, path, resolve_spec(info.spec, axes))
+        return out
+
+    def n_params(self) -> int:
+        return sum(math.prod(i.shape) for i in self.infos.values())
+
+
+def _set(tree: Dict[str, Any], path: str, val: Any) -> None:
+    parts = path.split("/")
+    for p in parts[:-1]:
+        tree = tree.setdefault(p, {})
+    tree[parts[-1]] = val
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """How placeholder axis names map onto the physical mesh.
+
+    fsdp=() replicates parameters across the data axes (inference mode: no
+    optimizer state, weights TP-only — kills the per-step FSDP all-gather).
+    """
+    fsdp: Tuple[str, ...]        # e.g. ("data",) or ("pod", "data") or ()
+    tp: str = "model"
+    batch_axes: Optional[Tuple[str, ...]] = None
+
+    @property
+    def batch(self) -> Tuple[str, ...]:
+        return self.batch_axes if self.batch_axes is not None else self.fsdp
+
+
+# ---------------------------------------------------------------------------
+# Intermediate-activation sharding hints
+# ---------------------------------------------------------------------------
+# XLA's sharding propagation sometimes materializes huge unsharded
+# intermediates (e.g. the (B,S,V) logits) when left to its own devices;
+# models insert `hint()` constraints at layer boundaries. Hints resolve
+# against the MeshAxes installed by the launcher; when none is installed
+# (CPU unit tests) they are no-ops.
+
+_HINT_AXES: Optional["MeshAxes"] = None
+
+
+def set_hint_axes(axes: Optional["MeshAxes"]) -> None:
+    global _HINT_AXES
+    _HINT_AXES = axes
+
+
+def hint(x: jnp.ndarray, *spec: Optional[str]) -> jnp.ndarray:
+    if _HINT_AXES is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, resolve_spec(tuple(spec), _HINT_AXES))
+
+
+def resolve_spec(spec: Tuple[Optional[str], ...], axes: MeshAxes) -> P:
+    def _axes_or_none(t):
+        if not t:
+            return None
+        return t if len(t) > 1 else t[0]
+
+    resolved = []
+    for s in spec:
+        if s is None:
+            resolved.append(None)
+        elif s == "fsdp":
+            resolved.append(_axes_or_none(axes.fsdp))
+        elif s == "tp":
+            resolved.append(axes.tp)
+        elif s == "batch":
+            resolved.append(_axes_or_none(axes.batch))
+        else:
+            raise ValueError(f"unknown axis placeholder {s}")
+    return P(*resolved)
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6
+             ) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * weight
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 1e4
+         ) -> jnp.ndarray:
+    """Rotary embedding. x: (..., S, D_even); positions: (..., S) or (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs   # (..., S, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    hspec = ("batch",) + (None,) * (x.ndim - 2) + ("tp",)
+    g = hint(jnp.einsum("...d,df->...f", x, w_gate), *hspec)
+    u = hint(jnp.einsum("...d,df->...f", x, w_up), *hspec)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def gelu_mlp(x: jnp.ndarray, w_in: jnp.ndarray, w_out: jnp.ndarray
+             ) -> jnp.ndarray:
+    return jnp.einsum("...f,fd->...d", jax.nn.gelu(
+        jnp.einsum("...d,df->...f", x, w_in)), w_out)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean token cross-entropy in f32. logits (..., V); labels (...)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

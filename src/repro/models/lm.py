@@ -1,0 +1,321 @@
+"""Unified decoder-only LM over repeating layer patterns.
+
+One definition serves all assigned families:
+  dense  — pattern [attn+dense]                     (qwen2/qwen3/yi/phi3v)
+  moe    — prefix dense layers + [attn+moe]          (kimi-k2, deepseek-v2-lite)
+  hybrid — pattern of 8: 7×ssm + 1×attn, moe on odd  (jamba)
+  ssm    — pattern [ssm+none]                        (mamba2)
+
+Layers are scanned over ``n_blocks`` repeats of the pattern (small HLO, fast
+multi-pod compiles); the optional dense-MLP prefix layers (MoE archs) are
+unscanned. Modality frontends (vision patches / audio frames) enter as
+precomputed embeddings concatenated ahead of token embeddings (stub per the
+assignment).
+
+Modes:
+  train(tokens, labels)        → mean CE + aux
+  prefill(tokens[, embeds])    → last-position logits + decode caches
+  decode(token, caches, len)   → next logits + updated caches
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, LayerDesc
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import ParamSet, cross_entropy, hint, rms_norm, swiglu
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+def register_mlp(ps: ParamSet, prefix: str, cfg: ArchConfig,
+                 stack: Tuple[int, ...]) -> None:
+    d, f = cfg.d_model, cfg.d_ff
+    s = tuple(stack)
+    ns = (None,) * len(s)
+    ps.add(f"{prefix}/w_gate", s + (d, f), ns + ("fsdp", "tp"))
+    ps.add(f"{prefix}/w_up", s + (d, f), ns + ("fsdp", "tp"))
+    ps.add(f"{prefix}/w_down", s + (f, d), ns + ("tp", "fsdp"))
+    ps.add(f"{prefix}/norm", s + (d,), ns + (None,), init="ones")
+
+
+def mlp_layer(p: Dict, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    return x + swiglu(rms_norm(x, p["norm"], cfg.norm_eps),
+                      p["w_gate"], p["w_up"], p["w_down"])
+
+
+def register_pattern_block(ps: ParamSet, prefix: str, cfg: ArchConfig,
+                           pattern: Tuple[LayerDesc, ...],
+                           stack: Tuple[int, ...],
+                           cross: bool = False) -> None:
+    for i, ld in enumerate(pattern):
+        pfx = f"{prefix}/l{i}"
+        if ld.kind == "attn":
+            if cfg.mla:
+                attn_mod.register_mla(ps, f"{pfx}/attn", cfg, stack)
+            else:
+                attn_mod.register_attn(ps, f"{pfx}/attn", cfg, stack)
+            if cross:
+                attn_mod.register_attn(ps, f"{pfx}/xattn", cfg, stack)
+        elif ld.kind == "ssm":
+            ssm_mod.register_ssm(ps, f"{pfx}/ssm", cfg, stack)
+        else:
+            raise ValueError(ld.kind)
+        if ld.mlp == "dense":
+            register_mlp(ps, f"{pfx}/mlp", cfg, stack)
+        elif ld.mlp == "moe":
+            moe_mod.register_moe(ps, f"{pfx}/moe", cfg, stack)
+
+
+def _cross_full(p: Dict, x: jnp.ndarray, enc_out: jnp.ndarray,
+                cfg: ArchConfig) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Cross-attention (no rope, non-causal) against encoder output."""
+    h, hk = cfg.n_heads, cfg.n_kv_heads
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = attn_mod._split_heads(jnp.einsum("bsd,de->bse", xn, p["wq"]), h)
+    k = attn_mod._split_heads(jnp.einsum("bsd,de->bse", enc_out, p["wk"]), hk)
+    v = attn_mod._split_heads(jnp.einsum("bsd,de->bse", enc_out, p["wv"]), hk)
+    o = attn_mod._sdpa(q, k, v, causal=False)
+    return x + jnp.einsum("bse,ed->bsd", attn_mod._merge_heads(o), p["wo"]), \
+        {"xk": k, "xv": v}
+
+
+def _cross_decode(p: Dict, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+                  cfg: ArchConfig) -> jnp.ndarray:
+    h = cfg.n_heads
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = attn_mod._split_heads(jnp.einsum("bsd,de->bse", xn, p["wq"]), h)
+    o = attn_mod._sdpa(q, cache["xk"], cache["xv"], causal=False)
+    return x + jnp.einsum("bse,ed->bsd", attn_mod._merge_heads(o), p["wo"])
+
+
+def apply_pattern_block(p_block: Dict, x: jnp.ndarray, cfg: ArchConfig,
+                        pattern: Tuple[LayerDesc, ...], mode: str,
+                        caches: Optional[Tuple] = None,
+                        cur_len: Optional[jnp.ndarray] = None,
+                        enc_out: Optional[jnp.ndarray] = None,
+                        cross: bool = False,
+                        causal: bool = True,
+                        attn_impl: str = "xla",
+                        want_cache: bool = False
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, Tuple]:
+    """Apply one pattern block. mode: "full" | "decode". Returns
+    (x, aux_loss, new_caches)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_caches: List[Any] = []
+    for i, ld in enumerate(pattern):
+        lp = p_block[f"l{i}"]
+        cache_i = caches[i] if caches is not None else None
+        if ld.kind == "attn":
+            if mode == "full":
+                if cfg.mla:
+                    x, c = attn_mod.mla_full(lp["attn"], x, cfg, causal=causal)
+                else:
+                    x, c = attn_mod.gqa_full(lp["attn"], x, cfg, causal=causal,
+                                             attn_impl=attn_impl)
+                if cross:
+                    x, cx = _cross_full(lp["xattn"], x, enc_out, cfg)
+                    c = {**c, **cx}
+            else:
+                if cfg.mla:
+                    x, c = attn_mod.mla_decode(lp["attn"], x, cache_i, cur_len,
+                                               cfg)
+                else:
+                    sub = {"k": cache_i["k"], "v": cache_i["v"]}
+                    x, c = attn_mod.gqa_decode(lp["attn"], x, sub, cur_len, cfg)
+                if cross:
+                    x = _cross_decode(lp["xattn"], x, cache_i, cfg)
+                    c = {**c, "xk": cache_i["xk"], "xv": cache_i["xv"]}
+        elif ld.kind == "ssm":
+            if mode == "full":
+                x, c = ssm_mod.ssm_full(lp["ssm"], x, cfg)
+            else:
+                x, c = ssm_mod.ssm_decode(lp["ssm"], x, cache_i, cfg)
+        if ld.mlp == "dense":
+            x = mlp_layer(lp["mlp"], x, cfg)
+        elif ld.mlp == "moe":
+            x, a = moe_mod.moe_layer(lp["moe"], x, cfg)
+            aux = aux + a
+        if mode == "full" and not want_cache:
+            c = ()   # train mode: no cache retention
+        new_caches.append(c)
+    return x, aux, tuple(new_caches)
+
+
+class LM:
+    """Decoder-only language model (pattern-scanned)."""
+
+    def __init__(self, cfg: ArchConfig, attn_impl: str = "xla",
+                 unroll_scan: bool = False):
+        self.cfg = cfg
+        self.attn_impl = attn_impl
+        self.unroll = unroll_scan
+        self.pattern = cfg.layer_pattern()
+        self.n_prefix = cfg.first_dense_layers
+        n_scanned = cfg.n_layers - self.n_prefix
+        assert n_scanned % len(self.pattern) == 0, cfg.name
+        self.n_blocks = n_scanned // len(self.pattern)
+        self.pdt = _dtype(cfg.param_dtype)
+        self.adt = _dtype(cfg.activation_dtype)
+
+        # vocab padded to a 128 multiple so the table shards on any TP degree
+        # (Megatron-style); padded logit columns are masked in _logits
+        self.v_pad = ((cfg.vocab_size + 127) // 128) * 128
+        ps = ParamSet(dtype=self.pdt)
+        ps.add("embed/tokens", (self.v_pad, cfg.d_model), ("tp", "fsdp"))
+        prefix_pat = (LayerDesc(kind="attn", mlp="dense"),)
+        for i in range(self.n_prefix):
+            register_pattern_block(ps, f"prefix{i}", cfg, prefix_pat, ())
+        register_pattern_block(ps, "blocks", cfg, self.pattern,
+                               (self.n_blocks,))
+        ps.add("final_norm", (cfg.d_model,), (None,), init="ones")
+        if not cfg.tie_embeddings:
+            ps.add("lm_head", (cfg.d_model, self.v_pad), ("fsdp", "tp"))
+        self.ps = ps
+        self.prefix_pattern = prefix_pat
+
+    # -- parameter plumbing --------------------------------------------------
+    def init_params(self, rng: jax.Array) -> Dict:
+        return self.ps.init_params(rng)
+
+    def n_params(self) -> int:
+        return self.ps.n_params()
+
+    # -- embedding / head ----------------------------------------------------
+    def _embed(self, params: Dict, tokens: jnp.ndarray,
+               frontend_embeds: Optional[jnp.ndarray]) -> jnp.ndarray:
+        x = params["embed"]["tokens"][tokens].astype(self.adt)
+        if frontend_embeds is not None:
+            x = jnp.concatenate([frontend_embeds.astype(self.adt), x], axis=1)
+        return hint(x, "batch", None, None)
+
+    def _logits(self, params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+        x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        if self.cfg.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["tokens"])
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+        if self.v_pad != self.cfg.vocab_size:   # mask padded vocab columns
+            col = jnp.arange(self.v_pad)
+            logits = jnp.where(col < self.cfg.vocab_size, logits, -1e30)
+        return hint(logits, "batch", None, "tp")
+
+    # -- full-sequence pass ----------------------------------------------------
+    def _run_blocks_full(self, params: Dict, x: jnp.ndarray,
+                         want_cache: bool) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                                    List, Tuple]:
+        cfg = self.cfg
+        prefix_caches = []
+        aux_total = jnp.zeros((), jnp.float32)
+        for i in range(self.n_prefix):
+            x, aux, c = apply_pattern_block(
+                params[f"prefix{i}"], x, cfg, self.prefix_pattern, "full",
+                attn_impl=self.attn_impl, want_cache=want_cache)
+            aux_total += aux
+            prefix_caches.append(c)
+
+        def block_fn(carry, p_block):
+            xx, aux_acc = carry
+            xx, aux, c = apply_pattern_block(
+                p_block, xx, cfg, self.pattern, "full",
+                attn_impl=self.attn_impl, want_cache=want_cache)
+            return (xx, aux_acc + aux), c
+
+        if cfg.remat != "none":
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat == "dots" else None)
+            block_fn = jax.checkpoint(block_fn, policy=policy)
+        (x, aux_total), caches = jax.lax.scan(block_fn, (x, aux_total),
+                                              params["blocks"],
+                                              unroll=self.unroll)
+        return x, aux_total, prefix_caches, caches
+
+    # -- public entry points ---------------------------------------------------
+    def train_loss(self, params: Dict, batch: Dict[str, jnp.ndarray]
+                   ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        cfg = self.cfg
+        x = self._embed(params, batch["tokens"], batch.get("frontend_embeds"))
+        x, aux, _, _ = self._run_blocks_full(params, x, want_cache=False)
+        logits = self._logits(params, x)
+        nfe = 0 if batch.get("frontend_embeds") is None \
+            else batch["frontend_embeds"].shape[1]
+        logits_tok = logits[:, nfe:, :]
+        ce = cross_entropy(logits_tok[:, :-1], batch["labels"][:, 1:],
+                           batch.get("loss_mask"))
+        loss = ce + aux.astype(jnp.float32)
+        return loss, {"ce": ce, "aux": aux}
+
+    def prefill(self, params: Dict, tokens: jnp.ndarray,
+                frontend_embeds: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, Tuple[List, Tuple]]:
+        x = self._embed(params, tokens, frontend_embeds)
+        x, _, prefix_caches, caches = self._run_blocks_full(params, x,
+                                                            want_cache=True)
+        logits = self._logits(params, x[:, -1:, :])
+        return logits[:, 0], (prefix_caches, caches)
+
+    def decode_step(self, params: Dict, token: jnp.ndarray,
+                    caches: Tuple[List, Tuple], cur_len: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, Tuple[List, Tuple]]:
+        """token: (B,) int32; cur_len: () — position being written."""
+        cfg = self.cfg
+        prefix_caches, block_caches = caches
+        x = params["embed"]["tokens"][token[:, None]].astype(self.adt)
+        new_prefix = []
+        for i in range(self.n_prefix):
+            x, _, c = apply_pattern_block(
+                params[f"prefix{i}"], x, cfg, self.prefix_pattern, "decode",
+                caches=prefix_caches[i], cur_len=cur_len)
+            new_prefix.append(c)
+
+        def block_fn(carry, inp):
+            xx = carry
+            p_block, cache = inp
+            xx, _, c = apply_pattern_block(p_block, xx, cfg, self.pattern,
+                                           "decode", caches=cache,
+                                           cur_len=cur_len)
+            return xx, c
+
+        x, new_caches = jax.lax.scan(block_fn, x,
+                                     (params["blocks"], block_caches),
+                                     unroll=self.unroll)
+        logits = self._logits(params, x)
+        return logits[:, 0], (new_prefix, new_caches)
+
+    # -- cache construction ------------------------------------------------------
+    def _slot_cache_spec(self, ld: LayerDesc, batch: int, s_max: int,
+                         stack: Tuple[int, ...]) -> Any:
+        cfg = self.cfg
+
+        def stacked(tree):
+            return jax.tree.map(
+                lambda sd: jax.ShapeDtypeStruct(stack + sd.shape, sd.dtype), tree)
+
+        if ld.kind == "attn":
+            if cfg.mla:
+                return stacked(attn_mod.mla_cache_spec(cfg, batch, s_max,
+                                                       self.adt))
+            return stacked(attn_mod.gqa_cache_spec(cfg, batch, s_max, self.adt))
+        return stacked(ssm_mod.ssm_cache_spec(cfg, batch, self.adt))
+
+    def decode_cache_specs(self, batch: int, s_max: int) -> Tuple[List, Tuple]:
+        prefix = [tuple(self._slot_cache_spec(ld, batch, s_max, ())
+                        for ld in self.prefix_pattern)
+                  for _ in range(self.n_prefix)]
+        blocks = tuple(self._slot_cache_spec(ld, batch, s_max, (self.n_blocks,))
+                       for ld in self.pattern)
+        return prefix, blocks
+
+    def init_decode_caches(self, batch: int, s_max: int) -> Tuple[List, Tuple]:
+        specs = self.decode_cache_specs(batch, s_max)
+        return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), specs)

@@ -1,0 +1,131 @@
+"""Mixture-of-Experts with capacity-bounded scatter dispatch.
+
+Expert parallelism: expert tensors are sharded over the "tp"/model axis. The
+dispatch is the *same machinery as the paper's parallel agent add/remove and
+sorting* (§3.2/§4.2 — DESIGN.md §2): positions-in-expert come from a prefix sum
+over token→expert assignments (the paper's prefix-sum slot reservation), and
+tokens are scattered into fixed-capacity per-expert buffers (the paper's
+fixed-capacity pools, O5). Tokens over capacity are dropped (standard GShard
+semantics; the residual path carries them).
+
+Under pjit, the scatter from data-sharded tokens into expert-sharded buffers
+lowers to the expert all-to-all/all-gather pattern — visible in the roofline
+collective term and a prime hillclimb target.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import ParamSet, hint, rms_norm, swiglu
+
+
+def expert_axes(cfg: ArchConfig) -> Tuple[str, str]:
+    """(expert-dim axis, ffn-dim axis) for 2D expert sharding.
+
+    Experts shard over the fsdp axes and the expert FFN dim over tp — the
+    partitioning under which the (e,c,d)×(e,d,f) einsums split cleanly on
+    (e@fsdp, f@tp) with an UNSHARDED contraction dim. Sharding d (fsdp) here
+    instead makes the contraction conflict and XLA falls back to fully
+    replicated expert compute (256× FLOPs — observed in the baseline dry-run;
+    EXPERIMENTS.md §Perf bring-up). Archs whose expert count does not divide
+    the largest fsdp extent (jamba: 16 experts vs 32-way multi-pod fsdp) flip
+    the assignment."""
+    if cfg.moe_ffn_unsharded:
+        return ("fsdp" if cfg.n_experts % 32 == 0 else "tp"), None
+    if cfg.n_experts % 32 == 0:
+        return "fsdp", "tp"
+    return "tp", "fsdp"
+
+
+def register_moe(ps: ParamSet, prefix: str, cfg: ArchConfig,
+                 stack: Tuple[int, ...]) -> None:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    e_ax, f_ax = expert_axes(cfg)
+    s = tuple(stack)
+    ns = (None,) * len(s)
+    ps.add(f"{prefix}/router", s + (d, e), ns + ("fsdp", None), std=0.006)
+    ps.add(f"{prefix}/w_gate", s + (e, d, f), ns + (e_ax, None, f_ax))
+    ps.add(f"{prefix}/w_up", s + (e, d, f), ns + (e_ax, None, f_ax))
+    ps.add(f"{prefix}/w_down", s + (e, f, d), ns + (e_ax, f_ax, None))
+    if cfg.n_shared_experts:
+        fs = cfg.moe_d_ff * cfg.n_shared_experts
+        ps.add(f"{prefix}/ws_gate", s + (d, fs), ns + ("fsdp", "tp"))
+        ps.add(f"{prefix}/ws_up", s + (d, fs), ns + ("fsdp", "tp"))
+        ps.add(f"{prefix}/ws_down", s + (fs, d), ns + ("tp", "fsdp"))
+    ps.add(f"{prefix}/norm", s + (d,), ns + (None,), init="ones")
+
+
+def capacity(tokens: int, cfg: ArchConfig) -> int:
+    c = math.ceil(tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, ((c + 7) // 8) * 8)     # pad to 8 for clean layouts
+
+
+def moe_layer(p: Dict, x: jnp.ndarray, cfg: ArchConfig
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D). Returns (output, router aux loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    xt = xn.reshape(b * s, d)
+    t = b * s
+    cap = capacity(t, cfg)
+
+    logits = jnp.einsum("td,de->te", xt, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_idx = jax.lax.top_k(probs, k)                    # (T,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch/GShard): E * sum_e f_e * p_e
+    me = probs.mean(axis=0)                                       # (E,)
+    assign1 = jax.nn.one_hot(expert_idx[:, 0], e, dtype=jnp.float32)
+    fe = assign1.mean(axis=0)
+    aux = e * jnp.sum(fe * me) * cfg.router_aux_coef
+
+    # position-in-expert via prefix sum over the flattened (T*k) assignments —
+    # the paper's §3.2 prefix-sum slot reservation, verbatim.
+    flat_e = expert_idx.reshape(-1)                               # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)           # (T*k, E)
+    pos_all = jnp.cumsum(onehot, axis=0) - onehot                 # before me
+    pos = jnp.take_along_axis(pos_all, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < cap                                              # drop overflow
+    pos_c = jnp.where(keep, pos, cap)                             # parked
+
+    e_ax, f_ax = expert_axes(cfg)
+    if cfg.moe_dispatch == "gather":
+        # int32 slot→token map (tiny scatter); activations move as ONE gather
+        # (lowers to a bf16 all-gather of xt instead of the f32 (E,cap,D)
+        # scatter-psum — §Perf hillclimb iteration)
+        token_ids = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+        slot_tok = jnp.zeros((e, cap + 1), jnp.int32).at[flat_e, pos_c].set(
+            token_ids)
+        slot_ok = jnp.zeros((e, cap + 1), bool).at[flat_e, pos_c].set(keep)
+        buf = xt[slot_tok[:, :cap]] * slot_ok[:, :cap, None].astype(xt.dtype)
+        buf = hint(buf, e_ax, None, None)
+    else:
+        # scatter tokens into (E, cap, D) expert buffers (fixed-capacity pools)
+        src = jnp.repeat(xt, k, axis=0)                           # (T*k, D)
+        buf = jnp.zeros((e, cap + 1, d), xt.dtype)
+        buf = buf.at[flat_e, pos_c].add(src * keep[:, None].astype(xt.dtype))
+        buf = hint(buf[:, :cap], e_ax, None, None)
+
+    # expert FFN: 2D partition (e@e_ax, f@f_ax); contraction dim unsharded
+    h = hint(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]), e_ax, None, f_ax)
+    u = hint(jnp.einsum("ecd,edf->ecf", buf, p["w_up"]), e_ax, None, f_ax)
+    out_e = hint(jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, p["w_down"]),
+                 e_ax, None, None)
+
+    # combine: gather back and weight by the (renormalized) gate
+    gathered = out_e[flat_e, jnp.minimum(pos_c, cap - 1)]         # (T*k, D)
+    gathered *= (keep[:, None] * gate.reshape(-1)[:, None]).astype(xt.dtype)
+    y = gathered.reshape(t, k, d).sum(axis=1)
+
+    if cfg.n_shared_experts:
+        y = y + swiglu(xt, p["ws_gate"], p["ws_up"], p["ws_down"])
+
+    return x + y.reshape(b, s, d), aux

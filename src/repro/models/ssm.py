@@ -1,0 +1,203 @@
+"""Mamba2 — SSD (state-space duality), chunked train/prefill + O(1) decode.
+
+The chunked SSD algorithm (Dao & Gu 2024): split the sequence into chunks of
+length L; within a chunk the output is a masked (decay-weighted) attention-like
+quadratic form; across chunks a (B*H, P, N) state is carried by a scan. Decode
+is a pure recurrence on that state — which is why the 500k-token cell is
+assigned to SSM/hybrid archs only.
+
+State caches are fixed-capacity pools (paper O5): conv window (B, d_conv-1, C)
+and SSM state (B, H, P, N), preallocated once per sequence.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import ParamSet, hint, rms_norm
+
+
+def _dims(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def register_ssm(ps: ParamSet, prefix: str, cfg: ArchConfig,
+                 stack: Tuple[int, ...]) -> None:
+    d = cfg.d_model
+    di, h, hp, n = _dims(cfg)
+    conv_dim = di + 2 * n                     # conv over (x, B, C)
+    s = tuple(stack)
+    ns = (None,) * len(s)
+    # in_proj → [z (di), x (di), B (n), C (n), dt (h)]
+    ps.add(f"{prefix}/w_in", s + (d, 2 * di + 2 * n + h), ns + ("fsdp", "tp"))
+    ps.add(f"{prefix}/conv_w", s + (cfg.ssm_conv, conv_dim), ns + (None, "tp"))
+    ps.add(f"{prefix}/conv_b", s + (conv_dim,), ns + ("tp",), init="zeros")
+    ps.add(f"{prefix}/a_log", s + (h,), ns + (None,), init="zeros")
+    ps.add(f"{prefix}/dt_bias", s + (h,), ns + (None,), init="zeros")
+    ps.add(f"{prefix}/d_skip", s + (h,), ns + (None,), init="ones")
+    ps.add(f"{prefix}/out_norm", s + (di,), ns + (None,), init="ones")
+    ps.add(f"{prefix}/w_out", s + (di, d), ns + ("tp", "fsdp"))
+    ps.add(f"{prefix}/norm", s + (d,), ns + (None,), init="ones")
+
+
+def _split_proj(cfg: ArchConfig, proj: jnp.ndarray):
+    di, h, hp, n = _dims(cfg)
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 prev: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Depthwise causal conv over time. xbc: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    if prev is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = prev
+    xp = jnp.concatenate([pad, xbc], axis=1)                   # (B, S+K-1, C)
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                bmat: jnp.ndarray, cmat: jnp.ndarray, chunk: int,
+                h0: jnp.ndarray | None = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD over a full sequence.
+
+    x: (B,S,H,P); dt: (B,S,H) (post-softplus); a: (H,) (negative);
+    bmat/cmat: (B,S,N). Returns (y (B,S,H,P), final state (B,H,P,N)).
+    """
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    l = min(chunk, s)
+    assert s % l == 0, (s, l)
+    c = s // l
+    xc = x.reshape(b, c, l, h, p)
+    dtc = dt.reshape(b, c, l, h)
+    bc = bmat.reshape(b, c, l, n)
+    cc = cmat.reshape(b, c, l, n)
+
+    da = dtc * a                                              # (B,C,L,H) ≤ 0
+    cum = jnp.cumsum(da, axis=2)                              # within-chunk
+    # intra-chunk decay matrix: exp(cum_i - cum_j) for j <= i
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,C,L,L,H)
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcln,bcmn->bclm", cc, bc)            # (B,C,L,L)
+    w = scores[..., None] * decay * dtc[:, :, None, :, :]     # (B,C,L,L,H)
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", w, xc)
+
+    # chunk states: contribution of each chunk to the carried state
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)           # (B,C,L,H)
+    st = jnp.einsum("bcln,bclh,bclhp->bchpn", bc,
+                    dtc * decay_to_end, xc)                   # (B,C,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                   # (B,C,H)
+
+    def scan_fn(hprev, inp):
+        st_c, dec_c = inp
+        hnew = hprev * dec_c[..., None, None] + st_c
+        return hnew, hprev
+
+    init = h0 if h0 is not None else jnp.zeros((b, h, p, n), x.dtype)
+    hfin, hprevs = jax.lax.scan(scan_fn,
+                                init,
+                                (st.transpose(1, 0, 2, 3, 4),
+                                 chunk_decay.transpose(1, 0, 2)))
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)                  # (B,C,H,P,N)
+
+    # inter-chunk: y += C · (decay_in * h_prev)
+    decay_in = jnp.exp(cum)                                   # (B,C,L,H)
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp", cc, decay_in, hprevs)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, hfin
+
+
+def ssm_full(p: Dict, x: jnp.ndarray, cfg: ArchConfig
+             ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence Mamba2 block. Returns (out, cache for decode handoff)."""
+    b, s, d = x.shape
+    di, h, hp, n = _dims(cfg)
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    proj = hint(jnp.einsum("bsd,de->bse", xn, p["w_in"]), "batch", None, None)
+    z, xbc_raw, dt = _split_proj(cfg, proj)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xin = xbc[..., :di].reshape(b, s, h, hp)
+    bmat = xbc[..., di:di + n]
+    cmat = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    # pad S to a chunk multiple with identity timesteps (dt=0 ⇒ decay=1 and
+    # zero state contribution), so the carried state is unaffected
+    l = min(cfg.ssm_chunk, s) if s % min(cfg.ssm_chunk, s) == 0 else cfg.ssm_chunk
+    s_pad = ((s + l - 1) // l) * l
+    if s_pad != s:
+        pz = ((0, 0), (0, s_pad - s))
+        xin_p = jnp.pad(xin, pz + ((0, 0), (0, 0)))
+        dt_p = jnp.pad(dt, pz + ((0, 0),))
+        b_p = jnp.pad(bmat, pz + ((0, 0),))
+        c_p = jnp.pad(cmat, pz + ((0, 0),))
+    else:
+        xin_p, dt_p, b_p, c_p = xin, dt, bmat, cmat
+    y, hfin = ssd_chunked(xin_p.astype(jnp.float32), dt_p, a,
+                          b_p.astype(jnp.float32), c_p.astype(jnp.float32),
+                          l)
+    y = y[:, :s]
+    y = y + xin.astype(jnp.float32) * p["d_skip"][:, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = hint(jnp.einsum("bse,ed->bsd", y, p["w_out"]), "batch", None, None)
+    # decode handoff: cache the *pre-conv* tail window + final SSM state
+    kw = cfg.ssm_conv - 1
+    conv_tail = (xbc_raw[:, s - kw:, :] if s >= kw
+                 else jnp.pad(xbc_raw, ((0, 0), (kw - s, 0), (0, 0))))
+    cache = {"conv": conv_tail, "state": hfin.astype(x.dtype)}
+    return x + out, cache
+
+
+def ssm_decode(p: Dict, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+               cfg: ArchConfig) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token recurrence. x: (B,1,D); cache: conv window + SSM state."""
+    b = x.shape[0]
+    di, h, hp, n = _dims(cfg)
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,de->bse", xn, p["w_in"])
+    z, xbc_new, dt = _split_proj(cfg, proj)
+
+    window = jnp.concatenate([cache["conv"], xbc_new], axis=1)  # (B,K,C)
+    k = p["conv_w"].shape[0]
+    conv_out = jnp.einsum("bkc,kc->bc", window[:, -k:, :], p["conv_w"])
+    xbc = jax.nn.silu(conv_out + p["conv_b"])[:, None, :]       # (B,1,C)
+
+    xin = xbc[..., :di].reshape(b, h, hp)
+    bmat = xbc[:, 0, di:di + n]
+    cmat = xbc[:, 0, di + n:]
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt1 * a)                                    # (B,H)
+    state = cache["state"].astype(jnp.float32)
+    state = (state * decay[..., None, None]
+             + jnp.einsum("bh,bhp,bn->bhpn", dt1, xin.astype(jnp.float32),
+                          bmat.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bn->bhp", state, cmat.astype(jnp.float32))
+    y = y + xin.astype(jnp.float32) * p["d_skip"][:, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return x + out, {"conv": window[:, 1:, :], "state": state.astype(x.dtype)}
+
+
+def ssm_cache_spec(cfg: ArchConfig, batch: int, dtype
+                   ) -> Dict[str, jax.ShapeDtypeStruct]:
+    di, h, hp, n = _dims(cfg)
+    return {"conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, di + 2 * n),
+                                         dtype),
+            "state": jax.ShapeDtypeStruct((batch, h, hp, n), dtype)}

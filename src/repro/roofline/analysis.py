@@ -1,0 +1,227 @@
+"""Roofline analysis from compiled dry-run artifacts (assignment §Roofline).
+
+Per (arch × shape × mesh) cell:
+  compute term    = HLO_FLOPs_per_device / 197e12        (v5e bf16 peak)
+  memory term     = HLO_bytes_per_device / 819e9         (HBM bandwidth)
+  collective term = wire_bytes_per_device / 50e9         (ICI per link)
+
+``compiled.cost_analysis()`` reports **per-device** flops/bytes (verified
+empirically in this repo). Collective bytes are NOT in cost_analysis: we parse
+the post-SPMD optimized HLO, sum operand bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, apply a
+ring-model wire factor per collective type, and multiply instructions inside
+``while`` bodies (lax.scan over layers / microbatches) by their parsed trip
+counts.
+
+Wire model (ring algorithms, n = participating devices):
+  all-reduce      2·(n-1)/n · bytes
+  all-gather      (n-1)/n   · output bytes
+  reduce-scatter  (n-1)/n   · input bytes
+  all-to-all      (n-1)/n   · bytes
+  collective-permute  1     · bytes
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+# TPU v5e hardware constants (assignment-specified)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string like 'bf16[128,4096]' or a tuple."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    op: str
+    bytes_payload: int        # raw operand/output bytes per device
+    wire_bytes: float         # ring-model bytes on the wire per device
+    count: int                # executions (trip-count multiplied)
+    group_size: int
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name → its instruction lines.
+
+    Headers are lines ending in '{' that carry a '->' signature, e.g.
+      %region_0.1_spmd (arg: (s32[], f32[16,128])) -> (s32[], ...) {
+      ENTRY %main.4_spmd (param: f32[16,128]) -> f32[] {
+    """
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        if s.endswith("{") and "->" in s:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", s)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if s.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(s)
+    return comps
+
+
+def _find_trip_count(cond_lines: List[str]) -> Optional[int]:
+    """Trip count from a while condition: compare(iv, constant), LT."""
+    consts = {}
+    for s in cond_lines:
+        m = re.match(r"%?([\w\.\-]+)\s*=\s*\w+\[\]\s*constant\((\d+)\)", s)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for s in cond_lines:
+        if "compare(" in s and "direction=LT" in s:
+            args = re.findall(r"%([\w\.\-]+)", s.split("compare(")[1])
+            for a in args:
+                if a in consts:
+                    return consts[a]
+    return None
+
+
+def _call_targets(line: str) -> List[str]:
+    """Computations invoked by an instruction line."""
+    out = []
+    for key in ("calls=", "to_apply=", "body=", "condition=", "branch_computations="):
+        for m in re.finditer(key + r"\{?%?([\w\.\-]+)", line):
+            out.append(m.group(1))
+    return out
+
+
+_WHILE_RE = re.compile(r"\)\s*while\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_COLL_RE = re.compile(
+    r"=\s*[^=]*?\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start|-done)?\(")
+
+
+def parse_collectives(hlo: str,
+                      default_group: int = 1) -> List[CollectiveStats]:
+    comps = _split_computations(hlo)
+    if not comps:
+        return []
+
+    # multipliers: propagate trip counts from while ops down the call graph
+    mult: Dict[str, float] = {name: 0.0 for name in comps}
+    called = set()
+    for lines in comps.values():
+        for s in lines:
+            called.update(_call_targets(s))
+    roots = [n for n in comps if n not in called] or [next(iter(comps))]
+
+    import collections
+    queue = collections.deque((r, 1.0) for r in roots)
+    while queue:
+        name, m = queue.popleft()
+        if name not in comps or mult.get(name, 0.0) >= m:
+            continue
+        mult[name] = m
+        for s in comps[name]:
+            if _WHILE_RE.search(s):
+                bm = re.search(r"body=%?([\w\.\-]+)", s)
+                cm = re.search(r"condition=%?([\w\.\-]+)", s)
+                tm = _TRIP_RE.search(s)
+                if tm:
+                    trip = float(tm.group(1))
+                else:
+                    tc = (_find_trip_count(comps.get(cm.group(1), []))
+                          if cm else None)
+                    trip = float(tc) if tc else 1.0
+                if bm:
+                    queue.append((bm.group(1), m * trip))
+                if cm:
+                    queue.append((cm.group(1), m))
+                continue
+            for t in _call_targets(s):
+                queue.append((t, m))
+
+    stats: List[CollectiveStats] = []
+    for name, lines in comps.items():
+        m = mult.get(name, 1.0) or 1.0
+        for s in lines:
+            cm_ = _COLL_RE.search(s)
+            if cm_ is None or cm_.group(2) == "-done":
+                continue   # -done pairs with -start; count once
+            opname = cm_.group(1)
+            lhs = s.split("=", 1)[1]
+            shape_part = lhs[:cm_.start(1) - len(s.split("=", 1)[0]) - 1]
+            payload = _shape_bytes(shape_part)
+            gm = re.search(r"replica_groups=\{\{([\d,]+)\}", s)
+            if gm:
+                group = len(gm.group(1).split(","))
+            else:
+                gm2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", s)
+                group = int(gm2.group(2)) if gm2 else default_group
+            n = max(group, 1)
+            ring = (n - 1) / n if n > 1 else 0.0
+            if opname == "all-reduce":
+                wire = 2.0 * ring * payload
+            elif opname == "collective-permute":
+                wire = float(payload)
+            else:
+                wire = ring * payload
+            stats.append(CollectiveStats(opname, payload, wire * m, int(m), n))
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    collective_breakdown: Dict[str, float]
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(cost: Dict, hlo: str, default_group: int = 1) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    colls = parse_collectives(hlo, default_group)
+    wire = sum(c.wire_bytes for c in colls)
+    breakdown: Dict[str, float] = {}
+    for c in colls:
+        breakdown[c.op] = breakdown.get(c.op, 0.0) + c.wire_bytes
+    terms = {"compute": flops / PEAK_FLOPS, "memory": byts / HBM_BW,
+             "collective": wire / ICI_BW}
+    dominant = max(terms, key=terms.get)
+    return Roofline(flops_per_device=flops, bytes_per_device=byts,
+                    wire_bytes_per_device=wire,
+                    compute_s=terms["compute"], memory_s=terms["memory"],
+                    collective_s=terms["collective"], dominant=dominant,
+                    collective_breakdown=breakdown)

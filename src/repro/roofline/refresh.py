@@ -1,0 +1,65 @@
+"""Recompute roofline terms in existing results/dryrun JSONs with the analytic
+compute term + useful-MFU fraction (no recompiles — wire/memory bytes reuse the
+recorded HLO-derived values).
+
+Usage: PYTHONPATH=src python -m repro.roofline.refresh [results_dir]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from ..configs import ARCHS, SHAPES
+from ..launch.cells import analytic_step_flops
+from . import analysis as A
+
+
+def refresh_record(rec: dict) -> dict:
+    if rec.get("status") != "ok":
+        return rec
+    cfg = ARCHS[rec["arch"]]
+    shape = SHAPES[rec["shape"]]
+    n_dev = rec["n_devices"]
+    analytic = analytic_step_flops(cfg, shape)
+    rl = rec["roofline"]
+    # keep memory/collective from the recorded HLO analysis
+    mem_bytes = rec.get("hlo_probe", {}).get("bytes accessed",
+                                             rl["bytes_per_device"])
+    wire = rl["wire_bytes_per_device"]
+    compute_s = analytic / n_dev / A.PEAK_FLOPS
+    memory_s = mem_bytes / A.HBM_BW
+    collective_s = wire / A.ICI_BW
+    step = max(compute_s, memory_s, collective_s)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    rl.update(flops_per_device=analytic / n_dev, bytes_per_device=mem_bytes,
+              compute_s=compute_s, memory_s=memory_s,
+              collective_s=collective_s,
+              dominant=max(terms, key=terms.get))
+    rec["analytic_flops_global"] = analytic
+    rec["useful_flops_ratio"] = rec["model_flops"] / analytic
+    rec["roofline_fraction"] = (rec["model_flops"] / n_dev / A.PEAK_FLOPS
+                                / step) if step else None
+    rec["step_time_bound_s"] = step
+    return rec
+
+
+def main() -> None:
+    results_dir = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+    for name in sorted(os.listdir(results_dir)):
+        if not name.endswith(".json"):
+            continue
+        path = os.path.join(results_dir, name)
+        with open(path) as f:
+            rec = json.load(f)
+        rec = refresh_record(rec)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    print("refreshed", results_dir)
+
+
+if __name__ == "__main__":
+    main()

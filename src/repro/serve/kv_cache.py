@@ -1,0 +1,171 @@
+"""Paged KV cache — the paper's pool allocator (§4.3) transplanted to serving.
+
+BioDynaMo's NumaPoolAllocator: preallocated equal-sized elements, a central
+free list, constant-time alloc/free, metadata at segment heads. The serving
+analogue allocates *KV pages* (fixed ``page_size`` tokens × all layers) from a
+preallocated pool with an array-based free-list stack:
+
+  alloc  = pop from free stack      O(1)
+  free   = push page ids back       O(1) per page (vectorized for a sequence)
+  lookup = block_table[seq, token // page_size]
+
+Like the paper's allocator, memory overhead is bounded (≤ page_size-1 wasted
+slots per sequence) while fragmentation-free growth/shrink of sequences is
+constant-time — exactly the property that lets continuous batching admit and
+retire sequences every step (paper §3.2 parallel add/remove).
+
+All state is a pytree; every operation is jit-compatible (fixed shapes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheSpec:
+    n_layers: int
+    n_kv_heads: int
+    d_head: int
+    page_size: int = 16
+    n_pages: int = 1024
+    max_seqs: int = 64
+    max_pages_per_seq: int = 256
+    dtype: str = "bfloat16"
+
+    @property
+    def _dt(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PagedCacheState:
+    k_pages: jnp.ndarray       # (L, P, page, Hkv, Dh)
+    v_pages: jnp.ndarray
+    free_stack: jnp.ndarray    # (P,) page ids; valid entries [0, n_free)
+    n_free: jnp.ndarray        # ()
+    block_table: jnp.ndarray   # (max_seqs, max_pages_per_seq) int32, -1 empty
+    seq_len: jnp.ndarray       # (max_seqs,) int32
+    seq_active: jnp.ndarray    # (max_seqs,) bool
+
+
+def init_cache(spec: PagedCacheSpec) -> PagedCacheState:
+    dt = spec._dt
+    shape = (spec.n_layers, spec.n_pages, spec.page_size, spec.n_kv_heads,
+             spec.d_head)
+    return PagedCacheState(
+        k_pages=jnp.zeros(shape, dt),
+        v_pages=jnp.zeros(shape, dt),
+        free_stack=jnp.arange(spec.n_pages, dtype=jnp.int32),
+        n_free=jnp.asarray(spec.n_pages, jnp.int32),
+        block_table=jnp.full((spec.max_seqs, spec.max_pages_per_seq), -1,
+                             jnp.int32),
+        seq_len=jnp.zeros((spec.max_seqs,), jnp.int32),
+        seq_active=jnp.zeros((spec.max_seqs,), bool),
+    )
+
+
+def admit_sequence(spec: PagedCacheSpec, st: PagedCacheState, slot: jnp.ndarray,
+                   prompt_len: jnp.ndarray) -> Tuple[PagedCacheState, jnp.ndarray]:
+    """Reserve pages for a prompt of ``prompt_len`` tokens in ``slot``.
+
+    Returns (state, ok). ok=False (state unchanged) if the pool lacks pages —
+    the caller queues the request (admission control).
+    """
+    need = (prompt_len + spec.page_size - 1) // spec.page_size
+    ok = (need <= st.n_free) & ~st.seq_active[slot]
+
+    def do(st):
+        idx = jnp.arange(spec.max_pages_per_seq, dtype=jnp.int32)
+        take = idx < need
+        # pop `need` pages from the top of the stack
+        stack_pos = st.n_free - 1 - idx
+        pages = jnp.where(take, st.free_stack[jnp.maximum(stack_pos, 0)], -1)
+        row = jnp.where(take, pages, st.block_table[slot])
+        return dataclasses.replace(
+            st,
+            n_free=st.n_free - need,
+            block_table=st.block_table.at[slot].set(row),
+            seq_len=st.seq_len.at[slot].set(prompt_len),
+            seq_active=st.seq_active.at[slot].set(True),
+        )
+
+    return jax.lax.cond(ok, do, lambda s: s, st), ok
+
+
+def release_sequence(spec: PagedCacheSpec, st: PagedCacheState,
+                     slot: jnp.ndarray) -> PagedCacheState:
+    """Free all pages of a finished sequence (O(pages), fully vectorized)."""
+    row = st.block_table[slot]
+    held = row >= 0
+    n_rel = jnp.sum(held.astype(jnp.int32))
+    # push pages onto the stack: positions n_free .. n_free+n_rel-1
+    dst = st.n_free + jnp.cumsum(held.astype(jnp.int32)) - 1
+    dst = jnp.where(held, dst, spec.n_pages)      # parked → dropped
+    stack = st.free_stack.at[dst].set(row, mode="drop")
+    return dataclasses.replace(
+        st,
+        free_stack=stack,
+        n_free=st.n_free + n_rel,
+        block_table=st.block_table.at[slot].set(
+            jnp.full((spec.max_pages_per_seq,), -1, jnp.int32)),
+        seq_len=st.seq_len.at[slot].set(0),
+        seq_active=st.seq_active.at[slot].set(False),
+    )
+
+
+def append_token(spec: PagedCacheSpec, st: PagedCacheState,
+                 k_new: jnp.ndarray, v_new: jnp.ndarray
+                 ) -> Tuple[PagedCacheState, jnp.ndarray]:
+    """Write one token of KV for every active slot; grow pages when needed.
+
+    k_new/v_new: (L, max_seqs, Hkv, Dh). Returns (state, grew_ok (max_seqs,)).
+    """
+    pos = st.seq_len                                   # (S,)
+    page_idx = pos // spec.page_size
+    off = pos % spec.page_size
+    needs_page = (off == 0) & st.seq_active
+    n_need = jnp.sum(needs_page.astype(jnp.int32))
+    ok = n_need <= st.n_free
+
+    # allocate one page per slot needing growth (prefix-sum slot reservation —
+    # paper §3.2 again)
+    order = jnp.cumsum(needs_page.astype(jnp.int32)) - 1     # rank among needers
+    stack_pos = st.n_free - 1 - order
+    new_pages = jnp.where(needs_page & ok,
+                          st.free_stack[jnp.maximum(stack_pos, 0)], -1)
+    bt = st.block_table.at[jnp.arange(spec.max_seqs), page_idx].set(
+        jnp.where(needs_page & ok, new_pages,
+                  st.block_table[jnp.arange(spec.max_seqs), page_idx]))
+    n_free = st.n_free - jnp.where(ok, n_need, 0)
+
+    phys = bt[jnp.arange(spec.max_seqs), page_idx]           # (S,)
+    phys_safe = jnp.maximum(phys, 0)
+    write = st.seq_active & (phys >= 0) & ok
+    kp = st.k_pages.at[:, phys_safe, off].set(
+        jnp.where(write[None, :, None, None], k_new, st.k_pages[:, phys_safe, off]))
+    vp = st.v_pages.at[:, phys_safe, off].set(
+        jnp.where(write[None, :, None, None], v_new, st.v_pages[:, phys_safe, off]))
+    return dataclasses.replace(
+        st, k_pages=kp, v_pages=vp, block_table=bt, n_free=n_free,
+        seq_len=jnp.where(write, st.seq_len + 1, st.seq_len)), write
+
+
+def gather_kv(spec: PagedCacheSpec, st: PagedCacheState, layer: jnp.ndarray,
+              slot: jnp.ndarray, s_max: int
+              ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Materialize (s_max, Hkv, Dh) K/V for one sequence (attention view)."""
+    n_pg = s_max // spec.page_size
+    pages = st.block_table[slot, :n_pg]                      # (n_pg,)
+    pages_safe = jnp.maximum(pages, 0)
+    k = st.k_pages[layer, pages_safe].reshape(s_max, spec.n_kv_heads,
+                                              spec.d_head)
+    v = st.v_pages[layer, pages_safe].reshape(s_max, spec.n_kv_heads,
+                                              spec.d_head)
+    valid = jnp.arange(s_max) < st.seq_len[slot]
+    return k, v, valid

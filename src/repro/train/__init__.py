@@ -1,0 +1,4 @@
+"""repro.train — in-house AdamW, train_step factory, fault-tolerant checkpoints."""
+from .optimizer import AdamWConfig, apply_updates, init_state, schedule
+from .train_step import make_decode_step, make_prefill_step, make_train_step
+from . import checkpoint

@@ -1,0 +1,89 @@
+"""AdamW (+ global-norm clipping) — built in-house, shard-friendly.
+
+Moments are stored in a configurable dtype: fp32 by default, bf16 for the
+1T-param config so optimizer state fits the 512-chip footprint (DESIGN.md §7).
+Optimizer state mirrors the parameter tree, so pjit shards it exactly like the
+parameters (ZeRO-style: FSDP-sharded params ⇒ FSDP-sharded moments for free).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"       # "bfloat16" for the 1T config
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay (standard LM schedule)."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def init_state(cfg: AdamWConfig, params: Any) -> Dict[str, Any]:
+    dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.moment_dtype]
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(cfg: AdamWConfig, params: Any, grads: Any,
+                  state: Dict[str, Any]
+                  ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu_n = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+        nu_n = b2 * nu.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = mu_n / bc1
+        vhat = nu_n / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        p_n = p.astype(jnp.float32) - lr * delta
+        return p_n.astype(p.dtype), mu_n.astype(mu.dtype), nu_n.astype(nu.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    out = [upd(p, g, mu, nu)
+           for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}

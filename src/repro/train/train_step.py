@@ -1,0 +1,94 @@
+"""train_step / serve_step factories — what the dry-run lowers and drivers run.
+
+``make_train_step`` returns a pure function (params, opt_state, batch, [rng])
+→ (params, opt_state, metrics) with optional microbatch gradient accumulation
+(a lax.scan over microbatches — activation memory ∝ 1/n_micro, FLOPs
+unchanged; required to fit the 1T MoE config's dispatch buffers, DESIGN.md §7).
+
+``make_prefill_step`` / ``make_decode_step`` are the serving entry points the
+decode/prefill dry-run cells lower.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import optimizer as opt_mod
+
+
+def make_train_step(model, opt_cfg: opt_mod.AdamWConfig,
+                    n_microbatches: int = 1,
+                    grad_sync_dtype: Optional[str] = None) -> Callable:
+    """grad_sync_dtype='bfloat16' casts gradients before the data-parallel
+    reduction — the DP all-reduce/reduce-scatter then moves half the wire
+    bytes (gradient compression; measurable in the roofline collective term).
+    Moments still accumulate the dequantized f32 value."""
+    sync_dt = {None: None, "float32": None,
+               "bfloat16": jnp.bfloat16}[grad_sync_dtype]
+
+    def loss_fn(params, batch):
+        loss, metrics = model.train_loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compress(g):
+        if sync_dt is None:
+            return g
+        return jax.tree.map(lambda x: x.astype(sync_dt), g)
+
+    def train_step(params, opt_state, batch):
+        if n_microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = compress(grads)
+        else:
+            def micro(i, batch=batch):
+                return jax.tree.map(
+                    lambda x: x.reshape((n_microbatches,
+                                         x.shape[0] // n_microbatches)
+                                        + x.shape[1:])[i], batch)
+
+            def body(carry, i):
+                g_acc, l_acc = carry
+                (l, m), g = grad_fn(params, micro(i))
+                g = compress(g)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                     g_acc, g)
+                return (g_acc, l_acc + l), ()
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (grads, loss), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)),
+                jnp.arange(n_microbatches))
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            loss = loss / n_microbatches
+            metrics = {}
+        params, opt_state, om = opt_mod.apply_updates(opt_cfg, params, grads,
+                                                      opt_state)
+        return params, opt_state, {"loss": loss, **om}
+
+    return train_step
+
+
+def make_prefill_step(model) -> Callable:
+    def prefill_step(params, batch):
+        fe = batch.get("frontend_embeds")
+        if fe is not None:
+            logits, caches = model.prefill(params, batch["tokens"], fe)
+        else:
+            logits, caches = model.prefill(params, batch["tokens"])
+        return logits, caches
+
+    return prefill_step
+
+
+def make_decode_step(model) -> Callable:
+    def decode_step(params, token, caches, cur_len):
+        return model.decode_step(params, token, caches, cur_len)
+
+    return decode_step

@@ -1,0 +1,65 @@
+"""Parallel add/remove (paper §3.2): compaction + birth-commit invariants."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import agents, compaction
+
+
+def _pool_with_alive(alive_np):
+    c = len(alive_np)
+    pool = agents.make_pool(c, position=jnp.arange(3 * c, dtype=jnp.float32
+                                                   ).reshape(c, 3))
+    return dataclasses.replace(pool, alive=jnp.asarray(alive_np))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.booleans(), min_size=1, max_size=128))
+def test_compaction_invariants(alive):
+    """Property (paper's ResourceManager invariant): after compaction live agents
+    occupy [0, n_live) in stable order and no live agent is lost."""
+    alive_np = np.asarray(alive)
+    pool = _pool_with_alive(alive_np)
+    out = compaction.compact(pool)
+    n = int(alive_np.sum())
+    assert int(out.n_live) == n
+    got_alive = np.asarray(out.alive)
+    assert got_alive[:n].all() and not got_alive[n:].any()
+    # stable order of survivors
+    exp = np.asarray(pool.position)[alive_np]
+    np.testing.assert_array_equal(np.asarray(out.position)[:n], exp)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 20), st.integers(0, 20), st.integers(8, 48))
+def test_birth_commit(n_live, n_births, cap):
+    n_live = min(n_live, cap)
+    pool = agents.make_pool(cap, n_live=n_live)
+    pool = dataclasses.replace(
+        pool, position=pool.position.at[:].set(1.0))
+    q = {"position": jnp.full((24, 3), 7.0),
+         "diameter": jnp.full((24,), 3.0),
+         "agent_type": jnp.full((24,), 5, jnp.int32)}
+    valid = jnp.arange(24) < n_births
+    out = compaction.commit_births(pool, q, valid, jnp.int32(9))
+    expected = min(cap, n_live + n_births)
+    assert int(out.n_live) == expected
+    ov = int(compaction.birth_overflow(pool, valid))
+    assert ov == max(0, n_live + n_births - cap)
+    if expected > n_live:
+        born = np.asarray(out.position)[n_live:expected]
+        np.testing.assert_array_equal(born, np.full((expected - n_live, 3), 7.0))
+        assert (np.asarray(out.born_iter)[n_live:expected] == 9).all()
+        assert np.asarray(out.moved)[n_live:expected].all()   # newborns wake region
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.booleans(), min_size=1, max_size=128))
+def test_active_index_list(active):
+    a = np.asarray(active)
+    idx, n = compaction.active_index_list(jnp.asarray(a))
+    assert int(n) == a.sum()
+    np.testing.assert_array_equal(np.asarray(idx)[:int(n)], np.nonzero(a)[0])

@@ -1,0 +1,94 @@
+"""Distributed ABM engine: multi-shard == single-device (subprocess test).
+
+The main pytest process must keep the default 1-CPU view (conftest contract),
+so the 8-device shard_map run executes in a subprocess with
+--xla_force_host_platform_device_count=8.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import EngineConfig, ForceParams, Simulation
+    from repro.core import distributed as D
+
+    rng = np.random.default_rng(0)
+    N = 400
+    SIDE = 64.0
+    cfg = EngineConfig(capacity=512, domain_lo=(0, 0, 0),
+                       domain_hi=(SIDE,) * 3, interaction_radius=4.0,
+                       dt=0.1, max_per_box=64, query_chunk=128,
+                       force=ForceParams(max_displacement=0.5))
+    pos = rng.uniform(2, SIDE - 2, (N, 3)).astype(np.float32)
+    dia = np.full(N, 3.0, np.float32)
+
+    # ---- single-device reference (forces only) ----
+    sim = Simulation(cfg, [])
+    st = sim.init_state(pos, diameter=dia)
+    for _ in range(5):
+        st = sim.step(st)
+    ref_pos = np.asarray(st.pool.position)[np.asarray(st.pool.alive)]
+    ref_sorted = ref_pos[np.lexsort(ref_pos.T)]
+
+    # ---- distributed (8 slabs) ----
+    n_shards = 8
+    dcfg = D.DistConfig(engine=cfg, n_shards=n_shards, local_capacity=256,
+                        halo_capacity=128, migrate_capacity=64)
+    channels = {
+        "position": jnp.asarray(np.pad(pos, ((0, 112), (0, 0)))),
+        "diameter": jnp.asarray(np.pad(dia, (0, 112))),
+        "agent_type": jnp.zeros(512, jnp.int32),
+        "alive": jnp.asarray(np.arange(512) < N),
+    }
+    bounds = D.quantile_boundaries(channels["position"][:, 0],
+                                   channels["alive"], n_shards, 0.0, SIDE)
+    sharded = D.partition_global(channels, bounds, dcfg)
+    mesh = jax.make_mesh((n_shards,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    step = D.make_distributed_step(dcfg, mesh)
+    stats = None
+    for _ in range(5):
+        sharded, stats = step(sharded, bounds)
+    out_alive = np.asarray(sharded["alive"])
+    out_pos = np.asarray(sharded["position"])[out_alive]
+    out_sorted = out_pos[np.lexsort(out_pos.T)]
+
+    result = {
+        "n_ref": int(len(ref_sorted)), "n_dist": int(len(out_sorted)),
+        "max_err": float(np.abs(ref_sorted - out_sorted).max())
+                   if len(ref_sorted) == len(out_sorted) else -1.0,
+        "halo_overflow": int(np.asarray(stats["halo_overflow"]).sum()),
+        "migrate_overflow": int(np.asarray(stats["migrate_overflow"]).sum()),
+        "n_live_per_shard": np.asarray(stats["n_live"]).ravel().tolist(),
+    }
+    print("RESULT " + json.dumps(result))
+""")
+
+
+def test_distributed_matches_single_device():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    res = json.loads(line[len("RESULT "):])
+    assert res["halo_overflow"] == 0
+    assert res["migrate_overflow"] == 0
+    assert res["n_ref"] == res["n_dist"], res
+    assert 0 <= res["max_err"] < 1e-3, res
+    # population balance: quantile slabs hold comparable counts
+    counts = res["n_live_per_shard"]
+    assert max(counts) - min(counts) <= 0.5 * max(counts), counts

@@ -1,0 +1,146 @@
+"""Engine integration: the paper's five simulation archetypes at test scale."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, ForceParams, Simulation
+from repro.core.behaviors import (GrowDivide, Infection, RandomDeath,
+                                  RandomWalk, Chemotaxis, Secretion,
+                                  INFECTED, SUSCEPTIBLE)
+from repro.core import diffusion as D
+
+
+def test_proliferation_grows(rng):
+    cfg = EngineConfig(capacity=1024, domain_lo=(0, 0, 0), domain_hi=(80, 80, 80),
+                       interaction_radius=14.0, dt=0.2, max_per_box=64,
+                       force=ForceParams(max_displacement=1.0))
+    sim = Simulation(cfg, [GrowDivide(rate=2.0, threshold_diameter=12.0)])
+    pos = rng.uniform(30, 50, (32, 3)).astype(np.float32)
+    st = sim.init_state(pos, diameter=np.full(32, 8.0, np.float32))
+    st = sim.run(st, 25, check_overflow=True)
+    assert int(st.stats["n_live"]) > 32
+    assert not np.isnan(np.asarray(st.pool.position)).any()
+    assert not np.isnan(np.asarray(st.pool.diameter)).any()
+
+
+def test_epidemiology_spreads(rng):
+    cfg = EngineConfig(capacity=1024, domain_lo=(0, 0, 0), domain_hi=(40, 40, 40),
+                       interaction_radius=3.0, use_forces=False)
+    sim = Simulation(cfg, [RandomWalk(sigma=0.8),
+                           Infection(radius=3.0, beta=0.5, recovery_time=20)])
+    pos = rng.uniform(0, 40, (800, 3)).astype(np.float32)
+    types = np.zeros(800, np.int32)
+    types[:8] = INFECTED
+    st = sim.init_state(pos, diameter=np.full(800, 1.0, np.float32),
+                        agent_type=types,
+                        extra_init={"infect_timer": np.full(800, 20, np.int32)})
+    st = sim.run(st, 40)
+    t = np.asarray(st.pool.agent_type[:800])
+    assert ((t == 1) | (t == 2)).sum() > 8, "epidemic must spread beyond seeds"
+    assert int(st.stats["n_live"]) == 800  # SIR conserves population
+
+
+def test_static_detection_quiesces():
+    cfg = EngineConfig(capacity=512, domain_lo=(0, 0, 0), domain_hi=(40, 40, 40),
+                       interaction_radius=4.0, detect_static=True, dt=0.1)
+    sim = Simulation(cfg, [])
+    xs = np.stack(np.meshgrid(*[np.arange(5) * 6.0 + 5] * 3), -1
+                  ).reshape(-1, 3).astype(np.float32)
+    st = sim.init_state(xs, diameter=np.full(len(xs), 2.0, np.float32))
+    st = sim.step(st)                       # iteration 0: everything active
+    assert int(st.stats["n_active"]) == len(xs)
+    st = sim.step(st)                       # iteration 1: all static
+    assert int(st.stats["n_active"]) == 0
+
+
+def test_static_detection_wakes_on_insertion():
+    """Condition (iii): adding an agent wakes its neighborhood."""
+    cfg = EngineConfig(capacity=512, domain_lo=(0, 0, 0), domain_hi=(40, 40, 40),
+                       interaction_radius=4.0, detect_static=True, dt=0.1,
+                       force=ForceParams(move_eps=1e-6))
+    sim = Simulation(cfg, [GrowDivide(rate=0.0, threshold_diameter=3.9)])
+    # separated dimers; rate 0 so nothing divides after warmup
+    xs = np.stack(np.meshgrid(*[np.arange(4) * 8.0 + 4] * 3), -1
+                  ).reshape(-1, 3).astype(np.float32)
+    st = sim.init_state(xs, diameter=np.full(len(xs), 2.0, np.float32))
+    for _ in range(3):
+        st = sim.step(st)
+    assert int(st.stats["n_active"]) == 0
+    # bump one diameter over the division threshold -> a birth occurs ->
+    # neighborhood must wake next iteration
+    pool = st.pool
+    dia = pool.diameter.at[0].set(3.95)
+    st = dataclasses.replace(st, pool=dataclasses.replace(pool, diameter=dia))
+    st = sim.step(st)                      # division happens here
+    assert int(st.stats["births"]) >= 1
+    st = sim.step(st)                      # newborn + mother active now
+    assert int(st.stats["n_active"]) >= 2
+
+
+def test_oncology_death_compacts(rng):
+    cfg = EngineConfig(capacity=512, domain_lo=(0, 0, 0), domain_hi=(30, 30, 30),
+                       interaction_radius=3.0, use_forces=False)
+    sim = Simulation(cfg, [RandomDeath(rate=0.2)])
+    pos = rng.uniform(0, 30, (400, 3)).astype(np.float32)
+    st = sim.init_state(pos, diameter=np.full(400, 1.0, np.float32))
+    st = sim.run(st, 10)
+    n = int(st.stats["n_live"])
+    assert n < 400
+    alive = np.asarray(st.pool.alive)
+    assert alive[:n].all() and not alive[n:].any()   # compaction invariant
+
+
+def test_clustering_with_diffusion(rng):
+    dspec = D.DiffusionSpec(dims=(16, 16, 16), coefficient=0.4, decay=0.01,
+                            voxel=2.0)
+    cfg = EngineConfig(capacity=256, domain_lo=(0, 0, 0), domain_hi=(32, 32, 32),
+                       interaction_radius=3.0, use_forces=False,
+                       diffusion=dspec)
+    sim = Simulation(cfg, [Secretion(rate=2.0), Chemotaxis(speed=0.4)])
+    pos = rng.uniform(4, 28, (128, 3)).astype(np.float32)
+    st = sim.init_state(pos, diameter=np.full(128, 1.0, np.float32))
+    p0 = np.asarray(st.pool.position[:128])
+    st = sim.run(st, 30)
+    p1 = np.asarray(st.pool.position[:128])
+    # mean pairwise distance must shrink (agents chase their own secretion)
+    def mpd(p):
+        d = np.sqrt(((p[:, None] - p[None]) ** 2).sum(-1))
+        return d[np.triu_indices(len(p), 1)].mean()
+    assert mpd(p1) < mpd(p0)
+    assert float(st.conc.max()) > 0.0
+
+
+def test_sort_frequency_preserves_semantics(rng):
+    """Sorting is a pure layout optimization: population statistics match."""
+    pos = rng.uniform(10, 50, (200, 3)).astype(np.float32)
+    results = []
+    for freq in (0, 1, 5):
+        cfg = EngineConfig(capacity=1024, domain_lo=(0, 0, 0),
+                           domain_hi=(60, 60, 60), interaction_radius=12.0,
+                           dt=0.2, sort_frequency=freq, max_per_box=64,
+                           force=ForceParams(max_displacement=1.0))
+        sim = Simulation(cfg, [GrowDivide(rate=1.0, threshold_diameter=12.0)])
+        st = sim.init_state(pos, diameter=np.full(200, 9.0, np.float32))
+        st = sim.run(st, 12)
+        results.append(int(st.stats["n_live"]))
+    assert results[0] == results[1] == results[2]
+
+
+def test_brute_force_env_matches_grid(rng):
+    """Same simulation under brute_force and uniform_grid environments."""
+    pos = rng.uniform(10, 30, (60, 3)).astype(np.float32)
+    finals = {}
+    for env in ("uniform_grid", "brute_force"):
+        cfg = EngineConfig(capacity=128, domain_lo=(0, 0, 0),
+                           domain_hi=(40, 40, 40), interaction_radius=6.0,
+                           dt=0.1, environment=env, max_per_box=64,
+                           force=ForceParams(max_displacement=0.5))
+        sim = Simulation(cfg, [])
+        st = sim.init_state(pos, diameter=np.full(60, 5.0, np.float32))
+        st = sim.run(st, 5)
+        finals[env] = np.asarray(st.pool.position[:60])
+    np.testing.assert_allclose(finals["uniform_grid"], finals["brute_force"],
+                               rtol=1e-5, atol=1e-5)

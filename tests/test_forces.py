@@ -1,0 +1,61 @@
+"""Collision force (paper §5 / Cortex3D): physics sanity properties."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import forces as F
+
+P = F.ForceParams()
+
+
+def _f(p1, d1, p2, d2, adhesion=None, t1=0, t2=0):
+    out = F.pair_force(jnp.asarray([p1], jnp.float32), jnp.asarray([d1], jnp.float32),
+                       jnp.asarray([t1], jnp.int32),
+                       jnp.asarray([[p2]], jnp.float32), jnp.asarray([[d2]], jnp.float32),
+                       jnp.asarray([[t2]], jnp.int32),
+                       jnp.asarray([[True]]), P, adhesion)
+    return np.asarray(out[0, 0])
+
+
+def test_no_force_out_of_range():
+    f = _f([0, 0, 0], 2.0, [5, 0, 0], 2.0)
+    np.testing.assert_allclose(f, 0.0)
+
+
+def test_repulsion_pushes_apart():
+    f = _f([0, 0, 0], 2.0, [1.0, 0, 0], 2.0)   # overlap delta = 1
+    assert f[0] < 0 and abs(f[1]) < 1e-12 and abs(f[2]) < 1e-12
+
+
+def test_adhesion_pulls_in_band():
+    adh = jnp.asarray([[1.0]])
+    # gap 0.2 < adhesion band 0.4 -> net attraction
+    f = _f([0, 0, 0], 2.0, [2.2, 0, 0], 2.0, adhesion=adh)
+    assert f[0] > 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0.5, 4.0), st.floats(0.5, 4.0),
+       st.floats(-3, 3), st.floats(-3, 3), st.floats(-3, 3))
+def test_newton_third_law(d1, d2, x, y, z):
+    """F_ij == -F_ji (pairwise symmetry of the Cortex3D force)."""
+    if abs(x) + abs(y) + abs(z) < 1e-3:
+        return
+    f12 = _f([0, 0, 0], d1, [x, y, z], d2)
+    f21 = _f([x, y, z], d2, [0, 0, 0], d1)
+    np.testing.assert_allclose(f12, -f21, rtol=1e-4, atol=1e-5)
+
+
+def test_displacement_cap():
+    f = jnp.asarray([[1e6, 0.0, 0.0]])
+    dx = F.displacement(f, P, dt=1.0)
+    assert abs(float(jnp.linalg.norm(dx)) - P.max_displacement) < 1e-4
+
+
+def test_monotone_in_overlap():
+    mags = []
+    for gap in (1.5, 1.0, 0.5, 0.1):
+        f = _f([0, 0, 0], 2.0, [gap, 0, 0], 2.0)
+        mags.append(np.linalg.norm(f))
+    assert all(b > a for a, b in zip(mags, mags[1:]))

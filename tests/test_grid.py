@@ -1,0 +1,116 @@
+"""Uniform grid (paper §3.1): every environment must exactly match brute force."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import agents, grid as G
+
+RADIUS = 2.0
+
+
+def _mk(rng, n, c, lo=0.0, hi=20.0):
+    pos = rng.uniform(lo, hi, (n, 3)).astype(np.float32)
+    pool = agents.make_pool(c, position=jnp.asarray(pos),
+                            diameter=jnp.full((n,), 1.0))
+    return pos, pool
+
+
+def _brute_counts(pos, r):
+    d2 = ((pos[:, None, :] - pos[None, :, :]) ** 2).sum(-1)
+    return ((d2 <= r * r) & ~np.eye(len(pos), dtype=bool)).sum(1)
+
+
+def _count_pair_fn(q, nbr, valid, q_slot):
+    d = nbr["position"] - q["position"][:, None, :]
+    ok = valid & nbr["alive"] & ((d * d).sum(-1) <= RADIUS ** 2)
+    return {"cnt": ok.sum(-1).astype(jnp.int32)}
+
+
+@pytest.mark.parametrize("n,c,chunk", [(50, 64, 16), (200, 256, 64),
+                                       (333, 512, 128)])
+def test_uniform_grid_matches_brute_force(rng, n, c, chunk):
+    pos, pool = _mk(rng, n, c)
+    spec = G.GridSpec(dims=(10, 10, 10), max_per_box=32, query_chunk=chunk)
+    gs = G.build(spec, pool, jnp.zeros(3), jnp.asarray(RADIUS))
+    channels = {k: v for k, v in pool.channels().items()
+                if not k.startswith("extra.")}
+    out = G.neighbor_apply(spec, gs, channels,
+                           jnp.arange(c, dtype=jnp.int32), pool.n_live,
+                           _count_pair_fn, {"cnt": ((), jnp.int32)})
+    np.testing.assert_array_equal(np.asarray(out["cnt"][:n]), _brute_counts(pos, RADIUS))
+    assert np.asarray(out["cnt"][n:]).sum() == 0   # dead slots untouched
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 120), st.integers(0, 10_000))
+def test_uniform_grid_property(n, seed):
+    """Property: grid neighbor counts == brute force for random configurations."""
+    rng = np.random.default_rng(seed)
+    pos, pool = _mk(rng, n, max(n, 8))
+    spec = G.GridSpec(dims=(10, 10, 10), max_per_box=max(n, 8), query_chunk=32)
+    gs = G.build(spec, pool, jnp.zeros(3), jnp.asarray(RADIUS))
+    channels = {k: v for k, v in pool.channels().items()
+                if not k.startswith("extra.")}
+    out = G.neighbor_apply(spec, gs, channels,
+                           jnp.arange(pool.capacity, dtype=jnp.int32),
+                           pool.n_live, _count_pair_fn, {"cnt": ((), jnp.int32)})
+    np.testing.assert_array_equal(np.asarray(out["cnt"][:n]),
+                                  _brute_counts(pos, RADIUS))
+
+
+def test_overflow_flag(rng):
+    # 100 agents in one box -> max_count must exceed a small K
+    pos = rng.uniform(0.0, 1.0, (100, 3)).astype(np.float32)
+    pool = agents.make_pool(128, position=jnp.asarray(pos))
+    spec = G.GridSpec(dims=(8, 8, 8), max_per_box=8)
+    gs = G.build(spec, pool, jnp.zeros(3), jnp.asarray(2.0))
+    assert int(gs.max_count) == 100
+
+
+def test_dead_agents_excluded(rng):
+    pos, pool = _mk(rng, 64, 64)
+    alive = pool.alive.at[10:20].set(False)
+    pool = dataclasses.replace(pool, alive=alive)
+    spec = G.GridSpec(dims=(10, 10, 10), max_per_box=64, query_chunk=32)
+    gs = G.build(spec, pool, jnp.zeros(3), jnp.asarray(RADIUS))
+    channels = {k: v for k, v in pool.channels().items()
+                if not k.startswith("extra.")}
+    out = G.neighbor_apply(spec, gs, channels,
+                           jnp.arange(64, dtype=jnp.int32), jnp.int32(64),
+                           _count_pair_fn, {"cnt": ((), jnp.int32)})
+    keep = np.asarray(alive)
+    sub = pos[keep]
+    d2 = ((sub[:, None] - sub[None]) ** 2).sum(-1)
+    exp = ((d2 <= RADIUS ** 2) & ~np.eye(len(sub), dtype=bool)).sum(1)
+    np.testing.assert_array_equal(np.asarray(out["cnt"])[keep], exp)
+
+
+def test_scatter_and_hash_grids_match(rng):
+    pos, pool = _mk(rng, 150, 256)
+    spec = G.GridSpec(dims=(10, 10, 10), max_per_box=32)
+    bf = _brute_counts(pos, RADIUS)
+    d2 = ((pos[:, None, :] - pos[None, :, :]) ** 2).sum(-1)
+
+    sg = G.build_scatter_grid(spec, pool, jnp.zeros(3), jnp.asarray(RADIUS))
+    ids, valid = G.scatter_grid_candidates(spec, sg, jnp.asarray(pos))
+    for name, (idn, vl) in {"scatter": (np.asarray(ids), np.asarray(valid))}.items():
+        cnt = np.zeros(150, int)
+        for i in range(150):
+            js = np.unique(idn[i][vl[i]])
+            js = js[js != i]
+            cnt[i] = (d2[i][js] <= RADIUS ** 2).sum()
+        np.testing.assert_array_equal(cnt, bf, err_msg=name)
+
+    hg = G.build_hash_grid(spec, pool, jnp.zeros(3), jnp.asarray(RADIUS))
+    ids, valid = G.hash_grid_candidates(spec, hg, jnp.asarray(pos))
+    idn, vl = np.asarray(ids), np.asarray(valid)
+    cnt = np.zeros(150, int)
+    for i in range(150):
+        js = np.unique(idn[i][vl[i]])
+        js = js[js != i]
+        cnt[i] = (d2[i][js] <= RADIUS ** 2).sum()
+    np.testing.assert_array_equal(cnt, bf)

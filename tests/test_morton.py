@@ -1,0 +1,74 @@
+"""Morton space-filling curve: roundtrips + locality properties (paper §4.2)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import morton
+
+
+def test_roundtrip_3d_exhaustive_small():
+    g = np.arange(16, dtype=np.uint32)
+    x, y, z = np.meshgrid(g, g, g, indexing="ij")
+    x, y, z = (jnp.asarray(a.ravel()) for a in (x, y, z))
+    c = morton.encode3(x, y, z)
+    dx, dy, dz = morton.decode3(c)
+    np.testing.assert_array_equal(np.asarray(dx), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(dy), np.asarray(y))
+    np.testing.assert_array_equal(np.asarray(dz), np.asarray(z))
+    # bijectivity on the sample
+    assert len(np.unique(np.asarray(c))) == c.shape[0]
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 1023), st.integers(0, 1023),
+                          st.integers(0, 1023)), min_size=1, max_size=64))
+def test_roundtrip_3d_property(coords):
+    a = np.asarray(coords, dtype=np.uint32)
+    c = morton.encode3(jnp.asarray(a[:, 0]), jnp.asarray(a[:, 1]),
+                       jnp.asarray(a[:, 2]))
+    dx, dy, dz = morton.decode3(c)
+    np.testing.assert_array_equal(np.asarray(dx), a[:, 0])
+    np.testing.assert_array_equal(np.asarray(dy), a[:, 1])
+    np.testing.assert_array_equal(np.asarray(dz), a[:, 2])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.tuples(st.integers(0, 65535), st.integers(0, 65535)))
+def test_roundtrip_2d_property(xy):
+    x, y = xy
+    c = morton.encode2(jnp.uint32(x), jnp.uint32(y))
+    dx, dy = morton.decode2(c)
+    assert int(dx) == x and int(dy) == y
+
+
+def test_same_box_same_key():
+    pos = jnp.asarray([[1.1, 2.2, 3.3], [1.9, 2.8, 3.9], [2.1, 2.2, 3.3]])
+    keys = morton.morton_keys(pos, jnp.zeros(3), 1.0, (8, 8, 8))
+    assert int(keys[0]) == int(keys[1])      # same unit box
+    assert int(keys[0]) != int(keys[2])      # crossed x boundary
+
+
+def test_locality_beats_rowmajor():
+    """Mean |key(i) - key(j)| over 3-D-adjacent cells is smaller for Morton
+    than for row-major linearization — the paper's cache-locality argument."""
+    n = 32
+    g = np.arange(n, dtype=np.uint32)
+    x, y, z = np.meshgrid(g, g, g, indexing="ij")
+    x, y, z = x.ravel(), y.ravel(), z.ravel()
+    mor = np.asarray(morton.encode3(jnp.asarray(x), jnp.asarray(y), jnp.asarray(z)),
+                     dtype=np.int64)
+    row = (x.astype(np.int64) * n + y) * n + z
+    # +x neighbors
+    mask = x < n - 1
+    mor_nb = np.asarray(morton.encode3(jnp.asarray(x + 1), jnp.asarray(y),
+                                       jnp.asarray(z)), dtype=np.int64)
+    row_nb = ((x + 1).astype(np.int64) * n + y) * n + z
+    d_m = np.abs(mor_nb - mor)[mask].mean()
+    d_r = np.abs(row_nb - row)[mask].mean()
+    assert d_m < d_r
+
+
+def test_code_space_size():
+    assert morton.code_space_size((8, 8, 8)) == 512
+    assert morton.code_space_size((9, 3, 3)) == 16 ** 3  # next pow2 = 16

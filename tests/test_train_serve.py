@@ -1,0 +1,180 @@
+"""Train substrate + paged-KV serving substrate tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS
+from repro.data import DataConfig, batch_at
+from repro.models import build_model, reduced_config
+from repro.serve import kv_cache as kvc
+from repro.train import (AdamWConfig, checkpoint, init_state, make_train_step,
+                         schedule)
+
+
+# ---------------------------------------------------------------------------
+# optimizer / train step
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=300, min_lr_ratio=1.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = init_state(cfg, params)
+    from repro.train.optimizer import apply_updates
+    for _ in range(200):
+        g = {"w": 2 * params["w"]}
+        params, state, _ = apply_updates(cfg, params, g, state)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(schedule(cfg, jnp.int32(0))) == 0.0
+    assert abs(float(schedule(cfg, jnp.int32(10))) - 1.0) < 1e-6
+    assert float(schedule(cfg, jnp.int32(100))) <= 0.11
+
+
+def test_train_loss_decreases_small_lm():
+    cfg = reduced_config(ARCHS["qwen2-1.5b"])
+    m = build_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    ocfg = AdamWConfig(lr=1e-2, warmup_steps=5, total_steps=60)
+    opt = init_state(ocfg, params)
+    step = jax.jit(make_train_step(m, ocfg))
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
+    batch = batch_at(dcfg, 0)
+    losses = []
+    for i in range(30):
+        params, opt, metrics = step(params, opt, batch)  # overfit one batch
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] * 0.7, losses[::10]
+    assert np.isfinite(losses).all()
+
+
+def test_microbatch_equivalence():
+    """grad accumulation (n micro) == single batch step, same params out."""
+    cfg = reduced_config(ARCHS["yi-6b"])
+    m = build_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    ocfg = AdamWConfig(lr=1e-3)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=8)
+    batch = batch_at(dcfg, 0)
+    p1, _, m1 = jax.jit(make_train_step(m, ocfg, n_microbatches=1))(
+        params, init_state(ocfg, params), batch)
+    p4, _, m4 = jax.jit(make_train_step(m, ocfg, n_microbatches=4))(
+        params, init_state(ocfg, params), batch)
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)))
+    assert err < 5e-5, err
+
+
+# ---------------------------------------------------------------------------
+# checkpointing (fault tolerance / elasticity)
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.asarray([1, 2], jnp.int32),
+                  "d": jnp.asarray(3.5, jnp.bfloat16)}}
+    checkpoint.save(str(tmp_path), 7, tree)
+    assert checkpoint.latest_step(str(tmp_path)) == 7
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+    out = checkpoint.restore(str(tmp_path), 7, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    ck = checkpoint.AsyncCheckpointer(str(tmp_path), keep=2)
+    tree = {"w": jnp.ones((4,))}
+    for s in (1, 2, 3, 4):
+        ck.save_async(s, tree)
+    ck.wait()
+    steps = checkpoint.list_steps(str(tmp_path))
+    assert steps == [3, 4]              # older checkpoints gc'd
+    assert checkpoint.latest_step(str(tmp_path)) == 4
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    checkpoint.save(str(tmp_path), 1, {"a": jnp.ones(3)})
+    with pytest.raises(ValueError):
+        checkpoint.restore(str(tmp_path), 1, {"zzz": jnp.ones(3)})
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache (paper §4.3 pool allocator transfer)
+# ---------------------------------------------------------------------------
+
+SPEC = kvc.PagedCacheSpec(n_layers=2, n_kv_heads=2, d_head=8, page_size=4,
+                          n_pages=32, max_seqs=4, max_pages_per_seq=8,
+                          dtype="float32")
+
+
+def test_admit_append_gather_roundtrip(rng):
+    st = kvc.init_cache(SPEC)
+    st, ok = kvc.admit_sequence(SPEC, st, jnp.int32(0), jnp.int32(0))
+    assert bool(ok)
+    ks, vs = [], []
+    for t in range(10):
+        k = jnp.asarray(rng.standard_normal((2, 4, 2, 8)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((2, 4, 2, 8)), jnp.float32)
+        st, wrote = kvc.append_token(SPEC, st, k, v)
+        assert bool(wrote[0])
+        ks.append(np.asarray(k[:, 0]))
+        vs.append(np.asarray(v[:, 0]))
+    for layer in range(2):
+        k, v, valid = kvc.gather_kv(SPEC, st, jnp.int32(layer), jnp.int32(0),
+                                    s_max=16)
+        assert int(valid.sum()) == 10
+        got = np.asarray(k[:10])
+        exp = np.stack([x[layer] for x in ks])
+        np.testing.assert_allclose(got, exp, atol=1e-6)
+
+
+def test_release_returns_pages():
+    st = kvc.init_cache(SPEC)
+    st, ok = kvc.admit_sequence(SPEC, st, jnp.int32(1), jnp.int32(9))
+    assert bool(ok)
+    assert int(st.n_free) == 32 - 3      # ceil(9/4) = 3 pages
+    st = kvc.release_sequence(SPEC, st, jnp.int32(1))
+    assert int(st.n_free) == 32
+    assert not bool(st.seq_active[1])
+    # every page id is back exactly once (allocator invariant)
+    assert sorted(np.asarray(st.free_stack).tolist()) == list(range(32))
+
+
+def test_pool_exhaustion_blocks_admission():
+    spec = kvc.PagedCacheSpec(n_layers=1, n_kv_heads=1, d_head=4, page_size=4,
+                              n_pages=4, max_seqs=4, max_pages_per_seq=4,
+                              dtype="float32")
+    st = kvc.init_cache(spec)
+    st, ok1 = kvc.admit_sequence(spec, st, jnp.int32(0), jnp.int32(16))
+    assert bool(ok1)
+    st, ok2 = kvc.admit_sequence(spec, st, jnp.int32(1), jnp.int32(4))
+    assert not bool(ok2)                 # pool exhausted → graceful refusal
+    st = kvc.release_sequence(spec, st, jnp.int32(0))
+    st, ok3 = kvc.admit_sequence(spec, st, jnp.int32(1), jnp.int32(4))
+    assert bool(ok3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(0, 3),
+                          st.integers(1, 20)), min_size=1, max_size=30))
+def test_allocator_never_leaks_property(ops):
+    """Property (paper allocator invariant): pages held + pages free == pool,
+    under any admit/release interleaving."""
+    st_ = kvc.init_cache(SPEC)
+    for is_admit, slot, plen in ops:
+        if is_admit:
+            st_, _ = kvc.admit_sequence(SPEC, st_, jnp.int32(slot),
+                                        jnp.int32(plen))
+        else:
+            st_ = kvc.release_sequence(SPEC, st_, jnp.int32(slot))
+        held = int((np.asarray(st_.block_table) >= 0).sum())
+        assert held + int(st_.n_free) == SPEC.n_pages
