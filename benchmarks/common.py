@@ -1,7 +1,14 @@
-"""Shared benchmark utilities. Output convention: ``name,us_per_call,derived``."""
+"""Shared benchmark utilities. Output convention: ``name,us_per_call,derived``.
+
+Modules may additionally record machine-readable results via
+:func:`write_bench_json` (e.g. BENCH_neighbor.json) so the perf trajectory is
+tracked across PRs.
+"""
 
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable
 
@@ -29,3 +36,17 @@ def emit(name: str, us: float, derived: str = "") -> None:
 
 def random_positions(rng, n: int, lo: float, hi: float) -> np.ndarray:
     return rng.uniform(lo, hi, (n, 3)).astype(np.float32)
+
+
+def write_bench_json(filename: str, payload: dict) -> str:
+    """Write a machine-readable benchmark record next to the repo root.
+
+    The target directory is overridable with $BENCH_OUT_DIR (CI artifacts).
+    """
+    out_dir = os.environ.get("BENCH_OUT_DIR", ".")
+    path = os.path.join(out_dir, filename)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}")
+    return path

@@ -2,10 +2,20 @@
 
 BioDynaMo compares its uniform grid against kd-tree (nanoflann) and octree
 (UniBN); pointer-chasing trees have no faithful XLA analogue (DESIGN.md §10.5),
-so the comparison set here is: optimized sort-based uniform grid (ours),
-scatter-table grid ('standard implementation'), spatial-hash grid, and exact
-brute force (reference). Reported separately, as in the paper: index BUILD
-time and SEARCH (force sweep) time.
+so the comparison set here is: optimized sort-based uniform grid (ours,
+linear-key run-merged layout — DESIGN.md §3), scatter-table grid ('standard
+implementation'), spatial-hash grid, and exact brute force (reference).
+Reported separately, as in the paper: index BUILD time and SEARCH (force
+sweep) time.
+
+The uniform grid opts into a tight per-run gather capacity (``max_per_run``):
+a 3-box z-run pools occupancy across 3 boxes, so its max is far below
+3·max_per_box for any near-uniform density. The build-time ``max_run_count``
+check keeps the setting *exact* — we assert no overflow, and validate the
+force output against the O(N²) brute-force oracle.
+
+Besides the CSV rows, emits machine-readable ``BENCH_neighbor.json``
+(build/search µs per environment, N, grid dims, oracle error).
 """
 
 from __future__ import annotations
@@ -17,11 +27,13 @@ import numpy as np
 from repro.core import agents, grid as G
 from repro.core.forces import ForceParams, make_force_pair_fn
 
-from .common import emit, random_positions, time_fn
+from .common import emit, random_positions, time_fn, write_bench_json
 
 N = 30_000
 RADIUS = 4.0
 SIDE = 130.0
+MAX_PER_BOX = 32
+MAX_PER_RUN = 32    # exactness asserted via gs.max_run_count below
 
 
 def run() -> None:
@@ -29,7 +41,8 @@ def run() -> None:
     pos = random_positions(rng, N, 2.0, SIDE - 2.0)
     pool = agents.make_pool(N, position=jnp.asarray(pos),
                             diameter=jnp.full((N,), 3.0))
-    spec = G.GridSpec(dims=(33, 33, 33), max_per_box=32, query_chunk=4096)
+    spec = G.GridSpec(dims=(33, 33, 33), max_per_box=MAX_PER_BOX,
+                      max_per_run=MAX_PER_RUN, query_chunk=4096)
     origin = jnp.zeros(3)
     r = jnp.asarray(RADIUS)
     channels = {k: v for k, v in pool.channels().items()
@@ -37,6 +50,12 @@ def run() -> None:
     pair = make_force_pair_fn(ForceParams())
     out_specs = {"force": ((3,), jnp.float32), "force_nnz": ((), jnp.int32)}
     all_idx = jnp.arange(N, dtype=jnp.int32)
+    results: dict = {
+        "n": N, "dims": list(spec.dims), "radius": RADIUS,
+        "table_size": spec.table_size,             # == prod(dims), no padding
+        "max_per_box": MAX_PER_BOX, "max_per_run": MAX_PER_RUN,
+        "build_us": {}, "search_us": {},
+    }
 
     # --- build times ---
     build_u = jax.jit(lambda p: G.build(spec, p, origin, r))
@@ -50,9 +69,16 @@ def run() -> None:
     us_build_h = time_fn(build_h, pool)
     emit("fig11_build_hash_grid", us_build_h,
          f"vs_uniform={us_build_h / us_build_u:.2f}x")
+    results["build_us"] = {"uniform_grid": us_build_u,
+                           "scatter_grid": us_build_s,
+                           "hash_grid": us_build_h}
 
     # --- search (force sweep) times ---
     gs = build_u(pool)
+    max_run = int(gs.max_run_count)
+    assert max_run <= spec.run_capacity, \
+        f"run overflow: {max_run} > {spec.run_capacity} — raise MAX_PER_RUN"
+    results["max_run_count"] = max_run
     search_u = jax.jit(lambda g: G.neighbor_apply(
         spec, g, channels, all_idx, jnp.int32(N), pair, out_specs))
     us_u = time_fn(search_u, gs)
@@ -60,70 +86,53 @@ def run() -> None:
 
     sg = build_s(pool)
 
-    def search_scatter(g):
-        b = spec.query_chunk
-        nb = (N + b - 1) // b
-        outs = {k: jnp.zeros((N, *sfx), dt) for k, (sfx, dt) in out_specs.items()}
+    def env_search(cand_of_grid):
+        # g must be the traced jit argument — a closed-over grid would be a
+        # compile-time constant and XLA could fold the timed search away
+        def go(g):
+            def cf(q_pos, q_slot):
+                ids, valid = cand_of_grid(g, q_pos)
+                valid &= ids != q_slot[:, None]
+                return ids, valid
+            return G.chunk_apply(channels, channels, all_idx, jnp.int32(N),
+                                 cf, pair, out_specs, spec.query_chunk)
+        return go
 
-        def body(i, outs):
-            sl = i * b
-            q_slot = jnp.minimum(sl + jnp.arange(b, dtype=jnp.int32), N - 1)
-            lane_ok = (sl + jnp.arange(b)) < N
-            q = {k: v[q_slot] for k, v in channels.items()}
-            ids, valid = G.scatter_grid_candidates(spec, g, q["position"])
-            valid &= lane_ok[:, None] & (ids != q_slot[:, None])
-            nbr = {k: v[ids] for k, v in channels.items()}
-            res = pair(q, nbr, valid, q_slot)
-            new = dict(outs)
-            for name, val in res.items():
-                val = jnp.where(lane_ok.reshape((b,) + (1,) * (val.ndim - 1)),
-                                val, 0)
-                new[name] = outs[name].at[q_slot].add(
-                    val.astype(outs[name].dtype), mode="drop")
-            return new
-
-        return jax.lax.fori_loop(0, nb, body, outs)
-
-    us_s = time_fn(jax.jit(search_scatter), sg)
+    us_s = time_fn(jax.jit(env_search(
+        lambda g, qp: G.scatter_grid_candidates(spec, g, qp))), sg)
     emit("fig11_search_scatter_grid", us_s, f"vs_uniform={us_s / us_u:.2f}x")
 
     hg = build_h(pool)
-
-    def search_hash(g):
-        b = spec.query_chunk
-        nb = (N + b - 1) // b
-        outs = {k: jnp.zeros((N, *sfx), dt) for k, (sfx, dt) in out_specs.items()}
-
-        def body(i, outs):
-            sl = i * b
-            q_slot = jnp.minimum(sl + jnp.arange(b, dtype=jnp.int32), N - 1)
-            lane_ok = (sl + jnp.arange(b)) < N
-            q = {k: v[q_slot] for k, v in channels.items()}
-            ids, valid = G.hash_grid_candidates(spec, g, q["position"])
-            valid &= lane_ok[:, None] & (ids != q_slot[:, None])
-            nbr = {k: v[ids] for k, v in channels.items()}
-            res = pair(q, nbr, valid, q_slot)
-            new = dict(outs)
-            for name, val in res.items():
-                val = jnp.where(lane_ok.reshape((b,) + (1,) * (val.ndim - 1)),
-                                val, 0)
-                new[name] = outs[name].at[q_slot].add(
-                    val.astype(outs[name].dtype), mode="drop")
-            return new
-
-        return jax.lax.fori_loop(0, nb, body, outs)
-
-    us_h = time_fn(jax.jit(search_hash), hg)
+    us_h = time_fn(jax.jit(env_search(
+        lambda g, qp: G.hash_grid_candidates(spec, g, qp))), hg)
     emit("fig11_search_hash_grid", us_h, f"vs_uniform={us_h / us_u:.2f}x")
 
-    # brute force at reduced N (quadratic — paper's trees are its stand-in)
+    results["search_us"] = {"uniform_grid": us_u, "scatter_grid": us_s,
+                            "hash_grid": us_h}
+    results["uniform_total_us"] = us_build_u + us_u
+
+    # brute force timing at reduced N (quadratic — paper's trees are its stand-in)
     nb = 3_000
     pool_b = agents.make_pool(nb, position=jnp.asarray(pos[:nb]),
                               diameter=jnp.full((nb,), 3.0))
     ch_b = {k: v for k, v in pool_b.channels().items()
             if not k.startswith("extra.")}
-    bf = jax.jit(lambda p: G.brute_force_apply(ch_b, p.alive, r, pair,
+    bf = jax.jit(lambda p: G.brute_force_apply(ch_b, p.alive, pair,
                                                out_specs, chunk=1024))
     us_b = time_fn(bf, pool_b)
     emit("fig11_search_brute_force", us_b,
          f"n={nb} (quadratic reference)")
+    results["search_us"]["brute_force_n3000"] = us_b
+
+    # exactness oracle: full-N brute force vs the tight-run uniform grid
+    oracle = jax.jit(lambda p: G.brute_force_apply(
+        channels, p.alive, pair, out_specs, chunk=1024))(pool)
+    got = search_u(gs)
+    err = float(jnp.max(jnp.abs(got["force"] - oracle["force"])))
+    nnz_match = bool(jnp.all(got["force_nnz"] == oracle["force_nnz"]))
+    assert err < 1e-4, f"uniform grid force deviates from oracle: {err}"
+    results["oracle_max_abs_err"] = err
+    results["oracle_nnz_match"] = nnz_match
+    emit("fig11_oracle_max_abs_err", err * 1e6, f"nnz_match={nnz_match}")
+
+    write_bench_json("BENCH_neighbor.json", results)

@@ -206,18 +206,23 @@ def make_distributed_step(dcfg: DistConfig, mesh, axis: str = "data"):
             "n_live": jnp.sum(packed["alive"].astype(jnp.int32)),
             "halo_overflow": ovf_l + ovf_r,
             "migrate_overflow": ovf_ml + ovf_mr + ovf_in,
-            "box_overflow": (genv.max_count > spec.max_per_box).astype(jnp.int32),
+            "box_overflow": (genv.max_run_count > spec.run_capacity
+                             ).astype(jnp.int32),
         }
         stats = {k: v.reshape(1) for k, v in stats.items()}   # (1,) per shard
         return packed, stats
 
-    sharded = jax.shard_map(
-        step_shard, mesh=mesh,
-        in_specs=({k: P(axis) for k in ("position", "diameter", "agent_type",
-                                        "alive")}, P()),
-        out_specs=({k: P(axis) for k in ("position", "diameter", "agent_type",
-                                         "alive")},
-                   {k: P(axis) for k in ("n_live", "halo_overflow",
-                                         "migrate_overflow", "box_overflow")}),
-    )
+    in_specs = ({k: P(axis) for k in ("position", "diameter", "agent_type",
+                                      "alive")}, P())
+    out_specs = ({k: P(axis) for k in ("position", "diameter", "agent_type",
+                                       "alive")},
+                 {k: P(axis) for k in ("n_live", "halo_overflow",
+                                       "migrate_overflow", "box_overflow")})
+    if hasattr(jax, "shard_map"):
+        sharded = jax.shard_map(step_shard, mesh=mesh,
+                                in_specs=in_specs, out_specs=out_specs)
+    else:   # jax < 0.6: experimental namespace, no varying-axis checking
+        from jax.experimental.shard_map import shard_map
+        sharded = shard_map(step_shard, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_rep=False)
     return jax.jit(sharded)

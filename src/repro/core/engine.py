@@ -48,6 +48,7 @@ class EngineConfig:
     force_impl: str = "xla"                # xla | pallas (K1 windowed kernel;
                                            # interpret mode on CPU, native on TPU)
     max_per_box: int = 16
+    max_per_run: Optional[int] = None      # gather width per 3-box z-run (None → 3·K)
     query_chunk: int = 2048
     adhesion: Optional[Tuple[Tuple[float, ...], ...]] = None  # type adhesion matrix
     force: force_mod.ForceParams = dataclasses.field(default_factory=force_mod.ForceParams)
@@ -59,6 +60,7 @@ class EngineConfig:
         dims = tuple(max(1, int(math.ceil((hi - lo) / self.interaction_radius)))
                      for lo, hi in zip(self.domain_lo, self.domain_hi))
         return grid_mod.GridSpec(dims=dims, max_per_box=self.max_per_box,
+                                 max_per_run=self.max_per_run,
                                  query_chunk=self.query_chunk)
 
 
@@ -119,68 +121,70 @@ class Simulation:
 
     # -- environment dispatch ------------------------------------------------
     def _make_neighbor_apply(self, pool: AgentPool, grid_env, channels):
+        """One neighbor_apply closure per step, every environment through the
+        shared grid.chunk_apply loop (DESIGN.md §3.4).
+
+        For the uniform grid with more than one possible neighbor consumer
+        (static detection on, or behaviors present), the candidate list
+        (runs + sorted channels) is built lazily on first use and then
+        *shared* by every consumer of this iteration — force sweep, behaviors
+        and the static-flag update resolve cells, keys and range lookups
+        exactly once per step. A pure force sweep keeps the inline per-chunk
+        path: no (capacity × width) candidate buffer is materialized and
+        candidate derivation shrinks with the active set (§2/O6).
+        """
         cfg, spec = self.config, self.spec
+        cache: list = []   # trace-time memo: one candidate build per step
 
-        def via_uniform(pair_fn, out_specs, query_idx=None, n_query=None):
-            if query_idx is None:
-                query_idx = jnp.arange(pool.capacity, dtype=jnp.int32)
-                n_query = pool.n_live
-            return grid_mod.neighbor_apply(spec, grid_env, channels, query_idx,
-                                           n_query, pair_fn, out_specs)
+        if cfg.environment == "uniform_grid":
+            share = cfg.detect_static or bool(self.behaviors)
 
-        def via_candidates(cand_fn):
             def apply(pair_fn, out_specs, query_idx=None, n_query=None):
-                # chunked loop shared with the uniform path, different candidates
                 if query_idx is None:
                     query_idx = jnp.arange(pool.capacity, dtype=jnp.int32)
                     n_query = pool.n_live
-                c = pool.capacity
-                b = min(cfg.query_chunk, c)
-                n_chunks_max = (c + b - 1) // b
-                qi = jnp.pad(query_idx, (0, n_chunks_max * b - c))
-                outs = {name: jnp.zeros((c, *sfx), dt)
-                        for name, (sfx, dt) in out_specs.items()}
-
-                def body(i, outs):
-                    sl = i * b
-                    q_slot = jax.lax.dynamic_slice(qi, (sl,), (b,))
-                    lane_ok = (sl + jnp.arange(b)) < n_query
-                    q = {k: v[q_slot] for k, v in channels.items()}
-                    ids, valid = cand_fn(q["position"])
-                    valid &= lane_ok[:, None]
-                    valid &= ids != q_slot[:, None]
-                    nbr = {k: v[ids] for k, v in channels.items()}
-                    res = pair_fn(q, nbr, valid, q_slot)
-                    new = dict(outs)
-                    for name, val in res.items():
-                        val = jnp.where(lane_ok.reshape((b,) + (1,) * (val.ndim - 1)),
-                                        val, 0)
-                        new[name] = outs[name].at[q_slot].add(
-                            val.astype(outs[name].dtype), mode="drop")
-                    return new
-
-                n_chunks = jnp.minimum((n_query + b - 1) // b, n_chunks_max)
-                return jax.lax.fori_loop(0, n_chunks, body, outs)
+                if not share:
+                    return grid_mod.neighbor_apply(spec, grid_env, channels,
+                                                   query_idx, n_query,
+                                                   pair_fn, out_specs)
+                if not cache:
+                    cache.append(grid_mod.build_candidates(spec, grid_env,
+                                                           channels))
+                return grid_mod.candidates_apply(spec, cache[0], channels,
+                                                 query_idx, n_query,
+                                                 pair_fn, out_specs)
             return apply
 
-        if cfg.environment == "uniform_grid":
-            return via_uniform
         if cfg.environment == "scatter_grid":
-            return via_candidates(
-                lambda qp: grid_mod.scatter_grid_candidates(spec, grid_env, qp))
-        if cfg.environment == "hash_grid":
-            return via_candidates(
-                lambda qp: grid_mod.hash_grid_candidates(spec, grid_env, qp))
-        if cfg.environment == "brute_force":
+            def box_cand(qp):
+                return grid_mod.scatter_grid_candidates(spec, grid_env, qp)
+        elif cfg.environment == "hash_grid":
+            def box_cand(qp):
+                return grid_mod.hash_grid_candidates(spec, grid_env, qp)
+        elif cfg.environment == "brute_force":
             ids_all = jnp.arange(pool.capacity, dtype=jnp.int32)
 
-            def cand(qp):
+            def box_cand(qp):
                 q = qp.shape[0]
                 ids = jnp.broadcast_to(ids_all[None], (q, pool.capacity))
                 valid = jnp.broadcast_to(pool.alive[None], (q, pool.capacity))
                 return ids, valid
-            return via_candidates(cand)
-        raise ValueError(f"unknown environment {cfg.environment}")
+        else:
+            raise ValueError(f"unknown environment {cfg.environment}")
+
+        def cand_fn(q_pos, q_slot):
+            ids, valid = box_cand(q_pos)
+            valid &= ids != q_slot[:, None]                  # exclude self
+            return ids, valid
+
+        def apply(pair_fn, out_specs, query_idx=None, n_query=None):
+            if query_idx is None:
+                query_idx = jnp.arange(pool.capacity, dtype=jnp.int32)
+                n_query = pool.n_live
+            return grid_mod.chunk_apply(channels, channels, query_idx, n_query,
+                                        cand_fn, pair_fn, out_specs,
+                                        cfg.query_chunk)
+        return apply
 
     def _build_env(self, pool, origin, box_size):
         cfg, spec = self.config, self.spec
@@ -224,8 +228,10 @@ class Simulation:
                                     sort_pool, lambda p: p, pool)
             grid_env = self._build_env(pool, origin, box_size)
             if cfg.environment == "uniform_grid":
-                stats["box_overflow"] = (grid_env.max_count > spec.max_per_box
-                                         ).astype(jnp.int32)
+                # query exactness bound: every 3-box z-run must fit the run
+                # gather capacity (DESIGN.md §4.2 overflow contract)
+                stats["box_overflow"] = (grid_env.max_run_count
+                                         > spec.run_capacity).astype(jnp.int32)
 
             conc = state.conc
             if cfg.diffusion is not None:
@@ -237,33 +243,38 @@ class Simulation:
                         if not k.startswith("extra.")}
             nbr_apply = self._make_neighbor_apply(pool, grid_env, channels)
 
-            # static flags from last iteration's bookkeeping (paper §5)
+            # static flags from last iteration's bookkeeping (paper §5) —
+            # shares the per-step candidate pipeline with the force sweep
             if cfg.detect_static and cfg.environment == "uniform_grid":
                 static = statics_mod.update_static_flags(
-                    spec, grid_env, pool, box_size, it)
+                    pool, box_size, it, nbr_apply)
                 pool = dataclasses.replace(pool, static=static)
 
             pos0 = pool.position
             dia0 = pool.diameter
 
             # ---------------- agent ops: forces ----------------
+            active = None
             if cfg.use_forces:
                 if cfg.detect_static:
                     active = pool.alive & ~pool.static
                 else:
                     active = pool.alive
                 idx, n_active = compaction.active_index_list(active)
-                stats["n_active"] = n_active
                 if cfg.force_impl == "pallas":
-                    # K1: Morton-sorted windowed tile kernel; static rows are
+                    # K1: grid-key-sorted windowed tile kernel; static rows are
                     # skipped at block granularity (kernels/collision_force.py)
                     from ..kernels import ops as kops
-                    f, nnz, _ovf = kops.collision_force(
+                    f, nnz, ovf = kops.collision_force(
                         pool.position, pool.diameter, pool.agent_type,
                         pool.alive, active, origin, box_size,
                         dims=spec.dims, k_rep=cfg.force.k_rep,
                         adhesion=cfg.adhesion,
                         adhesion_band=cfg.force.adhesion_band)
+                    # column-map overflow means possibly-missed pairs: surface
+                    # it through the same never-silent contract (DESIGN.md §4.2)
+                    stats["box_overflow"] = jnp.maximum(
+                        stats["box_overflow"], ovf.astype(jnp.int32))
                     res = {"force": f, "force_nnz": nnz}
                 else:
                     res = nbr_apply(force_pair,
@@ -276,8 +287,6 @@ class Simulation:
                 force_nnz = jnp.where(active, res["force_nnz"], pool.force_nnz)
                 pool = dataclasses.replace(pool, position=new_pos,
                                            force_nnz=force_nnz)
-            else:
-                stats["n_active"] = pool.n_live
 
             # ---------------- agent ops: behaviors ----------------
             ctx = StepContext(
@@ -319,6 +328,10 @@ class Simulation:
             deaths = jnp.sum((death_mask & pool.alive).astype(jnp.int32))
             stats["deaths"] = deaths
             pool = dataclasses.replace(pool, alive=pool.alive & ~death_mask)
+            # n_active = force-computed agents still alive at iteration end
+            # (counting at force time could exceed n_live after deaths)
+            stats["n_active"] = (jnp.sum((active & pool.alive).astype(jnp.int32))
+                                 if active is not None else pool.n_live)
             pool = jax.lax.cond(deaths > 0, compaction.compact,
                                 lambda p: p, pool)
 
@@ -352,10 +365,11 @@ class Simulation:
         for i in range(n_iterations):
             state = self._step_fn(state)
             if check_overflow:
-                if int(state.stats["box_overflow"]) :
+                if int(state.stats["box_overflow"]):
                     raise RuntimeError(
-                        f"iteration {i}: grid box overflow (> max_per_box="
-                        f"{self.spec.max_per_box}); raise EngineConfig.max_per_box")
+                        f"iteration {i}: grid run overflow (a 3-box z-run "
+                        f"holds > {self.spec.run_capacity} agents); raise "
+                        f"EngineConfig.max_per_run / max_per_box")
                 if int(state.stats["birth_overflow"]):
                     raise RuntimeError(
                         f"iteration {i}: birth overflow; raise EngineConfig.capacity")

@@ -1,19 +1,24 @@
 """Uniform-grid neighbor search — paper §3.1, adapted sort-based for TPU.
 
 BioDynaMo's grid stores each box's agents in an array-based linked list and
-avoids zeroing boxes with a timestamp trick. Pointer chasing and per-box
-timestamps are CPU idioms; the TPU-native formulation is:
+indexes boxes *row-major*; pointer chasing and per-box timestamps are CPU
+idioms. The TPU-native formulation (DESIGN.md §2–§3):
 
-  build:  box key per agent (Morton code of its cell) → parallel sort by key →
-          per-box (start, count) via vectorized ``searchsorted`` over the dense
-          Morton-indexed table. O(#agents log #agents) fully parallel work and
-          O(#boxes) *vector* memset equivalents — no serial O(#boxes) pass, which
-          is what the paper's timestamp trick was avoiding (DESIGN.md §2).
-  query:  the 27 surrounding boxes (3×3×3, paper §3.1) are contiguous runs in
-          sorted order; gather up to K candidates per box and mask by radius.
+  build:  linear (row-major) box key per agent → parallel sort by key →
+          per-box (start, count) via one vectorized ``searchsorted`` over the
+          dense table of exactly ``prod(dims)`` boxes. O(#agents log #agents)
+          fully parallel work and O(#boxes) *vector* memset equivalents — no
+          serial O(#boxes) pass, which is what the paper's timestamp trick was
+          avoiding (DESIGN.md §2).
+  query:  because z is the fastest-varying key axis, the 3×3×3 stencil (paper
+          §3.1) collapses into **9 contiguous runs of ≤3 boxes**: 9 range
+          lookups and 9 gathers of run width instead of 27 independent K-wide
+          gathers. Candidates are gathered from a *pre-sorted* copy of the
+          channels, so each run is a contiguous streaming read of the sorted
+          pool (DESIGN.md §3).
 
-The sort is shared with the memory-layout optimization (§4.2): when the pool was
-just Morton-sorted, ``order`` is near-identity and gathers stream linearly.
+The agent *memory layout* sort (paper §4.2) remains Morton-ordered
+(engine.sort_pool); grid indexing and agent ordering are decoupled.
 
 Alternative environments (paper Fig 11 comparison, DESIGN.md §10.5):
   * BruteForceEnvironment — exact O(N²) masked sweep (small N oracle).
@@ -27,8 +32,7 @@ Alternative environments (paper Fig 11 comparison, DESIGN.md §10.5):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,23 +41,41 @@ import numpy as np
 from . import morton
 from .agents import AgentPool
 
-# 27 neighbor offsets of the 3x3x3 cube (static python constant).
+# 27 neighbor offsets of the 3x3x3 cube (static python constant) — used by the
+# scatter/hash environments, whose tables are not contiguous in z.
 _OFFSETS = np.array([(dx, dy, dz)
                      for dx in (-1, 0, 1)
                      for dy in (-1, 0, 1)
                      for dz in (-1, 0, 1)], dtype=np.int32)   # (27, 3)
+
+# 9 xy-offsets of the 3x3x3 cube; each pairs with a contiguous z-run of 3 boxes.
+_RUN_OFFSETS = np.array([(dx, dy)
+                         for dx in (-1, 0, 1)
+                         for dy in (-1, 0, 1)], dtype=np.int32)   # (9, 2)
 
 
 @dataclasses.dataclass(frozen=True)
 class GridSpec:
     """Static grid configuration (hashable; part of the jit cache key)."""
     dims: Tuple[int, int, int]          # boxes per axis
-    max_per_box: int = 16               # K: query gather capacity per box
+    max_per_box: int = 16               # K: bound on agents in any single box
     query_chunk: int = 2048             # agents per neighbor-apply chunk
+    max_per_run: Optional[int] = None   # R: gather capacity per 3-box z-run
+                                        # (None → 3·K, the loosest exact bound)
 
     @property
     def table_size(self) -> int:
-        return morton.code_space_size(self.dims)
+        """Exactly prod(dims) — no power-of-two padding (DESIGN.md §3)."""
+        return morton.linear_size(self.dims)
+
+    @property
+    def run_capacity(self) -> int:
+        """R: agents gathered per z-run. A run pools 3 boxes, so occupancy
+        concentrates around 3·mean rather than 3·max — callers with measured
+        densities may set ``max_per_run`` well below 3·K; the build-time
+        ``max_run_count`` check keeps it exact (DESIGN.md §4.2)."""
+        return self.max_per_run if self.max_per_run is not None \
+            else 3 * self.max_per_box
 
 
 @jax.tree_util.register_dataclass
@@ -62,105 +84,156 @@ class GridState:
     """Per-iteration neighbor index (rebuilt every step, paper Algorithm 1 L3-5)."""
     origin: jnp.ndarray        # (3,) float — grid origin (traced: domain may move)
     box_size: jnp.ndarray      # ()   float — box edge = interaction radius
-    keys: jnp.ndarray          # (C,) uint32 — Morton box code per slot (dead → MAX)
+    keys: jnp.ndarray          # (C,) uint32 — linear box key per slot (dead → MAX)
     order: jnp.ndarray         # (C,) int32 — slot ids sorted by key (dead at end)
     rank: jnp.ndarray          # (C,) int32 — inverse of order
     starts: jnp.ndarray        # (M,) int32 — first sorted position of each box
     counts: jnp.ndarray        # (M,) int32 — agents in each box
-    max_count: jnp.ndarray     # ()   int32 — max agents in any box (overflow check)
+    max_count: jnp.ndarray     # ()   int32 — max agents in any box
+    max_run_count: jnp.ndarray # ()   int32 — max agents in any 3-box z-run
+                               #      (the query-exactness bound; overflow iff
+                               #       > spec.run_capacity)
 
 
 _DEAD_KEY = jnp.uint32(0xFFFFFFFF)
 
 
+def _pcast_varying(v: jnp.ndarray, axes: Tuple[str, ...]) -> jnp.ndarray:
+    """jax.lax.pcast(..., to="varying") with a no-op fallback for jax < 0.6
+    (older shard_map has no varying-axis tracking to satisfy)."""
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(v, axes, to="varying")
+    return v
+
+
 def build(spec: GridSpec, pool: AgentPool, origin: jnp.ndarray,
           box_size: jnp.ndarray) -> GridState:
     """Build the grid index. O(#agents) parallel work + one parallel sort."""
-    keys = morton.morton_keys(pool.position, origin, box_size, spec.dims)
+    keys = morton.linear_keys(pool.position, origin, box_size, spec.dims)
     keys = jnp.where(pool.alive, keys, _DEAD_KEY)
     order = jnp.argsort(keys).astype(jnp.int32)              # stable radix-ish sort
     sorted_keys = keys[order]
     rank = jnp.zeros_like(order).at[order].set(
         jnp.arange(order.shape[0], dtype=jnp.int32))
-    box_ids = jnp.arange(spec.table_size, dtype=jnp.uint32)
-    starts = jnp.searchsorted(sorted_keys, box_ids, side="left").astype(jnp.int32)
-    ends = jnp.searchsorted(sorted_keys, box_ids, side="right").astype(jnp.int32)
-    counts = ends - starts
+    # one searchsorted over M+1 ids gives starts AND counts (ends[i]=starts[i+1];
+    # the M'th entry lands at n_live because dead keys sort above every box id)
+    box_ids = jnp.arange(spec.table_size + 1, dtype=jnp.uint32)
+    bounds = jnp.searchsorted(sorted_keys, box_ids, side="left").astype(jnp.int32)
+    starts = bounds[:-1]
+    counts = bounds[1:] - bounds[:-1]
+    # per z-run occupancy: windowed sum of 3 consecutive-z boxes
+    c3 = counts.reshape(spec.dims)
+    cp = jnp.pad(c3, ((0, 0), (0, 0), (1, 1)))
+    runs = cp[:, :, :-2] + cp[:, :, 1:-1] + cp[:, :, 2:]
     return GridState(origin=jnp.asarray(origin), box_size=jnp.asarray(box_size),
                      keys=keys, order=order, rank=rank, starts=starts,
-                     counts=counts, max_count=jnp.max(counts))
+                     counts=counts, max_count=jnp.max(counts),
+                     max_run_count=jnp.max(runs))
+
+
+def neighbor_runs(spec: GridSpec, grid: GridState, query_pos: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Candidate neighbors as *sorted-pool positions*, 9 contiguous runs each.
+
+    query_pos: (Q, 3). Returns (pos, valid): (Q, 9·R) int32 positions into the
+    key-sorted pool and bool mask. Each of the 9 (dx, dy) stencil columns is
+    one contiguous range [starts[k_lo], starts[k_hi]+counts[k_hi]) covering the
+    z-run of ≤3 boxes — 9 range lookups instead of 27 per-box lookups, and the
+    resulting gathers stream contiguous spans. Candidates are *box-level*;
+    callers apply the radius test.
+    """
+    r_cap = spec.run_capacity
+    dims = spec.dims
+    cell = morton.cell_of(query_pos, grid.origin, grid.box_size, dims)   # (Q,3)
+    off = jnp.asarray(_RUN_OFFSETS)                                      # (9,2)
+    nx = cell[:, None, 0] + off[None, :, 0]                              # (Q,9)
+    ny = cell[:, None, 1] + off[None, :, 1]
+    inside = ((nx >= 0) & (nx < dims[0]) & (ny >= 0) & (ny < dims[1]))
+    nx = jnp.clip(nx, 0, dims[0] - 1)
+    ny = jnp.clip(ny, 0, dims[1] - 1)
+    z_lo = jnp.maximum(cell[:, 2] - 1, 0)[:, None]                       # (Q,1)
+    z_hi = jnp.minimum(cell[:, 2] + 1, dims[2] - 1)[:, None]
+    k_lo = morton.linear_encode3(nx, ny, jnp.broadcast_to(z_lo, nx.shape), dims)
+    k_hi = morton.linear_encode3(nx, ny, jnp.broadcast_to(z_hi, nx.shape), dims)
+    s = grid.starts[k_lo]                                                # (Q,9)
+    e = grid.starts[k_hi] + grid.counts[k_hi]
+    n = jnp.where(inside, e - s, 0)
+    lane = jnp.arange(r_cap, dtype=jnp.int32)                            # (R,)
+    pos = s[..., None] + lane                                            # (Q,9,R)
+    valid = lane < jnp.minimum(n, r_cap)[..., None]
+    pos = jnp.where(valid, pos, 0)
+    q = query_pos.shape[0]
+    return pos.reshape(q, 9 * r_cap), valid.reshape(q, 9 * r_cap)
 
 
 def neighbor_candidates(spec: GridSpec, grid: GridState, query_pos: jnp.ndarray
                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Candidate neighbor slot ids for each query position.
+    """Candidate neighbor *slot ids* for each query position (compat wrapper).
 
-    query_pos: (Q, 3). Returns (ids, valid): (Q, 27*K) int32 slot ids and bool
-    mask. Candidates are *box-level*; callers apply the radius test.
+    query_pos: (Q, 3). Returns (ids, valid): (Q, 9·R) int32 slot ids and bool
+    mask. Prefer :func:`neighbor_runs` + sorted channels on hot paths — slot
+    ids re-randomize the gather order this layout exists to avoid.
     """
-    k = spec.max_per_box
-    cell = morton.cell_of(query_pos, grid.origin, grid.box_size, spec.dims)  # (Q,3)
-    ncell = cell[:, None, :] + jnp.asarray(_OFFSETS)[None, :, :]             # (Q,27,3)
-    dims = jnp.asarray(spec.dims, jnp.int32)
-    inside = jnp.all((ncell >= 0) & (ncell < dims), axis=-1)                 # (Q,27)
-    ncell_c = jnp.clip(ncell, 0, dims - 1)
-    codes = morton.encode3(ncell_c[..., 0], ncell_c[..., 1], ncell_c[..., 2])
-    s = grid.starts[codes]                                                   # (Q,27)
-    n = jnp.where(inside, grid.counts[codes], 0)
-    lane = jnp.arange(k, dtype=jnp.int32)                                    # (K,)
-    sorted_pos = s[..., None] + lane                                         # (Q,27,K)
-    valid = lane < jnp.minimum(n, k)[..., None]                              # (Q,27,K)
-    sorted_pos = jnp.where(valid, sorted_pos, 0)
-    ids = grid.order[sorted_pos]                                             # (Q,27,K)
-    q = query_pos.shape[0]
-    return ids.reshape(q, 27 * k), valid.reshape(q, 27 * k)
+    pos, valid = neighbor_runs(spec, grid, query_pos)
+    return grid.order[pos], valid
 
 
-def neighbor_apply(spec: GridSpec,
-                   grid: GridState,
-                   channels: Dict[str, jnp.ndarray],
-                   query_idx: jnp.ndarray,
-                   n_query: jnp.ndarray,
-                   pair_fn: Callable[[Dict[str, jnp.ndarray],
-                                      Dict[str, jnp.ndarray],
-                                      jnp.ndarray, jnp.ndarray], Dict[str, jnp.ndarray]],
-                   out_specs: Dict[str, Tuple[Tuple[int, ...], jnp.dtype]],
-                   pvary_axes: Tuple[str, ...] = (),
-                   ) -> Dict[str, jnp.ndarray]:
-    """Apply ``pair_fn`` over each query agent's candidate neighborhood, chunked.
+def sort_channels(grid: GridState, channels: Dict[str, jnp.ndarray]
+                  ) -> Dict[str, jnp.ndarray]:
+    """Channels reordered by grid key — neighbor runs become contiguous reads."""
+    return {k: v[grid.order] for k, v in channels.items()}
+
+
+def chunk_apply(channels: Dict[str, jnp.ndarray],
+                gather_channels: Dict[str, jnp.ndarray],
+                query_idx: jnp.ndarray,
+                n_query: jnp.ndarray,
+                cand_fn: Callable[[jnp.ndarray, jnp.ndarray],
+                                  Tuple[jnp.ndarray, jnp.ndarray]],
+                pair_fn: Callable[[Dict[str, jnp.ndarray],
+                                   Dict[str, jnp.ndarray],
+                                   jnp.ndarray, jnp.ndarray], Dict[str, jnp.ndarray]],
+                out_specs: Dict[str, Tuple[Tuple[int, ...], jnp.dtype]],
+                chunk: int,
+                pvary_axes: Tuple[str, ...] = (),
+                ) -> Dict[str, jnp.ndarray]:
+    """The one chunked query loop shared by every environment (DESIGN.md §3.4).
 
     The chunk loop has a *dynamic* trip count ⌈n_query / chunk⌉ — with
     static-region detection on, compute really does shrink with the active set
     (paper §5 / O6; DESIGN.md §2).
 
-    channels: full per-slot SoA dict (what pair_fn may read).
+    channels: full per-slot SoA dict (what q entries are sliced from).
+    gather_channels: dict neighbor candidates are gathered from — the
+      key-sorted copy for the uniform grid (contiguous runs), the raw slot
+      view for scatter/hash/brute environments.
     query_idx: (C,) int32 — compacted active slots (tail padded, see
       compaction.active_index_list); n_query: traced count.
-    pair_fn(q, nbr, valid, q_slot) -> dict of per-query reductions; q entries are
-      (B, ...) chunk slices, nbr entries are (B, 27K, ...) gathers, valid is
-      (B, 27K) bool, q_slot is (B,) the query slot ids.
+    cand_fn(q_pos, q_slot) -> (idx, valid): candidate indices *into
+      gather_channels* and validity (self-exclusion included).
+    pair_fn(q, nbr, valid, q_slot) -> dict of per-query reductions; q entries
+      are (B, ...) chunk slices, nbr entries are (B, W, ...) gathers, valid is
+      (B, W) bool, q_slot is (B,) the query slot ids.
     out_specs: name → (shape_suffix, dtype) of per-agent outputs; results are
       scattered back to slot positions, zeros elsewhere.
     """
     c = channels["position"].shape[0]
-    b = min(spec.query_chunk, c)
+    b = min(chunk, c)
     n_chunks_max = (c + b - 1) // b
     # pad so dynamic_slice never clamps (clamping would desync q_slot vs lane_ok)
     qi = jnp.pad(query_idx, (0, n_chunks_max * b - c))
     outs = {name: jnp.zeros((c, *sfx), dt) for name, (sfx, dt) in out_specs.items()}
     if pvary_axes:   # under shard_map: mark the carry varying on those axes
-        outs = {k: jax.lax.pcast(v, pvary_axes, to="varying")
-                for k, v in outs.items()}
+        outs = {k: _pcast_varying(v, pvary_axes) for k, v in outs.items()}
 
     def body(i, outs):
         sl = i * b
         q_slot = jax.lax.dynamic_slice(qi, (sl,), (b,))                     # (B,)
         lane_ok = (sl + jnp.arange(b)) < n_query                            # (B,)
         q = {k: v[q_slot] for k, v in channels.items()}
-        ids, valid = neighbor_candidates(spec, grid, q["position"])
+        idx, valid = cand_fn(q["position"], q_slot)
         valid &= lane_ok[:, None]
-        valid &= ids != q_slot[:, None]                                     # exclude self
-        nbr = {k: v[ids] for k, v in channels.items()}
+        nbr = {k: v[idx] for k, v in gather_channels.items()}
         res = pair_fn(q, nbr, valid, q_slot)
         new_outs = {}
         for name, val in res.items():
@@ -177,47 +250,102 @@ def neighbor_apply(spec: GridSpec,
     return jax.lax.fori_loop(0, n_chunks, body, outs)
 
 
+def neighbor_apply(spec: GridSpec,
+                   grid: GridState,
+                   channels: Dict[str, jnp.ndarray],
+                   query_idx: jnp.ndarray,
+                   n_query: jnp.ndarray,
+                   pair_fn: Callable,
+                   out_specs: Dict[str, Tuple[Tuple[int, ...], jnp.dtype]],
+                   pvary_axes: Tuple[str, ...] = (),
+                   ) -> Dict[str, jnp.ndarray]:
+    """Apply ``pair_fn`` over each query agent's run candidates, chunked.
+
+    Sorts the channels once (the runs then gather contiguous spans) and
+    resolves candidates inline per chunk. For several consumers per grid build,
+    use :func:`build_candidates` + :func:`candidates_apply` instead — the
+    engine shares one candidate list across forces, behaviors and statics.
+    """
+    sorted_ch = sort_channels(grid, channels)
+
+    def cand_fn(q_pos, q_slot):
+        pos, valid = neighbor_runs(spec, grid, q_pos)
+        valid &= pos != grid.rank[q_slot][:, None]          # exclude self
+        return pos, valid
+
+    return chunk_apply(channels, sorted_ch, query_idx, n_query, cand_fn,
+                       pair_fn, out_specs, spec.query_chunk, pvary_axes)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class NeighborCandidates:
+    """Per-step cached candidate pipeline (DESIGN.md §3.4).
+
+    Built once per grid build and shared by every neighbor consumer of the
+    step (force sweep, behaviors, static-flag update) — cells, keys and range
+    lookups are resolved exactly once per iteration.
+    """
+    pos: jnp.ndarray                          # (C, 9·R) int32 sorted-pool positions
+    valid: jnp.ndarray                        # (C, 9·R) bool (self excluded)
+    sorted_channels: Dict[str, jnp.ndarray]   # channels in grid-key order
+
+
+def build_candidates(spec: GridSpec, grid: GridState,
+                     channels: Dict[str, jnp.ndarray]) -> NeighborCandidates:
+    """Resolve every slot's candidate runs once (vectorized, no chunking)."""
+    pos, valid = neighbor_runs(spec, grid, channels["position"])
+    valid &= pos != grid.rank[:, None]                      # exclude self
+    return NeighborCandidates(pos=pos, valid=valid,
+                              sorted_channels=sort_channels(grid, channels))
+
+
+def candidates_apply(spec: GridSpec,
+                     cand: NeighborCandidates,
+                     channels: Dict[str, jnp.ndarray],
+                     query_idx: jnp.ndarray,
+                     n_query: jnp.ndarray,
+                     pair_fn: Callable,
+                     out_specs: Dict[str, Tuple[Tuple[int, ...], jnp.dtype]],
+                     pvary_axes: Tuple[str, ...] = (),
+                     ) -> Dict[str, jnp.ndarray]:
+    """``neighbor_apply`` over a pre-built shared candidate list."""
+    def cand_fn(q_pos, q_slot):
+        return cand.pos[q_slot], cand.valid[q_slot]
+
+    return chunk_apply(channels, cand.sorted_channels, query_idx, n_query,
+                       cand_fn, pair_fn, out_specs, spec.query_chunk,
+                       pvary_axes)
+
+
 # ---------------------------------------------------------------------------
 # Alternative environments (Fig 11 comparison)
 # ---------------------------------------------------------------------------
 
 def brute_force_apply(channels: Dict[str, jnp.ndarray],
                       alive: jnp.ndarray,
-                      radius: jnp.ndarray,
                       pair_fn,
                       out_specs,
                       chunk: int = 512) -> Dict[str, jnp.ndarray]:
     """Exact O(N²) neighbor apply (oracle + Fig-11 baseline).
 
     pair_fn has the same signature as in neighbor_apply; candidates are *all*
-    agents (validity = alive & within radius is left to pair_fn via ``valid``
-    carrying alive & not-self; radius masking is pair_fn's own distance test,
-    identical to the grid path).
+    agents (``valid`` carries alive & not-self; the radius test is pair_fn's
+    own distance mask, identical to the grid path).
     """
     c = channels["position"].shape[0]
     chunk = min(chunk, c)
-    n_chunks = (c + chunk - 1) // chunk
-    outs = {name: jnp.zeros((c, *sfx), dt) for name, (sfx, dt) in out_specs.items()}
+    ids = jnp.arange(c, dtype=jnp.int32)
 
-    def body(i, outs):
-        sl = i * chunk
-        q_slot = sl + jnp.arange(chunk, dtype=jnp.int32)
-        q_slot = jnp.minimum(q_slot, c - 1)
-        lane_ok = (sl + jnp.arange(chunk)) < c
-        q = {k: v[q_slot] for k, v in channels.items()}
-        ids = jnp.arange(c, dtype=jnp.int32)
-        valid = alive[None, :] & lane_ok[:, None]
-        valid &= ids[None, :] != q_slot[:, None]
-        nbr = {k: jnp.broadcast_to(v[None], (chunk, *v.shape)) for k, v in channels.items()}
-        res = pair_fn(q, nbr, valid, q_slot)
-        new_outs = dict(outs)
-        for name, val in res.items():
-            val = jnp.where(lane_ok.reshape((chunk,) + (1,) * (val.ndim - 1)), val, 0)
-            new_outs[name] = outs[name].at[q_slot].add(val.astype(outs[name].dtype),
-                                                       mode="drop")
-        return new_outs
+    def cand_fn(q_pos, q_slot):
+        b = q_slot.shape[0]
+        idx = jnp.broadcast_to(ids[None], (b, c))
+        valid = alive[None, :] & (idx != q_slot[:, None])
+        return idx, valid
 
-    return jax.lax.fori_loop(0, n_chunks, body, outs)
+    q_idx = jnp.arange(c, dtype=jnp.int32)
+    return chunk_apply(channels, channels, q_idx, jnp.int32(c), cand_fn,
+                       pair_fn, out_specs, chunk)
 
 
 @jax.tree_util.register_dataclass
@@ -238,7 +366,7 @@ class ScatterGridState:
 def build_scatter_grid(spec: GridSpec, pool: AgentPool, origin, box_size
                        ) -> ScatterGridState:
     m, k = spec.table_size, spec.max_per_box
-    keys = morton.morton_keys(pool.position, origin, box_size, spec.dims)
+    keys = morton.linear_keys(pool.position, origin, box_size, spec.dims)
     keys = jnp.where(pool.alive, keys, m)  # park dead at row m (dropped)
     # slot-within-box via sort (the CPU version uses sequential insertion;
     # the data-parallel equivalent needs a sort or atomics — we sort).
@@ -264,7 +392,8 @@ def scatter_grid_candidates(spec: GridSpec, g: ScatterGridState, query_pos
     dims = jnp.asarray(spec.dims, jnp.int32)
     inside = jnp.all((ncell >= 0) & (ncell < dims), axis=-1)
     ncell_c = jnp.clip(ncell, 0, dims - 1)
-    codes = morton.encode3(ncell_c[..., 0], ncell_c[..., 1], ncell_c[..., 2]).astype(jnp.int32)
+    codes = morton.linear_encode3(ncell_c[..., 0], ncell_c[..., 1],
+                                  ncell_c[..., 2], spec.dims).astype(jnp.int32)
     members = g.table[codes]                                      # (Q,27,K)
     valid = (members >= 0) & inside[..., None]
     q = query_pos.shape[0]

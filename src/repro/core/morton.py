@@ -1,10 +1,20 @@
-"""Morton (Z-order) space-filling curve codes — paper §4.2 (Agent Sorting and Balancing).
+"""Cell keys: row-major linear codes (grid indexing) + Morton codes (§4.2 sort).
 
-The paper sorts agents along a Morton curve so that agents close in 3-D space are
-close in memory, improving cache hit rate and minimizing remote-DRAM traffic.
-On TPU the same sort improves gather locality and — crucially — makes each grid
-box's agents *contiguous* in the pool, which is what the sort-based uniform grid
-(grid.py) and the windowed Pallas force kernel (kernels/collision_force.py) rely on.
+Two distinct key families live here, and the distinction matters (DESIGN.md §3):
+
+* **Linear keys** — row-major box ids ``(ix·dy + iy)·dz + iz`` — index the
+  uniform grid (grid.py) and the Pallas column map (kernels/ops.py). The key
+  space is exactly ``prod(dims)`` (no power-of-two padding), and the
+  fastest-varying axis (z) makes each 3×3×3 neighborhood decompose into 9
+  *contiguous* runs of 3 boxes — this is what BioDynaMo's row-major box
+  indexing relies on, and what turns neighbor queries into range reads.
+
+* **Morton (Z-order) keys** — paper §4.2 (Agent Sorting and Balancing) — are
+  used *only* for the periodic agent-memory-layout sort (engine.sort_pool):
+  agents close in 3-D space end up close in memory, improving cache hit rate
+  and gather locality. They are deliberately NOT used as grid box ids: Morton
+  box ids force the per-box table up to the next power-of-two cube and scatter
+  the 27 stencil boxes across the code space (27 independent gathers).
 
 The paper's gap-skipping quadtree traversal (to enumerate Morton codes of a
 non-power-of-two grid in linear time without a sort) is a serial-CPU trick; on
@@ -12,8 +22,8 @@ TPU the fully-parallel XLA sort is faster, so we intentionally do not port it
 (DESIGN.md §10). We keep the paper's choice of Morton over Hilbert (paper
 measured only 0.54% difference, Morton decode is far cheaper).
 
-Supports 10 bits per dimension in 3-D (grids up to 1024^3 boxes) and 16 bits per
-dimension in 2-D, using uint32 codes (no x64 requirement).
+Morton supports 10 bits per dimension in 3-D (grids up to 1024^3 boxes) and 16
+bits per dimension in 2-D, using uint32 codes (no x64 requirement).
 """
 
 from __future__ import annotations
@@ -104,26 +114,75 @@ def cell_of(position: jnp.ndarray, origin: jnp.ndarray, box_size: float,
 
 def morton_keys(position: jnp.ndarray, origin: jnp.ndarray, box_size: float,
                 dims: tuple[int, int, int]) -> jnp.ndarray:
-    """Morton sort key (uint32) per agent — box id in Morton space.
+    """Morton sort key (uint32) per agent — §4.2 memory-layout sort only.
 
-    Agents in the same grid box share a key; sorting by this key groups agents
-    by box *and* orders boxes along the space-filling curve (paper §3.1 + §4.2
-    synergy: 'linked-list elements will be closer to each other').
+    Agents in the same grid box share a key; sorting by this key orders boxes
+    along the space-filling curve ('linked-list elements will be closer to
+    each other'). Grid *indexing* uses :func:`linear_keys` instead
+    (DESIGN.md §3).
     """
     cell = cell_of(position, origin, box_size, dims)
     return encode3(cell[..., 0], cell[..., 1], cell[..., 2])
 
 
 def code_space_size(dims: tuple[int, int, int]) -> int:
-    """Size of the dense Morton-indexed table covering grid ``dims``.
+    """Size of a dense Morton-indexed table covering grid ``dims``.
 
     The Morton code space is the cube of the next power of two of max(dims):
-    2**(3*bits). For non-pow2 grids this over-allocates (the paper's 'gaps');
-    we accept the dense table because vectorized ops over it are cheap on TPU
-    and it keeps start/count lookup O(1) (DESIGN.md §4.2).
+    2**(3*bits) — over-allocated for non-pow2/anisotropic grids (the paper's
+    'gaps'). Kept for the §4.2 sort-key analysis; grid tables use
+    :func:`linear_size` instead (exactly prod(dims), DESIGN.md §3).
     """
     m = max(dims)
     bits = max(1, (m - 1).bit_length())
     if bits > MAX_BITS_3D:
         raise ValueError(f"grid dim {m} needs {bits} bits/axis > {MAX_BITS_3D}")
     return 1 << (3 * bits)
+
+
+# ---------------------------------------------------------------------------
+# Row-major linear cell keys (grid indexing — DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+def linear_size(dims: tuple[int, int, int]) -> int:
+    """Size of the dense linear-key table: exactly ``prod(dims)`` boxes."""
+    n = dims[0] * dims[1] * dims[2]
+    if n >= 2 ** 31:
+        raise ValueError(f"grid {dims} has {n} boxes > int32 key space")
+    return n
+
+
+def linear_encode3(ix: jnp.ndarray, iy: jnp.ndarray, iz: jnp.ndarray,
+                   dims: tuple[int, int, int]) -> jnp.ndarray:
+    """Row-major box id with z fastest-varying (uint32).
+
+    Adjacent-z boxes get adjacent ids, so a 3-box z-run of the 3×3×3 stencil
+    is one contiguous key range.
+    """
+    ix = ix.astype(jnp.uint32)
+    iy = iy.astype(jnp.uint32)
+    iz = iz.astype(jnp.uint32)
+    return (ix * jnp.uint32(dims[1]) + iy) * jnp.uint32(dims[2]) + iz
+
+
+def linear_decode3(code: jnp.ndarray, dims: tuple[int, int, int]
+                   ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Inverse of :func:`linear_encode3` → (ix, iy, iz) uint32."""
+    code = code.astype(jnp.uint32)
+    iz = code % jnp.uint32(dims[2])
+    rest = code // jnp.uint32(dims[2])
+    iy = rest % jnp.uint32(dims[1])
+    ix = rest // jnp.uint32(dims[1])
+    return ix, iy, iz
+
+
+def linear_keys(position: jnp.ndarray, origin: jnp.ndarray, box_size: float,
+                dims: tuple[int, int, int]) -> jnp.ndarray:
+    """Row-major linear box id (uint32) per agent — the grid sort key.
+
+    Sorting by this key groups agents by box and orders boxes row-major, so
+    every box — and every 3-box z-run — is a contiguous span of the sorted
+    pool (DESIGN.md §3).
+    """
+    cell = cell_of(position, origin, box_size, dims)
+    return linear_encode3(cell[..., 0], cell[..., 1], cell[..., 2], dims)

@@ -20,11 +20,10 @@ DESIGN.md §2/O6).
 
 from __future__ import annotations
 
-from typing import Dict
+from typing import Callable, Dict
 
 import jax.numpy as jnp
 
-from . import grid as grid_mod
 from .agents import AgentPool
 
 
@@ -45,20 +44,20 @@ def statics_pair_fn(interaction_radius: jnp.ndarray, iteration: jnp.ndarray):
     return pair_fn
 
 
-def update_static_flags(spec: grid_mod.GridSpec,
-                        grid: grid_mod.GridState,
-                        pool: AgentPool,
+def update_static_flags(pool: AgentPool,
                         interaction_radius: jnp.ndarray,
-                        iteration: jnp.ndarray) -> jnp.ndarray:
-    """Recompute ``static`` for every live agent (paper §5 conditions i–iv)."""
-    channels = {k: v for k, v in pool.channels().items() if not k.startswith("extra.")}
-    c = pool.capacity
-    all_idx = jnp.arange(c, dtype=jnp.int32)
-    res = grid_mod.neighbor_apply(
-        spec, grid, channels,
-        query_idx=all_idx, n_query=pool.n_live,  # live agents occupy the front
-        pair_fn=statics_pair_fn(interaction_radius, iteration),
-        out_specs={"neigh_disturbed": ((), jnp.int32)},
+                        iteration: jnp.ndarray,
+                        neighbor_apply: Callable) -> jnp.ndarray:
+    """Recompute ``static`` for every live agent (paper §5 conditions i–iv).
+
+    ``neighbor_apply`` is the engine's per-step closure — the candidate list
+    and sorted channels it caches are shared with the force sweep, so this
+    pass costs one extra sweep but zero extra candidate derivation
+    (DESIGN.md §3.4).
+    """
+    res = neighbor_apply(
+        statics_pair_fn(interaction_radius, iteration),
+        {"neigh_disturbed": ((), jnp.int32)},
     )
     neigh_disturbed = res["neigh_disturbed"] > 0
     self_ok = ~pool.moved & ~pool.grew & (pool.born_iter != iteration)

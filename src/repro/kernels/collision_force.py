@@ -1,8 +1,9 @@
 """K1: tiled pairwise collision force — Pallas TPU kernel.
 
 The paper identifies the pairwise mechanical force as the dominant cost (§5).
-On TPU we exploit the Morton sort (§4.2): after sorting, each grid box's agents
-are contiguous, so the candidate neighbors of a *block* of 128 consecutive
+On TPU we exploit the grid-key sort (row-major linear keys, DESIGN.md §3):
+after sorting, each grid box — and each 3-box z-run of the stencil — is
+contiguous, so the candidate neighbors of a *block* of 128 consecutive
 agents live in a small set of 128-wide column blocks. The engine precomputes a
 block-sparse column map (ops.build_block_cols); the kernel sweeps
 (row_block × listed col_blocks), computing a 128×128 pairwise force tile in

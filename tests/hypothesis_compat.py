@@ -1,0 +1,87 @@
+"""Import ``given``/``settings``/``st`` from hypothesis, or a tiny fallback.
+
+The CI image installs hypothesis (requirements-dev.txt); minimal containers may
+not have it. The fallback keeps the property tests *runnable* as seeded random
+sampling: each ``@given`` test runs a fixed number of examples drawn from a
+deterministic RNG. It covers only the strategy subset this suite uses
+(integers, floats, booleans, tuples, lists, sampled_from) — install real
+hypothesis for shrinking and edge-case generation.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+    import numpy as _np
+
+    _FALLBACK_MAX_EXAMPLES = 8   # keep the no-hypothesis suite fast
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                          max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: float(rng.uniform(min_value,
+                                                           max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+        @staticmethod
+        def tuples(*elems):
+            return _Strategy(lambda rng: tuple(e.example(rng) for e in elems))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elem.example(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    st = _St()
+
+    def given(*strategies):
+        def deco(test):
+            def wrapper():
+                n = min(getattr(wrapper, "_max_examples",
+                                _FALLBACK_MAX_EXAMPLES),
+                        _FALLBACK_MAX_EXAMPLES)
+                for i in range(n):
+                    rng = _np.random.default_rng(1000 + i)
+                    args = [s.example(rng) for s in strategies]
+                    try:
+                        test(*args)
+                    except Exception as e:  # noqa: BLE001
+                        raise AssertionError(
+                            f"falsifying example (fallback draw {i}): "
+                            f"{args!r}") from e
+            wrapper.__name__ = test.__name__
+            wrapper.__doc__ = test.__doc__
+            return wrapper
+        return deco
+
+    def settings(**kwargs):
+        def deco(fn):
+            if "max_examples" in kwargs:
+                fn._max_examples = kwargs["max_examples"]
+            return fn
+        return deco

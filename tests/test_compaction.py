@@ -4,7 +4,7 @@ import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import agents, compaction
 

@@ -55,8 +55,10 @@ _SCRIPT = textwrap.dedent("""
     bounds = D.quantile_boundaries(channels["position"][:, 0],
                                    channels["alive"], n_shards, 0.0, SIDE)
     sharded = D.partition_global(channels, bounds, dcfg)
-    mesh = jax.make_mesh((n_shards,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh_kw = {}
+    if hasattr(jax.sharding, "AxisType"):   # jax >= 0.6
+        mesh_kw["axis_types"] = (jax.sharding.AxisType.Auto,)
+    mesh = jax.make_mesh((n_shards,), ("data",), **mesh_kw)
     step = D.make_distributed_step(dcfg, mesh)
     stats = None
     for _ in range(5):

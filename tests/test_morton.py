@@ -2,7 +2,7 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import morton
 
@@ -72,3 +72,37 @@ def test_locality_beats_rowmajor():
 def test_code_space_size():
     assert morton.code_space_size((8, 8, 8)) == 512
     assert morton.code_space_size((9, 3, 3)) == 16 ** 3  # next pow2 = 16
+
+
+# --- row-major linear keys (grid indexing — DESIGN.md §3) ---
+
+def test_linear_size_exact():
+    assert morton.linear_size((8, 8, 8)) == 512
+    assert morton.linear_size((9, 3, 3)) == 81        # no pow2 padding
+    assert morton.linear_size((33, 33, 33)) == 35937  # Fig-11 grid
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 19), st.integers(0, 7),
+                          st.integers(0, 3)), min_size=1, max_size=64))
+def test_linear_roundtrip_anisotropic(coords):
+    dims = (20, 8, 4)
+    a = np.asarray(coords, dtype=np.uint32)
+    c = morton.linear_encode3(jnp.asarray(a[:, 0]), jnp.asarray(a[:, 1]),
+                              jnp.asarray(a[:, 2]), dims)
+    assert int(jnp.max(c)) < morton.linear_size(dims)
+    dx, dy, dz = morton.linear_decode3(c, dims)
+    np.testing.assert_array_equal(np.asarray(dx), a[:, 0])
+    np.testing.assert_array_equal(np.asarray(dy), a[:, 1])
+    np.testing.assert_array_equal(np.asarray(dz), a[:, 2])
+
+
+def test_linear_z_runs_contiguous():
+    """The property grid queries rely on: the 3 stencil boxes (x, y, z-1..z+1)
+    have adjacent linear ids, so each (dx, dy) column is one key range."""
+    dims = (5, 7, 9)
+    x, y, z = jnp.uint32(3), jnp.uint32(2), jnp.uint32(4)
+    c0 = morton.linear_encode3(x, y, z - 1, dims)
+    c1 = morton.linear_encode3(x, y, z, dims)
+    c2 = morton.linear_encode3(x, y, z + 1, dims)
+    assert int(c1) == int(c0) + 1 and int(c2) == int(c1) + 1
