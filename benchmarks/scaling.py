@@ -1,27 +1,43 @@
 """Paper Fig 6: runtime per iteration vs #agents — the linearity claim.
 
 The paper shows runtime flat until ~1e5 agents then linear to 1e9. The
-container (1 CPU core) covers 1e3→1e5 and validates the *slope*: a log-log
-fit of runtime vs N over the linear regime should give exponent ≈ 1
-(grid build is O(N log N) from the sort; forces O(N·k)).
+container (1 CPU core) covers 1e3→2.56e5 and validates the *slope*: a log-log
+fit of runtime vs N over the linear regime should give exponent ≈ 1 (grid
+build is O(N log N) from the sort; forces O(N·k)). The 256k point exercises
+the resident-layout path at scale: every step re-permutes all SoA channels
+and streams the force runs from the grid-ordered pool.
+
+Emits machine-readable ``BENCH_scaling.json`` (per-N µs/step + the fitted
+log-log slope). ``SCALING_SIZES`` (comma-separated) overrides the size list —
+the CI smoke runs a reduced set to stay inside the runner budget.
 """
 
 from __future__ import annotations
+
+import os
 
 import numpy as np
 
 from repro.core import EngineConfig, ForceParams, Simulation
 from repro.core.behaviors import GrowDivide
 
-from .common import emit, random_positions, time_fn
+from .common import emit, random_positions, time_fn, write_bench_json
 
-SIZES = (1_000, 4_000, 16_000, 64_000)
+SIZES = (1_000, 4_000, 16_000, 64_000, 256_000)
+
+
+def _sizes() -> tuple:
+    env = os.environ.get("SCALING_SIZES")
+    if env:
+        return tuple(int(s) for s in env.split(",") if s)
+    return SIZES
 
 
 def run() -> None:
     rng = np.random.default_rng(0)
+    sizes = _sizes()
     times = []
-    for n in SIZES:
+    for n in sizes:
         side = max(40.0, (n ** (1 / 3)) * 4.0)      # constant density
         cfg = EngineConfig(capacity=int(n * 1.3), domain_lo=(0, 0, 0),
                            domain_hi=(side,) * 3, interaction_radius=4.0,
@@ -34,8 +50,18 @@ def run() -> None:
         us = time_fn(lambda s: sim.step(s), st, warmup=1, iters=3)
         times.append(us)
         emit(f"fig6_scaling_n{n}", us, f"n={n}")
-    # slope over the linear regime (largest two decades)
-    logn = np.log(np.asarray(SIZES[1:], float))
-    logt = np.log(np.asarray(times[1:], float))
-    slope = np.polyfit(logn, logt, 1)[0]
-    emit("fig6_scaling_slope", 0.0, f"loglog_slope={slope:.3f} (paper: ~1)")
+    # slope over the linear regime (everything past the latency-bound point);
+    # None (JSON null) when too few sizes — NaN is not valid JSON
+    slope = None
+    if len(sizes) >= 3:
+        logn = np.log(np.asarray(sizes[1:], float))
+        logt = np.log(np.asarray(times[1:], float))
+        slope = float(np.polyfit(logn, logt, 1)[0])
+        emit("fig6_scaling_slope", 0.0, f"loglog_slope={slope:.3f} (paper: ~1)")
+    write_bench_json("BENCH_scaling.json", {
+        "sizes": list(sizes),
+        "us_per_step": {str(n): t for n, t in zip(sizes, times)},
+        "agents_iter_per_sec": {str(n): n / (t / 1e6)
+                                for n, t in zip(sizes, times)},
+        "loglog_slope": slope,
+    })

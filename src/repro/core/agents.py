@@ -11,6 +11,14 @@ Invariant maintained by the engine (mirrors the paper's "disallow empty vector
 elements in the ResourceManager"): live agents occupy slots ``[0, n_live)``;
 slots ``[n_live, capacity)`` are free. This makes per-device partitioning and
 the windowed force kernel's index math trivial.
+
+Under the resident grid layout (grid.build_resident, DESIGN.md §3.2) the
+engine strengthens this at every grid build: live agents sit in [0, n_live)
+*in row-major grid-key order* — agents of the same box are adjacent, boxes
+are adjacent along z. Slot ids are therefore stable only within an iteration;
+anything tracking agents across steps must key on channel state, not slot
+index (the permutation is returned by build_resident for callers that need
+to re-map).
 """
 
 from __future__ import annotations

@@ -12,6 +12,12 @@ vectorized pass with no data-dependent control flow).
 Additions mirror the paper's thread-local queues: behaviors stage newborn agents
 in a fixed-capacity *birth queue*; the commit reserves contiguous slots at the
 tail ``[n_live, n_live + n_new)`` via the same prefix sum.
+
+The per-step resident reorder (grid.build_resident) routes through
+:func:`apply_permutation` with the grid sort key's argsort: dead slots carry
+the maximum key (morton.DEAD_KEY), so the one permutation simultaneously
+grid-orders the live agents and compacts the dead to the tail — composing the
+paper's §3.2 removal with its §4.2 memory-layout sort.
 """
 
 from __future__ import annotations
@@ -118,3 +124,21 @@ def active_index_list(active: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     pad_val = jnp.where(n_active > 0, idx[jnp.maximum(n_active - 1, 0)], 0)
     idx = jnp.where(jnp.arange(c) < n_active, idx, pad_val)
     return idx, n_active
+
+
+def active_block_list(active: jnp.ndarray, block: int
+                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Ids of ``block``-sized slot ranges containing ≥1 active agent.
+
+    The block-granular form of :func:`active_index_list` (paper §5 / O6 on a
+    vector machine): the resident layout keeps queries contiguous, so the
+    force loop slices whole blocks and skips fully-inactive ones outright via
+    a dynamic trip count. ``active.shape[0]`` need not divide ``block``; the
+    trailing partial range counts as one block. Returns (blk_idx, n_blocks)
+    with the tail of ``blk_idx`` padded safely (see active_index_list).
+    """
+    c = active.shape[0]
+    n_blk = (c + block - 1) // block
+    pad = n_blk * block - c
+    blk_any = jnp.any(jnp.pad(active, (0, pad)).reshape(n_blk, block), axis=1)
+    return active_index_list(blk_any)

@@ -1,10 +1,14 @@
 """Simulation engine — paper §2 Algorithm 1, one fused XLA program per iteration.
 
 Iteration structure (paper L2–L19):
-  pre-standalone ops:   periodic Morton sort (§4.2), grid rebuild (§3.1),
-                        diffusion step, static-flag update (§5, from last
-                        iteration's bookkeeping)
-  agent ops:            mechanical forces over the *active* set (§5 skipping),
+  pre-standalone ops:   resident grid rebuild (§3.1 + §4.2: ONE permutation
+                        grid-orders the pool, sorts agents in memory, and
+                        compacts the dead — the periodic Morton sort is a
+                        no-op special case of it), diffusion step, static-flag
+                        update (§5, box-granular, from last iteration's
+                        bookkeeping)
+  agent ops:            mechanical forces over the *active blocks* only
+                        (§5 skipping at block granularity, run-streaming),
                         displacement integration, behaviors
   post-standalone ops:  death compaction + birth commit (§3.2), statistics
 
@@ -43,7 +47,12 @@ class EngineConfig:
     dt: float = 1.0
     use_forces: bool = True
     detect_static: bool = False            # paper detect_static_agents
-    sort_frequency: int = 0                # paper Fig 12 (0 = never sort)
+    sort_frequency: int = 0                # paper Fig 12 (0 = never sort).
+                                           # Resident environments
+                                           # (uniform_grid/brute_force) sort
+                                           # every step as part of the grid
+                                           # build; this only drives the
+                                           # Morton sort of scatter/hash envs.
     environment: str = "uniform_grid"      # uniform_grid | scatter_grid | hash_grid | brute_force
     force_impl: str = "xla"                # xla | pallas (K1 windowed kernel;
                                            # interpret mode on CPU, native on TPU)
@@ -94,6 +103,10 @@ class Simulation:
         self.config = config
         self.behaviors = list(behaviors)
         self.spec = config.grid_spec
+        if config.force_impl == "pallas" and config.environment != "uniform_grid":
+            raise ValueError("force_impl='pallas' requires the uniform_grid "
+                             "environment (the kernel consumes its resident "
+                             "grid tables)")
         self._step_fn = jax.jit(self._build_step())
 
     # -- state construction -------------------------------------------------
@@ -121,46 +134,46 @@ class Simulation:
 
     # -- environment dispatch ------------------------------------------------
     def _make_neighbor_apply(self, pool: AgentPool, grid_env, channels):
-        """One neighbor_apply closure per step, every environment through the
-        shared grid.chunk_apply loop (DESIGN.md §3.4).
+        """One neighbor_apply closure per step.
 
-        For the uniform grid with more than one possible neighbor consumer
-        (static detection on, or behaviors present), the candidate list
-        (runs + sorted channels) is built lazily on first use and then
-        *shared* by every consumer of this iteration — force sweep, behaviors
-        and the static-flag update resolve cells, keys and range lookups
-        exactly once per step. A pure force sweep keeps the inline per-chunk
-        path: no (capacity × width) candidate buffer is materialized and
-        candidate derivation shrinks with the active set (§2/O6).
+        Every closure takes ``(pair_fn, out_specs, query_mask=None)`` — the
+        mask defaults to the live set. The uniform grid runs the resident
+        run-streaming loop (grid.resident_apply): contiguous query slices,
+        9 streamed z-runs at width R, and whole-block skipping driven by the
+        mask (§5/O6 — this is where static blocks drop out of the trip
+        count). The hash grid streams its 27 probes through
+        grid.phased_chunk_apply; scatter ('standard implementation') and
+        brute force keep the wide chunk_apply loop.
         """
         cfg, spec = self.config, self.spec
-        cache: list = []   # trace-time memo: one candidate build per step
 
         if cfg.environment == "uniform_grid":
-            share = cfg.detect_static or bool(self.behaviors)
+            def apply(pair_fn, out_specs, query_mask=None):
+                if query_mask is None:
+                    query_mask = pool.alive
+                return grid_mod.resident_apply(spec, grid_env, channels,
+                                               query_mask, pair_fn, out_specs,
+                                               cfg.query_chunk)
+            return apply
 
-            def apply(pair_fn, out_specs, query_idx=None, n_query=None):
-                if query_idx is None:
-                    query_idx = jnp.arange(pool.capacity, dtype=jnp.int32)
-                    n_query = pool.n_live
-                if not share:
-                    return grid_mod.neighbor_apply(spec, grid_env, channels,
-                                                   query_idx, n_query,
-                                                   pair_fn, out_specs)
-                if not cache:
-                    cache.append(grid_mod.build_candidates(spec, grid_env,
-                                                           channels))
-                return grid_mod.candidates_apply(spec, cache[0], channels,
-                                                 query_idx, n_query,
-                                                 pair_fn, out_specs)
+        if cfg.environment == "hash_grid":
+            def phase_fn(q_pos, q_slot, j):
+                ids, valid = grid_mod.hash_grid_probe(spec, grid_env, q_pos, j)
+                valid &= ids != q_slot[:, None]              # exclude self
+                return ids, valid
+
+            def apply(pair_fn, out_specs, query_mask=None):
+                if query_mask is None:
+                    query_mask = pool.alive
+                query_idx, n_query = compaction.active_index_list(query_mask)
+                return grid_mod.phased_chunk_apply(
+                    channels, channels, query_idx, n_query, phase_fn, 27,
+                    pair_fn, out_specs, cfg.query_chunk)
             return apply
 
         if cfg.environment == "scatter_grid":
             def box_cand(qp):
                 return grid_mod.scatter_grid_candidates(spec, grid_env, qp)
-        elif cfg.environment == "hash_grid":
-            def box_cand(qp):
-                return grid_mod.hash_grid_candidates(spec, grid_env, qp)
         elif cfg.environment == "brute_force":
             ids_all = jnp.arange(pool.capacity, dtype=jnp.int32)
 
@@ -177,24 +190,31 @@ class Simulation:
             valid &= ids != q_slot[:, None]                  # exclude self
             return ids, valid
 
-        def apply(pair_fn, out_specs, query_idx=None, n_query=None):
-            if query_idx is None:
-                query_idx = jnp.arange(pool.capacity, dtype=jnp.int32)
-                n_query = pool.n_live
+        def apply(pair_fn, out_specs, query_mask=None):
+            if query_mask is None:
+                query_mask = pool.alive
+            query_idx, n_query = compaction.active_index_list(query_mask)
             return grid_mod.chunk_apply(channels, channels, query_idx, n_query,
                                         cand_fn, pair_fn, out_specs,
                                         cfg.query_chunk)
         return apply
 
     def _build_env(self, pool, origin, box_size):
+        """Build the iteration's environment.
+
+        Resident environments (uniform_grid, and brute_force — which keeps
+        the grid for statics bookkeeping) return a *permuted pool* alongside
+        the grid state: the pool itself is the key-sorted layout
+        (grid.build_resident). Scatter/hash return the pool unchanged.
+        """
         cfg, spec = self.config, self.spec
         if cfg.environment in ("uniform_grid", "brute_force"):
-            # brute force still builds the uniform grid for statics bookkeeping
-            return grid_mod.build(spec, pool, origin, box_size)
+            pool, genv, _ = grid_mod.build_resident(spec, pool, origin, box_size)
+            return pool, genv
         if cfg.environment == "scatter_grid":
-            return grid_mod.build_scatter_grid(spec, pool, origin, box_size)
+            return pool, grid_mod.build_scatter_grid(spec, pool, origin, box_size)
         if cfg.environment == "hash_grid":
-            return grid_mod.build_hash_grid(spec, pool, origin, box_size)
+            return pool, grid_mod.build_hash_grid(spec, pool, origin, box_size)
         raise ValueError(cfg.environment)
 
     # -- the iteration -------------------------------------------------------
@@ -223,15 +243,24 @@ class Simulation:
             stats = dict(state.stats)
 
             # ---------------- pre standalone ops ----------------
-            if cfg.sort_frequency > 0:
+            # Resident envs reorder every build (the permutation IS the §4.2
+            # sort); the periodic Morton sort only serves scatter/hash.
+            if cfg.sort_frequency > 0 and cfg.environment in ("scatter_grid",
+                                                              "hash_grid"):
                 pool = jax.lax.cond(it % cfg.sort_frequency == 0,
                                     sort_pool, lambda p: p, pool)
-            grid_env = self._build_env(pool, origin, box_size)
+            pool, grid_env = self._build_env(pool, origin, box_size)
             if cfg.environment == "uniform_grid":
                 # query exactness bound: every 3-box z-run must fit the run
                 # gather capacity (DESIGN.md §4.2 overflow contract)
                 stats["box_overflow"] = (grid_env.max_run_count
                                          > spec.run_capacity).astype(jnp.int32)
+            elif cfg.environment == "hash_grid":
+                # same contract: a bucket fuller than the probe gather width
+                # would silently truncate candidates (grid.hash_grid_probe)
+                stats["box_overflow"] = (
+                    grid_env.max_bucket_count
+                    > grid_mod.HASH_K_MULT * spec.max_per_box).astype(jnp.int32)
 
             conc = state.conc
             if cfg.diffusion is not None:
@@ -243,11 +272,13 @@ class Simulation:
                         if not k.startswith("extra.")}
             nbr_apply = self._make_neighbor_apply(pool, grid_env, channels)
 
-            # static flags from last iteration's bookkeeping (paper §5) —
-            # shares the per-step candidate pipeline with the force sweep
-            if cfg.detect_static and cfg.environment == "uniform_grid":
-                static = statics_mod.update_static_flags(
-                    pool, box_size, it, nbr_apply)
+            # static flags from last iteration's bookkeeping (paper §5):
+            # box-granular aggregation over the grid tables — no extra
+            # neighbor sweep (statics.py)
+            if cfg.detect_static and cfg.environment in ("uniform_grid",
+                                                         "brute_force"):
+                static = statics_mod.update_static_flags(pool, spec, grid_env,
+                                                         it)
                 pool = dataclasses.replace(pool, static=static)
 
             pos0 = pool.position
@@ -260,14 +291,15 @@ class Simulation:
                     active = pool.alive & ~pool.static
                 else:
                     active = pool.alive
-                idx, n_active = compaction.active_index_list(active)
                 if cfg.force_impl == "pallas":
-                    # K1: grid-key-sorted windowed tile kernel; static rows are
-                    # skipped at block granularity (kernels/collision_force.py)
+                    # K1 over the resident layout: the kernel consumes the
+                    # step's grid tables directly (no sort/unsort) and skips
+                    # fully-static row blocks (kernels/ops.py)
                     from ..kernels import ops as kops
-                    f, nnz, ovf = kops.collision_force(
+                    f, nnz, ovf = kops.collision_force_resident(
                         pool.position, pool.diameter, pool.agent_type,
-                        pool.alive, active, origin, box_size,
+                        pool.alive, active, grid_env.starts, grid_env.counts,
+                        origin, box_size,
                         dims=spec.dims, k_rep=cfg.force.k_rep,
                         adhesion=cfg.adhesion,
                         adhesion_band=cfg.force.adhesion_band)
@@ -280,7 +312,7 @@ class Simulation:
                     res = nbr_apply(force_pair,
                                     {"force": ((3,), jnp.float32),
                                      "force_nnz": ((), jnp.int32)},
-                                    query_idx=idx, n_query=n_active)
+                                    query_mask=active)
                 dx = force_mod.displacement(res["force"], cfg.force, cfg.dt)
                 new_pos = jnp.clip(pool.position + dx, dlo, dhi)
                 new_pos = jnp.where(active[:, None], new_pos, pool.position)
@@ -366,6 +398,12 @@ class Simulation:
             state = self._step_fn(state)
             if check_overflow:
                 if int(state.stats["box_overflow"]):
+                    if self.config.environment == "hash_grid":
+                        raise RuntimeError(
+                            f"iteration {i}: hash bucket overflow (a bucket "
+                            f"holds > {grid_mod.HASH_K_MULT}×max_per_box = "
+                            f"{grid_mod.HASH_K_MULT * self.spec.max_per_box} "
+                            f"agents); raise EngineConfig.max_per_box")
                     raise RuntimeError(
                         f"iteration {i}: grid run overflow (a 3-box z-run "
                         f"holds > {self.spec.run_capacity} agents); raise "

@@ -12,13 +12,19 @@ idioms. The TPU-native formulation (DESIGN.md §2–§3):
           avoiding (DESIGN.md §2).
   query:  because z is the fastest-varying key axis, the 3×3×3 stencil (paper
           §3.1) collapses into **9 contiguous runs of ≤3 boxes**: 9 range
-          lookups and 9 gathers of run width instead of 27 independent K-wide
-          gathers. Candidates are gathered from a *pre-sorted* copy of the
-          channels, so each run is a contiguous streaming read of the sorted
-          pool (DESIGN.md §3).
+          lookups per query instead of 27 per-box lookups, and each run is a
+          contiguous streaming read of the grid-ordered pool (DESIGN.md §3).
 
-The agent *memory layout* sort (paper §4.2) remains Morton-ordered
-(engine.sort_pool); grid indexing and agent ordering are decoupled.
+**Resident layout (DESIGN.md §3.2):** :func:`build_resident` applies the key
+sort's permutation to the pool itself, so grid-key order *is* the memory
+layout: no per-step sorted copy of the channels, query chunks are contiguous
+slices, the paper's periodic Morton sort (§4.2) is subsumed (agents in the
+same box are adjacent in memory every step), and — because dead slots carry
+the maximum key — the same permutation is the §3.2 death compaction.
+:func:`resident_apply` then *streams* the 9 z-runs through the pairwise
+reduction one at a time (peak candidate footprint B×R instead of B×9R) and
+skips fully-inactive query blocks outright via a dynamic trip count (paper §5
+static regions at block granularity).
 
 Alternative environments (paper Fig 11 comparison, DESIGN.md §10.5):
   * BruteForceEnvironment — exact O(N²) masked sweep (small N oracle).
@@ -26,7 +32,9 @@ Alternative environments (paper Fig 11 comparison, DESIGN.md §10.5):
     table by scatter; models the cost of touching O(#boxes) memory that the
     paper's timestamp trick addresses.
   * HashGridEnvironment — fixed-bucket spatial hash (collisions filtered by the
-    radius mask); models a memory-capped alternative.
+    radius mask); models a memory-capped alternative. Its 27 probes stream
+    through :func:`phased_chunk_apply` — same accumulation loop as the
+    resident path, width K_hash per phase instead of 27·K_hash at once.
 """
 
 from __future__ import annotations
@@ -38,7 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import morton
+from . import compaction, morton
 from .agents import AgentPool
 
 # 27 neighbor offsets of the 3x3x3 cube (static python constant) — used by the
@@ -95,7 +103,7 @@ class GridState:
                                #       > spec.run_capacity)
 
 
-_DEAD_KEY = jnp.uint32(0xFFFFFFFF)
+_DEAD_KEY = morton.DEAD_KEY
 
 
 def _pcast_varying(v: jnp.ndarray, axes: Tuple[str, ...]) -> jnp.ndarray:
@@ -106,43 +114,93 @@ def _pcast_varying(v: jnp.ndarray, axes: Tuple[str, ...]) -> jnp.ndarray:
     return v
 
 
-def build(spec: GridSpec, pool: AgentPool, origin: jnp.ndarray,
-          box_size: jnp.ndarray) -> GridState:
-    """Build the grid index. O(#agents) parallel work + one parallel sort."""
-    keys = morton.linear_keys(pool.position, origin, box_size, spec.dims)
-    keys = jnp.where(pool.alive, keys, _DEAD_KEY)
-    order = jnp.argsort(keys).astype(jnp.int32)              # stable radix-ish sort
-    sorted_keys = keys[order]
-    rank = jnp.zeros_like(order).at[order].set(
-        jnp.arange(order.shape[0], dtype=jnp.int32))
-    # one searchsorted over M+1 ids gives starts AND counts (ends[i]=starts[i+1];
-    # the M'th entry lands at n_live because dead keys sort above every box id)
-    box_ids = jnp.arange(spec.table_size + 1, dtype=jnp.uint32)
+def box_tables(sorted_keys: jnp.ndarray, table_size: int
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dense per-box (starts, counts) from the key-sorted keys.
+
+    One searchsorted over M+1 ids gives starts AND counts (ends[i]=starts[i+1];
+    the M'th entry lands at n_live because dead keys sort above every box id).
+    Shared with the kernel compat wrapper (kernels/ops.collision_force) so the
+    table derivation exists exactly once.
+    """
+    box_ids = jnp.arange(table_size + 1, dtype=jnp.uint32)
     bounds = jnp.searchsorted(sorted_keys, box_ids, side="left").astype(jnp.int32)
-    starts = bounds[:-1]
-    counts = bounds[1:] - bounds[:-1]
+    return bounds[:-1], bounds[1:] - bounds[:-1]
+
+
+def _index_tables(spec: GridSpec, sorted_keys: jnp.ndarray):
+    """(starts, counts, max_count, max_run_count) from the key-sorted keys."""
+    starts, counts = box_tables(sorted_keys, spec.table_size)
     # per z-run occupancy: windowed sum of 3 consecutive-z boxes
     c3 = counts.reshape(spec.dims)
     cp = jnp.pad(c3, ((0, 0), (0, 0), (1, 1)))
     runs = cp[:, :, :-2] + cp[:, :, 1:-1] + cp[:, :, 2:]
+    return starts, counts, jnp.max(counts), jnp.max(runs)
+
+
+def build(spec: GridSpec, pool: AgentPool, origin: jnp.ndarray,
+          box_size: jnp.ndarray) -> GridState:
+    """Build the grid index over the pool *as laid out* (non-resident).
+
+    O(#agents) parallel work + one parallel sort. Queries against this state
+    gather from a key-sorted channel copy (``sort_channels``); the engine's
+    hot path uses :func:`build_resident` instead, which makes that copy the
+    pool itself. Kept for callers that must preserve slot order — the
+    distributed engine (ghost concatenation) and the Fig-11 baselines.
+    """
+    keys = morton.grid_sort_keys(pool.position, pool.alive, origin, box_size,
+                                 spec.dims)
+    order = jnp.argsort(keys).astype(jnp.int32)              # stable radix-ish sort
+    sorted_keys = keys[order]
+    rank = jnp.zeros_like(order).at[order].set(
+        jnp.arange(order.shape[0], dtype=jnp.int32))
+    starts, counts, max_count, max_run = _index_tables(spec, sorted_keys)
     return GridState(origin=jnp.asarray(origin), box_size=jnp.asarray(box_size),
                      keys=keys, order=order, rank=rank, starts=starts,
-                     counts=counts, max_count=jnp.max(counts),
-                     max_run_count=jnp.max(runs))
+                     counts=counts, max_count=max_count, max_run_count=max_run)
 
 
-def neighbor_runs(spec: GridSpec, grid: GridState, query_pos: jnp.ndarray
-                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Candidate neighbors as *sorted-pool positions*, 9 contiguous runs each.
+def build_resident(spec: GridSpec, pool: AgentPool, origin: jnp.ndarray,
+                   box_size: jnp.ndarray
+                   ) -> Tuple[AgentPool, GridState, jnp.ndarray]:
+    """Permute the pool into grid-key order and index it **in place**.
 
-    query_pos: (Q, 3). Returns (pos, valid): (Q, 9·R) int32 positions into the
-    key-sorted pool and bool mask. Each of the 9 (dx, dy) stencil columns is
-    one contiguous range [starts[k_lo], starts[k_hi]+counts[k_hi]) covering the
-    z-run of ≤3 boxes — 9 range lookups instead of 27 per-box lookups, and the
-    resulting gathers stream contiguous spans. Candidates are *box-level*;
-    callers apply the radius test.
+    The one permutation (DESIGN.md §3.2) composes three reorderings the
+    engine used to perform separately:
+      * the grid build's key sort (agents of a box are adjacent),
+      * the paper's §4.2 memory-layout sort (boxes are adjacent row-major —
+        the periodic Morton sort becomes a no-op special case), and
+      * §3.2 death compaction (dead slots carry ``morton.DEAD_KEY`` and sink
+        stably to the tail, so live agents occupy ``[0, n_live)``).
+
+    Returns (pool, grid, order) with ``pool`` reordered, ``grid.order``/
+    ``grid.rank`` the identity (sorted position == slot id), ``grid.keys``
+    already sorted, and ``order`` the applied old→new gather permutation
+    (callers tracking external per-slot state re-map with it).
     """
-    r_cap = spec.run_capacity
+    keys = morton.grid_sort_keys(pool.position, pool.alive, origin, box_size,
+                                 spec.dims)
+    order = jnp.argsort(keys).astype(jnp.int32)
+    pool = compaction.apply_permutation(pool, order)
+    sorted_keys = keys[order]
+    starts, counts, max_count, max_run = _index_tables(spec, sorted_keys)
+    ident = jnp.arange(order.shape[0], dtype=jnp.int32)
+    grid = GridState(origin=jnp.asarray(origin), box_size=jnp.asarray(box_size),
+                     keys=sorted_keys, order=ident, rank=ident, starts=starts,
+                     counts=counts, max_count=max_count, max_run_count=max_run)
+    return pool, grid, order
+
+
+def run_bounds(spec: GridSpec, grid: GridState, query_pos: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-query (start, length) of the 9 contiguous stencil z-runs.
+
+    query_pos: (Q, 3). Returns (s, n), each (Q, 9) int32: for every (dx, dy)
+    stencil column, the sorted-pool range [s, s+n) covering the z-run of ≤3
+    boxes — ``[starts[k_lo], starts[k_hi]+counts[k_hi])`` with clipped
+    endpoints, zero-length where the column falls outside the grid.
+    Candidates are *box-level*; callers apply the radius test.
+    """
     dims = spec.dims
     cell = morton.cell_of(query_pos, grid.origin, grid.box_size, dims)   # (Q,3)
     off = jnp.asarray(_RUN_OFFSETS)                                      # (9,2)
@@ -158,6 +216,19 @@ def neighbor_runs(spec: GridSpec, grid: GridState, query_pos: jnp.ndarray
     s = grid.starts[k_lo]                                                # (Q,9)
     e = grid.starts[k_hi] + grid.counts[k_hi]
     n = jnp.where(inside, e - s, 0)
+    return s, n
+
+
+def neighbor_runs(spec: GridSpec, grid: GridState, query_pos: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Candidate neighbors as *sorted-pool positions*, all 9 runs materialized.
+
+    query_pos: (Q, 3). Returns (pos, valid): (Q, 9·R) int32 positions into the
+    key-sorted pool and bool mask. The wide form of :func:`run_bounds` — hot
+    paths stream the runs one at a time instead (:func:`resident_apply`).
+    """
+    r_cap = spec.run_capacity
+    s, n = run_bounds(spec, grid, query_pos)
     lane = jnp.arange(r_cap, dtype=jnp.int32)                            # (R,)
     pos = s[..., None] + lane                                            # (Q,9,R)
     valid = lane < jnp.minimum(n, r_cap)[..., None]
@@ -180,7 +251,12 @@ def neighbor_candidates(spec: GridSpec, grid: GridState, query_pos: jnp.ndarray
 
 def sort_channels(grid: GridState, channels: Dict[str, jnp.ndarray]
                   ) -> Dict[str, jnp.ndarray]:
-    """Channels reordered by grid key — neighbor runs become contiguous reads."""
+    """Channels reordered by grid key — neighbor runs become contiguous reads.
+
+    Non-resident compat only (distributed engine, Fig-11 baselines): under
+    :func:`build_resident` the pool itself is already in this order and no
+    copy exists to make.
+    """
     return {k: v[grid.order] for k, v in channels.items()}
 
 
@@ -213,41 +289,17 @@ def chunk_apply(channels: Dict[str, jnp.ndarray],
       gather_channels* and validity (self-exclusion included).
     pair_fn(q, nbr, valid, q_slot) -> dict of per-query reductions; q entries
       are (B, ...) chunk slices, nbr entries are (B, W, ...) gathers, valid is
-      (B, W) bool, q_slot is (B,) the query slot ids.
+      (B, W) bool, q_slot is (B,) the query slot ids. May return a subset of
+      out_specs (missing outputs keep their zeros).
     out_specs: name → (shape_suffix, dtype) of per-agent outputs; results are
       scattered back to slot positions, zeros elsewhere.
+
+    This is the single-phase special case of :func:`phased_chunk_apply` —
+    one candidate slab of full width W instead of n_phases streamed slabs.
     """
-    c = channels["position"].shape[0]
-    b = min(chunk, c)
-    n_chunks_max = (c + b - 1) // b
-    # pad so dynamic_slice never clamps (clamping would desync q_slot vs lane_ok)
-    qi = jnp.pad(query_idx, (0, n_chunks_max * b - c))
-    outs = {name: jnp.zeros((c, *sfx), dt) for name, (sfx, dt) in out_specs.items()}
-    if pvary_axes:   # under shard_map: mark the carry varying on those axes
-        outs = {k: _pcast_varying(v, pvary_axes) for k, v in outs.items()}
-
-    def body(i, outs):
-        sl = i * b
-        q_slot = jax.lax.dynamic_slice(qi, (sl,), (b,))                     # (B,)
-        lane_ok = (sl + jnp.arange(b)) < n_query                            # (B,)
-        q = {k: v[q_slot] for k, v in channels.items()}
-        idx, valid = cand_fn(q["position"], q_slot)
-        valid &= lane_ok[:, None]
-        nbr = {k: v[idx] for k, v in gather_channels.items()}
-        res = pair_fn(q, nbr, valid, q_slot)
-        new_outs = {}
-        for name, val in res.items():
-            val = jnp.where(
-                lane_ok.reshape((b,) + (1,) * (val.ndim - 1)), val, 0)
-            new_outs[name] = outs[name].at[q_slot].add(val.astype(outs[name].dtype),
-                                                       mode="drop")
-        for name in outs:
-            if name not in res:
-                new_outs[name] = outs[name]
-        return new_outs
-
-    n_chunks = jnp.minimum((n_query + b - 1) // b, n_chunks_max)
-    return jax.lax.fori_loop(0, n_chunks, body, outs)
+    return phased_chunk_apply(channels, gather_channels, query_idx, n_query,
+                              lambda q_pos, q_slot, j: cand_fn(q_pos, q_slot),
+                              1, pair_fn, out_specs, chunk, pvary_axes)
 
 
 def neighbor_apply(spec: GridSpec,
@@ -261,10 +313,10 @@ def neighbor_apply(spec: GridSpec,
                    ) -> Dict[str, jnp.ndarray]:
     """Apply ``pair_fn`` over each query agent's run candidates, chunked.
 
-    Sorts the channels once (the runs then gather contiguous spans) and
-    resolves candidates inline per chunk. For several consumers per grid build,
-    use :func:`build_candidates` + :func:`candidates_apply` instead — the
-    engine shares one candidate list across forces, behaviors and statics.
+    Non-resident compat path: sorts a channel copy once (the runs then gather
+    contiguous spans) and resolves candidates inline per chunk. The engine's
+    hot path is :func:`build_resident` + :func:`resident_apply`, which needs
+    neither the copy nor the slot-id indirection.
     """
     sorted_ch = sort_channels(grid, channels)
 
@@ -277,45 +329,143 @@ def neighbor_apply(spec: GridSpec,
                        pair_fn, out_specs, spec.query_chunk, pvary_axes)
 
 
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class NeighborCandidates:
-    """Per-step cached candidate pipeline (DESIGN.md §3.4).
+def resident_apply(spec: GridSpec,
+                   grid: GridState,
+                   channels: Dict[str, jnp.ndarray],
+                   query_mask: jnp.ndarray,
+                   pair_fn: Callable,
+                   out_specs: Dict[str, Tuple[Tuple[int, ...], jnp.dtype]],
+                   chunk: Optional[int] = None,
+                   pvary_axes: Tuple[str, ...] = (),
+                   ) -> Dict[str, jnp.ndarray]:
+    """Run-streaming neighbor apply over the RESIDENT grid-ordered pool.
 
-    Built once per grid build and shared by every neighbor consumer of the
-    step (force sweep, behaviors, static-flag update) — cells, keys and range
-    lookups are resolved exactly once per iteration.
+    ``channels`` must be in grid-key order (from :func:`build_resident` —
+    sorted position == slot id). The loop differs from :func:`chunk_apply`
+    in three load-bearing ways (DESIGN.md §3.2):
+
+      * **Contiguous queries.** A query block is a ``dynamic_slice`` of the
+        pool, not a gather through an index list; outputs are written back
+        with ``dynamic_update_slice``, not scatter-add.
+      * **Run streaming.** The 3×3×3 stencil is consumed as 9 sequential
+        z-run gathers of width R accumulated into the per-block outputs —
+        peak candidate footprint B×R instead of the B×9R materialized
+        matrix, and each gather reads one contiguous span.
+      * **Block-granular static skipping (paper §5 / O6).** Only blocks
+        containing ≥1 ``query_mask`` row are visited: the trip count is the
+        *dynamic* number of active blocks (compaction.active_block_list).
+        The resident order clusters spatially-quiescent agents into the same
+        blocks, which is what makes the skip rate track the static fraction.
+
+    ``pair_fn`` outputs must be additive across splits of the candidate axis
+    (sums/counts — encode an OR-style reduction as a count and threshold it).
+    Outputs are written for ``query_mask`` rows, zeros elsewhere.
     """
-    pos: jnp.ndarray                          # (C, 9·R) int32 sorted-pool positions
-    valid: jnp.ndarray                        # (C, 9·R) bool (self excluded)
-    sorted_channels: Dict[str, jnp.ndarray]   # channels in grid-key order
+    c = channels["position"].shape[0]
+    b = min(chunk if chunk is not None else spec.query_chunk, c)
+    r_cap = spec.run_capacity
+    blk_idx, n_blk = compaction.active_block_list(query_mask, b)
+    outs = {name: jnp.zeros((c, *sfx), dt) for name, (sfx, dt) in out_specs.items()}
+    if pvary_axes:   # under shard_map: mark the carry varying on those axes
+        outs = {k: _pcast_varying(v, pvary_axes) for k, v in outs.items()}
+    lane = jnp.arange(r_cap, dtype=jnp.int32)
+
+    def body(i, outs):
+        # clamp the window so a trailing partial block stays in range; overlap
+        # rows recompute identical values (pure per-row function of channels)
+        sl = jnp.minimum(blk_idx[i] * b, c - b)
+        rows = sl + jnp.arange(b, dtype=jnp.int32)                       # (B,)
+        q = {k: jax.lax.dynamic_slice_in_dim(v, sl, b, axis=0)
+             for k, v in channels.items()}
+        qmask = jax.lax.dynamic_slice_in_dim(query_mask, sl, b, axis=0)
+        s, n = run_bounds(spec, grid, q["position"])                     # (B,9)
+        n = jnp.minimum(n, r_cap)
+
+        def run(j, acc):
+            pos = s[:, j, None] + lane                                   # (B,R)
+            valid = lane[None, :] < n[:, j, None]
+            valid &= pos != rows[:, None]          # resident: position == slot
+            pos = jnp.where(valid, pos, 0)
+            nbr = {k: v[pos] for k, v in channels.items()}
+            res = pair_fn(q, nbr, valid, rows)
+            return {name: acc[name] + res[name].astype(acc[name].dtype)
+                    if name in res else acc[name] for name in acc}
+
+        acc0 = {name: jnp.zeros((b, *sfx), dt)
+                for name, (sfx, dt) in out_specs.items()}
+        acc = jax.lax.fori_loop(0, 9, run, acc0)
+        new_outs = {}
+        for name, val in acc.items():
+            val = jnp.where(qmask.reshape((b,) + (1,) * (val.ndim - 1)), val, 0)
+            new_outs[name] = jax.lax.dynamic_update_slice_in_dim(
+                outs[name], val, sl, axis=0)
+        return new_outs
+
+    return jax.lax.fori_loop(0, n_blk, body, outs)
 
 
-def build_candidates(spec: GridSpec, grid: GridState,
-                     channels: Dict[str, jnp.ndarray]) -> NeighborCandidates:
-    """Resolve every slot's candidate runs once (vectorized, no chunking)."""
-    pos, valid = neighbor_runs(spec, grid, channels["position"])
-    valid &= pos != grid.rank[:, None]                      # exclude self
-    return NeighborCandidates(pos=pos, valid=valid,
-                              sorted_channels=sort_channels(grid, channels))
+def phased_chunk_apply(channels: Dict[str, jnp.ndarray],
+                       gather_channels: Dict[str, jnp.ndarray],
+                       query_idx: jnp.ndarray,
+                       n_query: jnp.ndarray,
+                       phase_fn: Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray],
+                                          Tuple[jnp.ndarray, jnp.ndarray]],
+                       n_phases: int,
+                       pair_fn: Callable,
+                       out_specs: Dict[str, Tuple[Tuple[int, ...], jnp.dtype]],
+                       chunk: int,
+                       pvary_axes: Tuple[str, ...] = (),
+                       ) -> Dict[str, jnp.ndarray]:
+    """:func:`chunk_apply` with the candidate axis split into streamed phases.
 
+    ``phase_fn(q_pos, q_slot, j)`` resolves the j'th candidate slab (idx,
+    valid) of fixed width W; the inner loop accumulates ``pair_fn`` results
+    across the ``n_phases`` slabs, so peak candidate footprint is B×W instead
+    of B×(n_phases·W). The same additive-output contract as
+    :func:`resident_apply` applies (``pair_fn`` may return a subset of
+    out_specs). Used by the hash-grid environment (27 single-box probes —
+    the wide form was its Fig-11 pathology) and, with ``n_phases=1``, as the
+    body of :func:`chunk_apply`.
+    """
+    c = channels["position"].shape[0]
+    b = min(chunk, c)
+    n_chunks_max = (c + b - 1) // b
+    # pad so dynamic_slice never clamps (clamping would desync q_slot vs lane_ok)
+    qi = jnp.pad(query_idx, (0, n_chunks_max * b - c))
+    outs = {name: jnp.zeros((c, *sfx), dt) for name, (sfx, dt) in out_specs.items()}
+    if pvary_axes:   # under shard_map: mark the carry varying on those axes
+        outs = {k: _pcast_varying(v, pvary_axes) for k, v in outs.items()}
 
-def candidates_apply(spec: GridSpec,
-                     cand: NeighborCandidates,
-                     channels: Dict[str, jnp.ndarray],
-                     query_idx: jnp.ndarray,
-                     n_query: jnp.ndarray,
-                     pair_fn: Callable,
-                     out_specs: Dict[str, Tuple[Tuple[int, ...], jnp.dtype]],
-                     pvary_axes: Tuple[str, ...] = (),
-                     ) -> Dict[str, jnp.ndarray]:
-    """``neighbor_apply`` over a pre-built shared candidate list."""
-    def cand_fn(q_pos, q_slot):
-        return cand.pos[q_slot], cand.valid[q_slot]
+    def body(i, outs):
+        sl = i * b
+        q_slot = jax.lax.dynamic_slice(qi, (sl,), (b,))                  # (B,)
+        lane_ok = (sl + jnp.arange(b)) < n_query                         # (B,)
+        q = {k: v[q_slot] for k, v in channels.items()}
 
-    return chunk_apply(channels, cand.sorted_channels, query_idx, n_query,
-                       cand_fn, pair_fn, out_specs, spec.query_chunk,
-                       pvary_axes)
+        def phase(j, acc):
+            idx, valid = phase_fn(q["position"], q_slot, j)
+            valid &= lane_ok[:, None]
+            nbr = {k: v[idx] for k, v in gather_channels.items()}
+            res = pair_fn(q, nbr, valid, q_slot)
+            return {name: acc[name] + res[name].astype(acc[name].dtype)
+                    if name in res else acc[name] for name in acc}
+
+        acc0 = {name: jnp.zeros((b, *sfx), dt)
+                for name, (sfx, dt) in out_specs.items()}
+        if n_phases == 1:
+            acc = phase(jnp.int32(0), acc0)
+        else:
+            acc = jax.lax.fori_loop(0, n_phases, phase, acc0)
+        new_outs = {}
+        for name, val in acc.items():
+            val = jnp.where(
+                lane_ok.reshape((b,) + (1,) * (val.ndim - 1)), val, 0)
+            new_outs[name] = outs[name].at[q_slot].add(
+                val.astype(outs[name].dtype), mode="drop")
+        return new_outs
+
+    n_chunks = jnp.minimum((n_query + b - 1) // b, n_chunks_max)
+    return jax.lax.fori_loop(0, n_chunks, body, outs)
 
 
 # ---------------------------------------------------------------------------
@@ -403,13 +553,29 @@ def scatter_grid_candidates(spec: GridSpec, g: ScatterGridState, query_pos
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class HashGridState:
-    """Spatial-hash grid with a fixed bucket table (memory-capped alternative)."""
+    """Spatial-hash grid with a fixed bucket table (memory-capped alternative).
+
+    ``cell_keys`` holds each slot's *unhashed* linear cell id (dead slots →
+    DEAD_KEY): a bucket mixes agents from every cell that hashes to it, so
+    queries must re-check the candidate's true cell against the probed
+    stencil cell — without it, two stencil cells colliding into one bucket
+    would yield the bucket's in-radius agents twice (double-counted force
+    and force_nnz).
+    """
     origin: jnp.ndarray
     box_size: jnp.ndarray
     keys: jnp.ndarray
+    cell_keys: jnp.ndarray
     order: jnp.ndarray
     starts: jnp.ndarray
     counts: jnp.ndarray
+    max_bucket_count: jnp.ndarray
+
+
+# default probe gather width multiplier: hash collisions inflate buckets, so
+# queries gather HASH_K_MULT×max_per_box per bucket; a bucket fuller than that
+# truncates → flagged via stats["box_overflow"] (engine, DESIGN.md §4.2)
+HASH_K_MULT = 4
 
 
 def _hash_cell(cell: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
@@ -426,32 +592,66 @@ def build_hash_grid(spec: GridSpec, pool: AgentPool, origin, box_size,
     cell = morton.cell_of(pool.position, origin, box_size, spec.dims)
     keys = _hash_cell(cell, n_buckets)
     keys = jnp.where(pool.alive, keys, jnp.uint32(n_buckets))
+    cell_keys = jnp.where(pool.alive,
+                          morton.linear_encode3(cell[..., 0], cell[..., 1],
+                                                cell[..., 2], spec.dims),
+                          morton.DEAD_KEY)
     order = jnp.argsort(keys).astype(jnp.int32)
     sorted_keys = keys[order]
     bucket_ids = jnp.arange(n_buckets, dtype=jnp.uint32)
     starts = jnp.searchsorted(sorted_keys, bucket_ids, side="left").astype(jnp.int32)
     ends = jnp.searchsorted(sorted_keys, bucket_ids, side="right").astype(jnp.int32)
+    counts = ends - starts
     return HashGridState(origin=jnp.asarray(origin), box_size=jnp.asarray(box_size),
-                         keys=keys, order=order, starts=starts, counts=ends - starts)
+                         keys=keys, cell_keys=cell_keys, order=order,
+                         starts=starts, counts=counts,
+                         max_bucket_count=jnp.max(counts))
 
 
-def hash_grid_candidates(spec: GridSpec, g: HashGridState, query_pos,
-                         n_buckets: int = 1 << 14, k_mult: int = 4
-                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Collisions inflate buckets, so gather capacity is k_mult×max_per_box."""
+def hash_grid_probe(spec: GridSpec, g: HashGridState, query_pos,
+                    j: jnp.ndarray, k_mult: int = HASH_K_MULT
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Candidates of the j'th stencil box only — one streamed hash probe.
+
+    phase_fn for :func:`phased_chunk_apply` (27 phases): capacity per probe is
+    one bucket (k_mult·max_per_box), not 27 buckets at once. This is the fix
+    for the Fig-11 hash-grid pathology: the wide (Q, 27·K_hash) candidate
+    matrix was ~12× the uniform grid's and dominated its search time.
+
+    Candidates are filtered to the probed cell's true members (``cell_keys``
+    re-check): without it, two stencil cells hashing to one bucket would
+    double-count the bucket's in-radius agents across phases.
+    """
+    n_buckets = g.starts.shape[0]       # from the build — no mismatch possible
     k = spec.max_per_box * k_mult
-    cell = morton.cell_of(query_pos, g.origin, g.box_size, spec.dims)
-    ncell = cell[:, None, :] + jnp.asarray(_OFFSETS)[None, :, :]
+    cell = morton.cell_of(query_pos, g.origin, g.box_size, spec.dims)    # (Q,3)
+    ncell = cell + jnp.asarray(_OFFSETS)[j][None, :]
     dims = jnp.asarray(spec.dims, jnp.int32)
     inside = jnp.all((ncell >= 0) & (ncell < dims), axis=-1)
     ncell_c = jnp.clip(ncell, 0, dims - 1)
     h = _hash_cell(ncell_c, n_buckets)
+    k_true = morton.linear_encode3(ncell_c[..., 0], ncell_c[..., 1],
+                                   ncell_c[..., 2], spec.dims)           # (Q,)
     s = g.starts[h]
     n = jnp.where(inside, g.counts[h], 0)
     lane = jnp.arange(k, dtype=jnp.int32)
-    pos = s[..., None] + lane
-    valid = lane < jnp.minimum(n, k)[..., None]
+    pos = s[:, None] + lane
+    valid = lane < jnp.minimum(n, k)[:, None]
     pos = jnp.where(valid, pos, 0)
-    ids = g.order[pos]
-    q = query_pos.shape[0]
-    return ids.reshape(q, 27 * k), valid.reshape(q, 27 * k)
+    ids = g.order[pos]                                                   # (Q,k)
+    valid &= g.cell_keys[ids] == k_true[:, None]
+    return ids, valid
+
+
+def hash_grid_candidates(spec: GridSpec, g: HashGridState, query_pos,
+                         k_mult: int = HASH_K_MULT
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Wide (Q, 27·k) candidate matrix: all 27 probes of
+    :func:`hash_grid_probe` materialized at once. Fig-11 baseline only
+    ('hash_grid_wide' — its width is the pathology the streamed probes fix);
+    kept as a thin stack over the probe so the two paths cannot diverge.
+    """
+    probes = [hash_grid_probe(spec, g, query_pos, j, k_mult)
+              for j in range(27)]
+    return (jnp.concatenate([ids for ids, _ in probes], axis=1),
+            jnp.concatenate([valid for _, valid in probes], axis=1))

@@ -186,3 +186,22 @@ def linear_keys(position: jnp.ndarray, origin: jnp.ndarray, box_size: float,
     """
     cell = cell_of(position, origin, box_size, dims)
     return linear_encode3(cell[..., 0], cell[..., 1], cell[..., 2], dims)
+
+
+# Dead slots carry the maximum key so any key sort doubles as compaction:
+# live agents land in [0, n_live) in box order, dead slots sink to the tail.
+DEAD_KEY = jnp.uint32(0xFFFFFFFF)
+
+
+def grid_sort_keys(position: jnp.ndarray, alive: jnp.ndarray,
+                   origin: jnp.ndarray, box_size: float,
+                   dims: tuple[int, int, int]) -> jnp.ndarray:
+    """The resident-layout sort key: linear box id, dead slots → DEAD_KEY.
+
+    One argsort of this key is simultaneously the grid build order, the §4.2
+    memory-locality sort, and dead-slot compaction (DESIGN.md §3.2) — the
+    three reorderings the engine used to do separately compose into a single
+    permutation.
+    """
+    keys = linear_keys(position, origin, box_size, dims)
+    return jnp.where(alive, keys, DEAD_KEY)

@@ -10,56 +10,80 @@ conditions i–iv):
         previously-cancelled force).
 
 Per-agent flags (moved / grew / born_iter / force_nnz) are maintained by the
-engine; this module computes the neighborhood aggregates with one pass of the
-same grid machinery and combines them. Static agents are excluded from the
-force computation via active-index compaction — on TPU, per-lane predication
-saves nothing, so compute is skipped at *block* granularity
-(compaction.active_index_list + dynamic trip count in grid.neighbor_apply;
-DESIGN.md §2/O6).
+engine. The neighborhood conditions (i–iii) are evaluated at **box
+granularity** (DESIGN.md §5): one scatter-add folds per-agent disturbance
+into the dense box table, a 3×3×3 windowed OR spreads it to each box's
+neighborhood, and one per-agent lookup reads the result — O(C + M) table
+work, *no pairwise sweep*. Because the box edge is ≥ the interaction radius,
+every agent within the radius lies inside the 3×3×3 box neighborhood, so the
+box-level aggregate is a conservative superset of the paper's radius test:
+an agent flagged static is static under the exact test too (never a wrong
+skip); a disturbed box merely wakes a slightly larger neighborhood.
+
+Static agents are then excluded from the force computation at *block*
+granularity — on TPU per-lane predication saves nothing, so the resident
+layout's query loop drops whole fully-static blocks via a dynamic trip count
+(grid.resident_apply / compaction.active_block_list), and the Pallas kernel
+gives fully-static row blocks an empty column list (kernels/ops).
 """
 
 from __future__ import annotations
 
-from typing import Callable, Dict
-
+import jax
 import jax.numpy as jnp
 
 from .agents import AgentPool
+from .grid import GridSpec, GridState
 
 
-def statics_pair_fn(interaction_radius: jnp.ndarray, iteration: jnp.ndarray):
-    """pair_fn aggregating neighborhood disturbance within the interaction radius."""
-
-    def pair_fn(q: Dict[str, jnp.ndarray], nbr: Dict[str, jnp.ndarray],
-                valid: jnp.ndarray, q_slot: jnp.ndarray) -> Dict[str, jnp.ndarray]:
-        d = nbr["position"] - q["position"][:, None, :]
-        dist2 = jnp.sum(d * d, axis=-1)
-        in_r = valid & nbr["alive"] & (dist2 <= interaction_radius ** 2)
-        nbr_moved = jnp.any(in_r & nbr["moved"], axis=-1)
-        nbr_grew = jnp.any(in_r & nbr["grew"], axis=-1)
-        nbr_new = jnp.any(in_r & (nbr["born_iter"] == iteration), axis=-1)
-        disturbed = nbr_moved | nbr_grew | nbr_new
-        return {"neigh_disturbed": disturbed.astype(jnp.int32)}
-
-    return pair_fn
+def _window_or(a: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """OR of each cell with its two neighbors along ``axis`` (edge-clipped)."""
+    pad = [(1, 1) if ax == axis else (0, 0) for ax in range(a.ndim)]
+    p = jnp.pad(a, pad)
+    n = a.shape[axis]
+    lo = jax.lax.slice_in_dim(p, 0, n, axis=axis)
+    mid = jax.lax.slice_in_dim(p, 1, n + 1, axis=axis)
+    hi = jax.lax.slice_in_dim(p, 2, n + 2, axis=axis)
+    return lo | mid | hi
 
 
-def update_static_flags(pool: AgentPool,
-                        interaction_radius: jnp.ndarray,
-                        iteration: jnp.ndarray,
-                        neighbor_apply: Callable) -> jnp.ndarray:
+def neighborhood_disturbed(spec: GridSpec, grid: GridState, pool: AgentPool,
+                           iteration: jnp.ndarray) -> jnp.ndarray:
+    """(M,) bool per box: any agent in its 3×3×3 neighborhood was disturbed.
+
+    'Disturbed' = moved or grew last iteration, or was born this iteration
+    (newborns also carry moved=True from the birth commit, which covers the
+    cross-iteration case). Works for both resident and non-resident grids:
+    ``grid.keys`` is per-slot either way. Dead slots carry DEAD_KEY, which as
+    int32 is -1 and would *wrap* to the last box, not drop — clamp to the
+    out-of-range sentinel ``m`` first so mode="drop" really discards them
+    (belt to the ``pool.alive`` mask's suspenders).
+    """
+    disturbed = pool.alive & (pool.moved | pool.grew
+                              | (pool.born_iter == iteration))
+    m = spec.table_size
+    box = jnp.minimum(grid.keys, jnp.uint32(m)).astype(jnp.int32)
+    per_box = jnp.zeros((m,), jnp.int32).at[box].add(
+        disturbed.astype(jnp.int32), mode="drop")
+    d3 = (per_box > 0).reshape(spec.dims)
+    d3 = _window_or(_window_or(_window_or(d3, 0), 1), 2)
+    return d3.reshape(-1)
+
+
+def update_static_flags(pool: AgentPool, spec: GridSpec, grid: GridState,
+                        iteration: jnp.ndarray) -> jnp.ndarray:
     """Recompute ``static`` for every live agent (paper §5 conditions i–iv).
 
-    ``neighbor_apply`` is the engine's per-step closure — the candidate list
-    and sorted channels it caches are shared with the force sweep, so this
-    pass costs one extra sweep but zero extra candidate derivation
-    (DESIGN.md §3.4).
+    Conditions i–iii via the box-granular neighborhood aggregate (conservative
+    superset of the radius test, see module docstring); condition iv from the
+    per-agent ``force_nnz`` bookkeeping. Cost is one scatter-add over the box
+    table plus three windowed ORs — static detection no longer costs a second
+    neighbor sweep, which is what makes ``detect_static=True`` a measured win
+    instead of pure overhead (BENCH_statics.json).
     """
-    res = neighbor_apply(
-        statics_pair_fn(interaction_radius, iteration),
-        {"neigh_disturbed": ((), jnp.int32)},
-    )
-    neigh_disturbed = res["neigh_disturbed"] > 0
+    nbh = neighborhood_disturbed(spec, grid, pool, iteration)
+    box = jnp.minimum(grid.keys, jnp.uint32(spec.table_size - 1)).astype(jnp.int32)
+    neigh_disturbed = nbh[box]
     self_ok = ~pool.moved & ~pool.grew & (pool.born_iter != iteration)
     cond_iv = pool.force_nnz <= 1
     return pool.alive & self_ok & ~neigh_disturbed & cond_iv

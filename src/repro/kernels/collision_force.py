@@ -1,13 +1,16 @@
 """K1: tiled pairwise collision force — Pallas TPU kernel.
 
 The paper identifies the pairwise mechanical force as the dominant cost (§5).
-On TPU we exploit the grid-key sort (row-major linear keys, DESIGN.md §3):
-after sorting, each grid box — and each 3-box z-run of the stencil — is
-contiguous, so the candidate neighbors of a *block* of 128 consecutive
-agents live in a small set of 128-wide column blocks. The engine precomputes a
-block-sparse column map (ops.build_block_cols); the kernel sweeps
+On TPU we exploit the resident grid-key layout (row-major linear keys,
+DESIGN.md §3): the pool arrives already in key order (grid.build_resident),
+so each grid box — and each 3-box z-run of the stencil — is contiguous, and
+the candidate neighbors of a *block* of 128 consecutive agents live in a
+small set of 128-wide column blocks. The engine derives a scalar-prefetched
+run table — the block-sparse column map of the 9 merged stencil runs
+(ops.build_block_cols) — and the kernel traverses it per row block,
 (row_block × listed col_blocks), computing a 128×128 pairwise force tile in
-VMEM per step — flash-attention-like structure with VPU math instead of MXU.
+VMEM per step: candidates are never materialized in HBM —
+flash-attention-like structure with VPU math instead of MXU.
 
 Correctness does not depend on the column map being tight: any pair within the
 interaction radius is necessarily inside the 27-box neighborhood (box ≥ radius),

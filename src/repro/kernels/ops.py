@@ -8,7 +8,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import morton
+from ..core import grid, morton
 from . import collision_force as k1
 from . import flash_attention as k2
 
@@ -95,57 +95,51 @@ def k1_run_offsets():
                     dtype=np.int32)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "dims", "k_rep", "adhesion", "adhesion_band", "maxb", "interpret"))
-def collision_force(position: jnp.ndarray, diameter: jnp.ndarray,
-                    agent_type: jnp.ndarray, alive: jnp.ndarray,
-                    active: jnp.ndarray,
-                    origin: jnp.ndarray, box_size: jnp.ndarray,
-                    *, dims: Tuple[int, int, int], k_rep: float = 2.0,
-                    adhesion: Optional[Tuple[Tuple[float, ...], ...]] = None,
-                    adhesion_band: float = 0.4, maxb: int = 64,
-                    interpret: bool = True
-                    ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """End-to-end K1 op: linear-key sort → column map → kernel → unsort.
+def collision_force_resident(position: jnp.ndarray, diameter: jnp.ndarray,
+                             agent_type: jnp.ndarray, alive: jnp.ndarray,
+                             active: jnp.ndarray,
+                             starts: jnp.ndarray, counts: jnp.ndarray,
+                             origin: jnp.ndarray, box_size: jnp.ndarray,
+                             *, dims: Tuple[int, int, int], k_rep: float = 2.0,
+                             adhesion: Optional[Tuple[Tuple[float, ...], ...]] = None,
+                             adhesion_band: float = 0.4, maxb: int = 64,
+                             interpret: bool = True
+                             ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """K1 over the RESIDENT grid-ordered pool: column map → kernel. No sort,
+    no unsort, no candidate matrix.
 
-    Agents are sorted by the grid's row-major linear key (DESIGN.md §3): each
-    box — and each 3-box z-run of the stencil — is a contiguous span of the
-    sorted layout, so a row block's candidates collapse into 9 merged ranges
-    covered by few 128-wide column blocks. The per-box table is exactly
-    prod(dims) entries (no power-of-two padding).
+    Inputs must already be in grid-key order with the grid's per-box
+    ``(starts, counts)`` tables (grid.build_resident) — the engine's resident
+    layout means the op shares the step's one permutation instead of paying
+    its own argsort and inverse scatter. The kernel traverses each row
+    block's 9 merged stencil runs through the scalar-prefetched block column
+    table (build_block_cols); candidates are never materialized — each grid
+    step streams one 128-wide column tile through VMEM.
 
-    active: agents whose own force is required (alive & ~static). Static agents
-    still *contribute* force to active neighbors (they are columns, not rows).
-    Returns (force (C,3) f32, nnz (C,) i32, overflow flag ()).
+    active: agents whose own force is required (alive & ~static). Static
+    agents still *contribute* force to active neighbors (columns, not rows);
+    fully-static row blocks get an empty column list and are skipped outright
+    (paper §5 at block granularity). Returns (force (C,3) f32 in resident
+    order, nnz (C,) i32, column-map overflow flag ()).
 
-    Exactness contract (same as the engine grid, paper §3.1): ``box_size`` must
-    be ≥ the maximum interaction distance max(r_i + r_j) + adhesion_band, so
-    every interacting pair falls inside the 3×3×3 neighborhood.
+    Exactness contract (same as the engine grid, paper §3.1): ``box_size``
+    must be ≥ the maximum interaction distance max(r_i + r_j) +
+    adhesion_band, so every interacting pair falls inside the 3×3×3
+    neighborhood.
     """
     c = position.shape[0]
     n_pad = ((c + BLOCK - 1) // BLOCK) * BLOCK
-
-    keys = morton.linear_keys(position, origin, box_size, dims)
-    keys = jnp.where(alive, keys, jnp.uint32(0xFFFFFFFF))
-    order = jnp.argsort(keys).astype(jnp.int32)
-    sorted_keys = keys[order]
-
-    m = morton.linear_size(dims)
-    bounds = jnp.searchsorted(sorted_keys, jnp.arange(m + 1, dtype=jnp.uint32),
-                              side="left").astype(jnp.int32)
-    starts = bounds[:-1]
-    counts = bounds[1:] - bounds[:-1]
-
     pad = n_pad - c
+
     def padded(x, fill):
         return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1),
                        constant_values=fill)
 
-    sp = padded(position[order], 0.0)
-    sd = padded(diameter[order], 0.0)
-    st = padded(agent_type[order], 0)
-    sa = padded(alive[order], False)
-    sact = padded((active & alive)[order], False)
+    sp = padded(position, 0.0)
+    sd = padded(diameter, 0.0)
+    st = padded(agent_type, 0)
+    sa = padded(alive, False)
+    sact = padded(active & alive, False)
     cells = morton.cell_of(sp, origin, box_size, dims)
 
     block_cols, ovf = build_block_cols(cells, starts, counts, sact, dims, maxb)
@@ -160,15 +154,48 @@ def collision_force(position: jnp.ndarray, diameter: jnp.ndarray,
         data_t, block_cols, k_rep=k_rep, adhesion=adhesion,
         adhesion_band=adhesion_band, interpret=interpret)
 
-    f_sorted = jnp.stack([out_t[k1.ROW_FX], out_t[k1.ROW_FY], out_t[k1.ROW_FZ]],
-                         axis=-1)[:c]
-    nnz_sorted = out_t[k1.ROW_NNZ][:c].astype(jnp.int32)
+    force = jnp.stack([out_t[k1.ROW_FX], out_t[k1.ROW_FY], out_t[k1.ROW_FZ]],
+                      axis=-1)[:c]
+    nnz = out_t[k1.ROW_NNZ][:c].astype(jnp.int32)
     # rows that were inactive produced zeros; also zero anything masked
-    f_sorted = jnp.where(sact[:c, None], f_sorted, 0.0)
-    nnz_sorted = jnp.where(sact[:c], nnz_sorted, 0)
-    # unsort
-    force = jnp.zeros((c, 3), jnp.float32).at[order[:c]].set(f_sorted)
-    nnz = jnp.zeros((c,), jnp.int32).at[order[:c]].set(nnz_sorted)
+    force = jnp.where(sact[:c, None], force, 0.0)
+    nnz = jnp.where(sact[:c], nnz, 0)
+    return force, nnz, ovf
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "dims", "k_rep", "adhesion", "adhesion_band", "maxb", "interpret"))
+def collision_force(position: jnp.ndarray, diameter: jnp.ndarray,
+                    agent_type: jnp.ndarray, alive: jnp.ndarray,
+                    active: jnp.ndarray,
+                    origin: jnp.ndarray, box_size: jnp.ndarray,
+                    *, dims: Tuple[int, int, int], k_rep: float = 2.0,
+                    adhesion: Optional[Tuple[Tuple[float, ...], ...]] = None,
+                    adhesion_band: float = 0.4, maxb: int = 64,
+                    interpret: bool = True
+                    ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Slot-order compat wrapper: linear-key sort → resident core → unsort.
+
+    For callers whose arrays are NOT already grid-ordered. The engine never
+    uses this — its pool is resident (grid.build_resident) and it calls
+    :func:`collision_force_resident` with the step's existing grid tables.
+    Same contract and returns, in the caller's slot order.
+    """
+    c = position.shape[0]
+    keys = morton.grid_sort_keys(position, alive, origin, box_size, dims)
+    order = jnp.argsort(keys).astype(jnp.int32)
+    sorted_keys = keys[order]
+
+    starts, counts = grid.box_tables(sorted_keys, morton.linear_size(dims))
+
+    f_sorted, nnz_sorted, ovf = collision_force_resident(
+        position[order], diameter[order], agent_type[order], alive[order],
+        (active & alive)[order], starts, counts, origin, box_size,
+        dims=dims, k_rep=k_rep, adhesion=adhesion,
+        adhesion_band=adhesion_band, maxb=maxb, interpret=interpret)
+
+    force = jnp.zeros((c, 3), jnp.float32).at[order].set(f_sorted)
+    nnz = jnp.zeros((c,), jnp.int32).at[order].set(nnz_sorted)
     return force, nnz, ovf
 
 

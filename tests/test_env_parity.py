@@ -1,8 +1,10 @@
 """Cross-environment force parity: every neighbor environment must agree.
 
-One randomized agent cloud, five force paths: uniform grid (XLA), uniform
-grid via the Pallas K1 kernel (interpret mode), scatter-table grid, hash grid,
-and the exact O(N²) brute-force oracle. All five must agree within tolerance —
+One randomized agent cloud, six force paths: uniform grid (wide candidate
+matrix), the resident run-streaming loop (grid.build_resident +
+grid.resident_apply — the engine's hot path), uniform grid via the Pallas K1
+kernel (interpret mode), scatter-table grid, hash grid (streamed probes), and
+the exact O(N²) brute-force oracle. All must agree within tolerance —
 including on an *anisotropic* domain, which exercises the exact-size
 ``prod(dims)`` table (a Morton-padded table would index out of its real box
 range there; DESIGN.md §3).
@@ -41,22 +43,34 @@ def _forces_all_envs(pool, spec, radius, channels, pair):
     assert int(gs.max_run_count) <= spec.run_capacity
     out["uniform"] = G.neighbor_apply(spec, gs, channels, all_idx, n_q,
                                       pair, OUT_SPECS)
-    # the cached-pipeline path the engine shares across consumers
-    cand = G.build_candidates(spec, gs, channels)
-    out["uniform_cached"] = G.candidates_apply(spec, cand, channels, all_idx,
-                                               n_q, pair, OUT_SPECS)
+    # resident run-streaming path (the engine's hot path): permutes the pool
+    # into grid order; map the forces back to slot order for comparison
+    rpool, rgs, order = G.build_resident(spec, pool, origin, r)
+    rch = {k: v for k, v in rpool.channels().items()
+           if not k.startswith("extra.")}
+    res = G.resident_apply(spec, rgs, rch, rpool.alive, pair, OUT_SPECS,
+                           spec.query_chunk)
+    out["uniform_resident"] = {
+        name: jnp.zeros_like(val).at[order].set(val)
+        for name, val in res.items()}
 
     sg = G.build_scatter_grid(spec, pool, origin, r)
     hg = G.build_hash_grid(spec, pool, origin, r)
-    for name, cand_fn in (
-            ("scatter", lambda qp: G.scatter_grid_candidates(spec, sg, qp)),
-            ("hash", lambda qp: G.hash_grid_candidates(spec, hg, qp))):
-        def cf(q_pos, q_slot, cand_fn=cand_fn):
-            ids, valid = cand_fn(q_pos)
-            valid &= ids != q_slot[:, None]
-            return ids, valid
-        out[name] = G.chunk_apply(channels, channels, all_idx, n_q, cf,
-                                  pair, OUT_SPECS, spec.query_chunk)
+
+    def cf(q_pos, q_slot):
+        ids, valid = G.scatter_grid_candidates(spec, sg, q_pos)
+        valid &= ids != q_slot[:, None]
+        return ids, valid
+    out["scatter"] = G.chunk_apply(channels, channels, all_idx, n_q, cf,
+                                   pair, OUT_SPECS, spec.query_chunk)
+
+    def hash_phase(q_pos, q_slot, j):
+        ids, valid = G.hash_grid_probe(spec, hg, q_pos, j)
+        valid &= ids != q_slot[:, None]
+        return ids, valid
+    out["hash"] = G.phased_chunk_apply(channels, channels, all_idx, n_q,
+                                       hash_phase, 27, pair, OUT_SPECS,
+                                       spec.query_chunk)
 
     out["brute"] = G.brute_force_apply(channels, pool.alive, pair, OUT_SPECS)
     return out
@@ -79,12 +93,53 @@ def test_all_environments_agree(rng, domain, dims, n):
     res = _forces_all_envs(pool, spec, radius, channels, pair)
 
     ref = np.asarray(res["brute"]["force"])
-    for name in ("uniform", "uniform_cached", "scatter", "hash"):
+    for name in ("uniform", "uniform_resident", "scatter", "hash"):
         np.testing.assert_allclose(np.asarray(res[name]["force"]), ref,
                                    atol=1e-4, err_msg=name)
         np.testing.assert_array_equal(np.asarray(res[name]["force_nnz"]),
                                       np.asarray(res["brute"]["force_nnz"]),
                                       err_msg=name)
+
+
+def test_hash_bucket_collision_no_double_count():
+    """Two stencil cells hashing to one bucket must not double-count it.
+
+    Cells (34,129,23) and (35,128,21) collide into bucket 7476 under the
+    3-prime hash with 2^14 buckets, and *both* lie in the stencil of a query
+    in cell (34,128,22) — without the cell_keys re-check the neighbor's
+    bucket is gathered once per colliding stencil cell, doubling its force
+    and force_nnz. Needs grid coords ≥ ~130, which the 33³ parity grids
+    never reach.
+    """
+    dims = (40, 132, 25)
+    radius = 4.0
+    # q at the center of cell (34,128,22); nbr in cell (34,129,23) within
+    # contact distance (diameters 4 → contact at dist < 4)
+    pos = np.asarray([[138.0, 514.0, 90.0],
+                      [138.5, 516.5, 92.5]], np.float32)
+    dia = np.full((2,), 4.0, np.float32)
+    pool = agents.make_pool(2, position=jnp.asarray(pos),
+                            diameter=jnp.asarray(dia))
+    spec = G.GridSpec(dims=dims, max_per_box=4, max_per_run=8, query_chunk=2)
+    channels = {k: v for k, v in pool.channels().items()
+                if not k.startswith("extra.")}
+    pair = make_force_pair_fn(ForceParams())
+    hg = G.build_hash_grid(spec, pool, jnp.zeros(3), jnp.asarray(radius))
+    assert int(hg.keys[0]) != int(hg.keys[1])   # distinct buckets for agents
+
+    def hash_phase(q_pos, q_slot, j):
+        ids, valid = G.hash_grid_probe(spec, hg, q_pos, j)
+        valid &= ids != q_slot[:, None]
+        return ids, valid
+    all_idx = jnp.arange(2, dtype=jnp.int32)
+    res = G.phased_chunk_apply(channels, channels, all_idx, jnp.int32(2),
+                               hash_phase, 27, pair, OUT_SPECS,
+                               spec.query_chunk)
+    ref = G.brute_force_apply(channels, pool.alive, pair, OUT_SPECS)
+    np.testing.assert_array_equal(np.asarray(res["force_nnz"]),
+                                  np.asarray(ref["force_nnz"]))
+    np.testing.assert_allclose(np.asarray(res["force"]),
+                               np.asarray(ref["force"]), atol=1e-4)
 
 
 @pytest.mark.parametrize("dims,domain", [
