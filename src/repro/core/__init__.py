@@ -1,9 +1,14 @@
 """repro.core — the paper's simulation engine (BioDynaMo optimizations O1-O6)."""
 
-from .agents import AgentPool, make_pool
-from .engine import EngineConfig, EngineState, Simulation, StepContext
+from .agents import AgentPool, make_pool, pool_from_channels
+from .distributed import DistConfig, DistributedSimulation, DistState
+from .engine import (EngineConfig, EngineState, Simulation, StepContext,
+                     make_iteration_core)
 from .forces import ForceParams
 from .grid import GridSpec
+from .stats import StepStats
 
-__all__ = ["AgentPool", "make_pool", "EngineConfig", "EngineState",
-           "Simulation", "StepContext", "ForceParams", "GridSpec"]
+__all__ = ["AgentPool", "make_pool", "pool_from_channels", "EngineConfig",
+           "EngineState", "Simulation", "StepContext", "make_iteration_core",
+           "ForceParams", "GridSpec", "StepStats", "DistConfig",
+           "DistributedSimulation", "DistState"]

@@ -80,9 +80,20 @@ class AgentPool:
         return out
 
     def with_channels(self, ch: Dict[str, jnp.ndarray]) -> "AgentPool":
-        base = {k: v for k, v in ch.items() if not k.startswith("extra.")}
-        extra = {k[len("extra."):]: v for k, v in ch.items() if k.startswith("extra.")}
-        return AgentPool(extra=extra, **base)
+        return pool_from_channels(ch)
+
+
+def pool_from_channels(ch: Dict[str, jnp.ndarray]) -> AgentPool:
+    """Rebuild a pool from a flat channel dict (inverse of ``channels()``).
+
+    The channel-name set *is* the pool's spec: the distributed engine derives
+    its ghost/migration buffer layout from it (DESIGN.md §7), so behaviors'
+    extra channels automatically cross shard boundaries.
+    """
+    base = {k: v for k, v in ch.items() if not k.startswith("extra.")}
+    extra = {k[len("extra."):]: v for k, v in ch.items()
+             if k.startswith("extra.")}
+    return AgentPool(extra=extra, **base)
 
 
 def make_pool(capacity: int,

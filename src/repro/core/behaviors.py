@@ -5,6 +5,15 @@ Behaviors read the step context (pool, grid, diffusion, RNG) and return
 The engine merges effects and commits them in the iteration epilogue —
 mirroring BioDynaMo's thread-local staging + end-of-iteration commit (§3.2).
 
+**Ownership contract (DESIGN.md §7):** a behavior's base mask is
+``ctx.owned``, never ``pool.alive``. Under the single-device engine the two
+are identical; under the distributed engine ``pool.alive`` additionally
+covers *ghost* rows — boundary agents copied in from neighboring slabs as
+force/neighbor sources. Acting on a ghost (staging its division, marking its
+death) would duplicate the effect its owning shard commits authoritatively.
+Ghosts still appear as *neighbors* in ``ctx.neighbor_apply`` reductions,
+which is exactly what makes cross-slab interactions exact.
+
 The catalogue below covers the paper's five benchmark simulations (Table 1):
   GrowDivide          cell proliferation / oncology (create agents)
   RandomWalk          epidemiology / oncology (agents move randomly)
@@ -64,14 +73,14 @@ class GrowDivide(Behavior):
         self.threshold = threshold_diameter
         self.applies_to = applies_to
 
-    def _mask(self, pool):
-        m = pool.alive
+    def _mask(self, ctx, pool):
+        m = ctx.owned
         if self.applies_to is not None:
             m &= pool.agent_type == self.applies_to
         return m
 
     def __call__(self, ctx, pool: AgentPool, rng: jax.Array) -> BehaviorEffects:
-        mask = self._mask(pool)
+        mask = self._mask(ctx, pool)
         new_dia = jnp.where(mask, pool.diameter + self.rate * ctx.dt, pool.diameter)
         divide = mask & (new_dia >= self.threshold)
         # halve the volume: d' = d / 2^(1/3)
@@ -101,7 +110,7 @@ class RandomWalk(Behavior):
         self.applies_to = applies_to
 
     def __call__(self, ctx, pool: AgentPool, rng: jax.Array) -> BehaviorEffects:
-        mask = pool.alive
+        mask = ctx.owned
         if self.applies_to is not None:
             mask &= pool.agent_type == self.applies_to
         step = self.sigma * jax.random.normal(rng, pool.position.shape,
@@ -148,7 +157,7 @@ class Infection(Behavior):
         res = ctx.neighbor_apply(pair_fn, {"exposed": ((), jnp.int32)})
         exposed = res["exposed"] > 0
         u = jax.random.uniform(rng, (pool.capacity,))
-        newly = pool.alive & (pool.agent_type == SUSCEPTIBLE) & exposed \
+        newly = ctx.owned & (pool.agent_type == SUSCEPTIBLE) & exposed \
             & (u < self.beta)
         timer = pool.extra["infect_timer"]
         timer = jnp.where(newly, self.recovery_time, timer)
@@ -173,7 +182,7 @@ class Chemotaxis(Behavior):
         g = ctx.substance_gradient(pool.position)           # (C, 3)
         norm = jnp.sqrt(jnp.sum(g * g, -1, keepdims=True) + 1e-12)
         step = self.speed * ctx.dt * g / norm
-        new_pos = jnp.where(pool.alive[:, None], pool.position + step,
+        new_pos = jnp.where(ctx.owned[:, None], pool.position + step,
                             pool.position)
         new_pos = jnp.clip(new_pos, ctx.domain_lo, ctx.domain_hi)
         return BehaviorEffects(set_channels={"position": new_pos})
@@ -189,7 +198,7 @@ class Secretion(Behavior):
         self.applies_to = applies_to
 
     def __call__(self, ctx, pool: AgentPool, rng: jax.Array) -> BehaviorEffects:
-        mask = pool.alive
+        mask = ctx.owned
         if self.applies_to is not None:
             mask &= pool.agent_type == self.applies_to
         return BehaviorEffects(
@@ -206,7 +215,7 @@ class RandomDeath(Behavior):
         self.applies_to = applies_to
 
     def __call__(self, ctx, pool: AgentPool, rng: jax.Array) -> BehaviorEffects:
-        mask = pool.alive
+        mask = ctx.owned
         if self.applies_to is not None:
             mask &= pool.agent_type == self.applies_to
         u = jax.random.uniform(rng, (pool.capacity,))
@@ -238,7 +247,7 @@ class NeuriteGrowth(Behavior):
 
     def __call__(self, ctx, pool: AgentPool, rng: jax.Array) -> BehaviorEffects:
         k1, k2, k3 = jax.random.split(rng, 3)
-        cones = pool.alive & (pool.agent_type == GROWTH_CONE)
+        cones = ctx.owned & (pool.agent_type == GROWTH_CONE)
         d = pool.extra["direction"]
         d = d + self.noise * jax.random.normal(k1, d.shape, d.dtype)
         d /= jnp.sqrt(jnp.sum(d * d, -1, keepdims=True) + 1e-12)

@@ -68,6 +68,13 @@ def commit_births(pool: AgentPool, queue: Dict[str, jnp.ndarray],
     queue_valid: (Q,) bool — which queue slots hold a real newborn.
     Newborns whose destination exceeds capacity are dropped (counted by the
     engine as overflow; capacity sizing is a config responsibility).
+
+    Queue-provided channels always win over the defaults below — which is
+    what lets the distributed engine append migration *arrivals* through
+    this same path (DESIGN.md §7.2): a migrating agent ships every channel
+    (born_iter, moved/grew bookkeeping, behavior extras, owned flag) and
+    lands on the destination shard bit-identical, including agents that were
+    themselves born earlier in the same iteration.
     """
     c = pool.capacity
     n_live = pool.n_live

@@ -30,15 +30,28 @@ def stable_dt(spec: DiffusionSpec) -> float:
     return spec.voxel ** 2 / (6.0 * max(spec.coefficient, 1e-12))
 
 
-def step(spec: DiffusionSpec, conc: jnp.ndarray, dt: float) -> jnp.ndarray:
-    """One FTCS diffusion-decay step with zero-flux (Neumann) boundaries."""
-    c = conc
-    pad = jnp.pad(c, 1, mode="edge")
+def step_slab(spec: DiffusionSpec, conc: jnp.ndarray, dt: float,
+              x_lo: jnp.ndarray, x_hi: jnp.ndarray) -> jnp.ndarray:
+    """FTCS step on an x-slab whose face neighbors are supplied externally.
+
+    conc: (nx, ny, nz) local slab; x_lo / x_hi: (ny, nz) concentration planes
+    just outside the slab's low/high x face — the one-voxel halos a
+    distributed run exchanges with adjacent slabs (DESIGN.md §7). Passing the
+    slab's own edge planes reproduces the zero-flux (Neumann) boundary, which
+    is how :func:`step` is defined; y/z boundaries stay Neumann either way.
+    """
+    cx = jnp.concatenate([x_lo[None], conc, x_hi[None]], axis=0)
+    pad = jnp.pad(cx, ((0, 0), (1, 1), (1, 1)), mode="edge")
     lap = (pad[2:, 1:-1, 1:-1] + pad[:-2, 1:-1, 1:-1]
            + pad[1:-1, 2:, 1:-1] + pad[1:-1, :-2, 1:-1]
            + pad[1:-1, 1:-1, 2:] + pad[1:-1, 1:-1, :-2]
-           - 6.0 * c) / (spec.voxel ** 2)
-    return c + dt * (spec.coefficient * lap - spec.decay * c)
+           - 6.0 * conc) / (spec.voxel ** 2)
+    return conc + dt * (spec.coefficient * lap - spec.decay * conc)
+
+
+def step(spec: DiffusionSpec, conc: jnp.ndarray, dt: float) -> jnp.ndarray:
+    """One FTCS diffusion-decay step with zero-flux (Neumann) boundaries."""
+    return step_slab(spec, conc, dt, conc[0], conc[-1])
 
 
 def voxel_of(spec: DiffusionSpec, position: jnp.ndarray, origin: jnp.ndarray
@@ -70,3 +83,32 @@ def gradient(spec: DiffusionSpec, conc: jnp.ndarray, position: jnp.ndarray,
     gz = (pad[1:-1, 1:-1, 2:] - pad[1:-1, 1:-1, :-2]) / (2 * spec.voxel)
     v = voxel_of(spec, position, origin)
     return jnp.stack([g[v[:, 0], v[:, 1], v[:, 2]] for g in (gx, gy, gz)], axis=-1)
+
+
+class DiffusionOps:
+    """Substance-grid operations as the iteration core consumes them.
+
+    The core (engine.make_iteration_core) never touches the grid layout
+    directly — it calls these four methods. This default implementation works
+    on the full in-memory grid; the distributed engine substitutes a sharded
+    implementation (distributed._ShardedDiffusionOps) whose ``step`` exchanges
+    one-voxel face halos between x-slabs and whose agent coupling routes
+    through collectives, so the *same* core serves both (DESIGN.md §7).
+    """
+
+    def __init__(self, spec: DiffusionSpec, origin: jnp.ndarray):
+        self.spec = spec
+        self.origin = origin
+
+    def step(self, conc: jnp.ndarray, dt: float) -> jnp.ndarray:
+        return step(self.spec, conc, dt)
+
+    def sample(self, conc: jnp.ndarray, position: jnp.ndarray) -> jnp.ndarray:
+        return sample(self.spec, conc, position, self.origin)
+
+    def gradient(self, conc: jnp.ndarray, position: jnp.ndarray) -> jnp.ndarray:
+        return gradient(self.spec, conc, position, self.origin)
+
+    def add_sources(self, conc: jnp.ndarray, position: jnp.ndarray,
+                    amount: jnp.ndarray) -> jnp.ndarray:
+        return add_sources(self.spec, conc, position, amount, self.origin)

@@ -1,62 +1,125 @@
 """Distributed ABM engine — the paper's §8 'future work' (multi-node), realized.
 
-Design (DESIGN.md §7):
+This module contains **no force/query/behavior logic of its own**: each slab
+runs the SAME Algorithm-1 iteration body as the single-device engine
+(engine.make_iteration_core — resident grid build, run-streaming or Pallas
+forces, behaviors, effects merge, death compaction + birth commit, statics
+bookkeeping, diffusion). The wrapper's job is purely distribution
+(DESIGN.md §7):
+
   * **1-D slab domain decomposition** along x over mesh axis ``data``: each
     device owns agents with x ∈ [b_i, b_{i+1}). Slab boundaries come from
     population *quantiles* — the paper's §4.2 balancing (equal agents per NUMA
-    domain) lifted to devices. Within a slab, the Morton sort still provides
-    memory locality (§4.2) — the two mechanisms compose.
+    domain) lifted to devices — and are re-derived every
+    ``rebalance_frequency`` steps *inside* the jitted program.
   * **Ring halo exchange**: interaction radius r ≤ slab width ⇒ every cross-
     shard interaction partner lives in the adjacent slab; one
-    ``collective_permute`` left + one right per step ships the boundary layer
-    (ghost agents, force *sources* only). O(surface) bytes, independent of the
-    number of shards — the property that scales to 1000+ nodes.
-  * **Ring migration**: agents that cross a slab boundary are shipped to the
-    neighbor with the same prefix-sum packing as §3.2 and appended via the
-    birth-commit path; leavers are compacted out. Fixed-capacity buffers with
-    overflow flags (never silent loss).
+    ``ppermute`` left + one right per step ships the boundary band as *ghost*
+    rows appended to the local pool. The ghost buffer layout is derived from
+    the pool's channel spec (agents.pool_from_channels) — every channel,
+    including behavior-owned extras like infection timers, crosses the
+    boundary; ghosts are gather sources only (engine core ``owned`` mask).
+    With ``detect_static`` the band widens to 2·r so box-granular disturbance
+    (statics.py) stays a conservative superset across shard lines.
+  * **Ring migration**: agents whose post-step x leaves the slab ship to the
+    adjacent shard with the same channel packing and are appended through the
+    §3.2 *birth-commit* path (compaction.commit_births) — newborn agents of
+    this very step migrate like any other, preserving born_iter and all
+    behavior state. Fixed-capacity buffers with overflow flags (never silent
+    loss; stats.StepStats).
+  * **Sharded diffusion**: the substance grid is split into x-slabs; each
+    FTCS substep exchanges one-voxel face halos alongside the agent ghosts
+    (_ShardedDiffusionOps / diffusion.step_slab). Agent coupling (secretion
+    scatter, gradient/value sampling) routes through psum_scatter/all_gather
+    so quantile agent slabs need not align with the fixed voxel slabs.
 
 Everything runs under one ``shard_map`` program: the whole distributed step is
-a single XLA executable per device, with exactly 4 collective-permutes.
+a single XLA executable per device.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Dict, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from . import compaction, grid as grid_mod, morton
-from .agents import AgentPool, make_pool
-from .engine import EngineConfig
-from .forces import displacement, make_force_pair_fn
+from . import compaction, diffusion as diff_mod
+from .agents import AgentPool, make_pool, pool_from_channels
+from .behaviors import Behavior
+from .engine import EngineConfig, make_iteration_core, stage_pool
+from .stats import StepStats
 
-# ghost/migration channel layout: x, y, z, diameter, type, alive
-_GHOST_CH = 6
+OWNED = "owned"          # bool extra channel: local agent (True) vs ghost
 
 
 @dataclasses.dataclass(frozen=True)
 class DistConfig:
+    """Static distributed-run configuration.
+
+    local_capacity:      slots per shard (live agents per slab must fit)
+    halo_capacity:       ghost rows shipped per face per step
+    migrate_capacity:    migrating agents shipped per face per step
+    rebalance_frequency: re-derive quantile slab boundaries every this many
+                         steps inside the jitted program (0 = keep the
+                         boundaries fixed after init)
+    """
     engine: EngineConfig
     n_shards: int
     local_capacity: int
     halo_capacity: int = 1024
     migrate_capacity: int = 256
+    rebalance_frequency: int = 0
+
+    @property
+    def halo_width(self) -> float:
+        """Ghost band thickness: r, or 2·r under detect_static (statics.py)."""
+        return self.engine.interaction_radius * (
+            2.0 if self.engine.detect_static else 1.0)
+
+    @property
+    def total_capacity(self) -> int:
+        """Local pool width inside the step: owned slots + two ghost bands."""
+        return self.local_capacity + 2 * self.halo_capacity
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DistState:
+    """Sharded simulation state. ``channels`` hold every pool channel as a
+    global (n_shards·local_capacity, ...) array sharded on dim 0; shard i's
+    agents live in slice [i·C, i·C + n_i)."""
+    channels: Dict[str, jnp.ndarray]
+    conc: jnp.ndarray               # diffusion slabs, sharded on x (dummy if unused)
+    rng: jax.Array                  # (n_shards, 2) per-shard key
+    boundaries: jnp.ndarray         # (n_shards + 1,) slab edges (replicated)
+    iteration: jnp.ndarray          # () int32
+    stats: StepStats                # per-shard (n_shards,) counters
 
 
 def quantile_boundaries(x: jnp.ndarray, alive: jnp.ndarray, n_shards: int,
                         lo: float, hi: float) -> jnp.ndarray:
-    """Equal-population slab boundaries (paper §4.2 balancing)."""
+    """Equal-population slab boundaries (paper §4.2 balancing).
+
+    Robust to degenerate populations: with no live agents the inner
+    boundaries collapse to ``hi`` (all-empty slabs are valid), and a heavily
+    skewed distribution (single cluster) yields clamped, non-decreasing
+    boundaries — possibly empty slabs, never an inverted or out-of-domain
+    one.
+    """
     big = jnp.where(alive, x, jnp.inf)
     xs = jnp.sort(big)
     n = jnp.sum(alive.astype(jnp.int32))
     qs = (jnp.arange(1, n_shards) * n) // n_shards
     inner = xs[jnp.clip(qs, 0, x.shape[0] - 1)]
-    return jnp.concatenate([jnp.asarray([lo]), inner, jnp.asarray([hi])])
+    inner = jnp.clip(inner, lo, hi)            # n == 0 → inf → hi
+    if n_shards > 1:
+        inner = jax.lax.cummax(inner)          # monotone under skew/ties
+    return jnp.concatenate([jnp.asarray([lo], inner.dtype), inner,
+                            jnp.asarray([hi], inner.dtype)])
 
 
 def partition_global(pool_channels: Dict[str, jnp.ndarray],
@@ -65,7 +128,10 @@ def partition_global(pool_channels: Dict[str, jnp.ndarray],
     """Host-side: scatter agents into per-shard slots [shard, local_capacity].
 
     Returns channels with leading dim n_shards*local_capacity, agents of shard
-    i in slice [i*C, i*C + n_i). (Used at init and at rebalance epochs.)"""
+    i in slice [i*C, i*C + n_i). (Used at init; in-loop rebalancing moves
+    agents through the migration path instead.) Agents beyond a slab's
+    local_capacity are dropped — size capacity for the post-balance maximum.
+    """
     x = pool_channels["position"][:, 0]
     alive = pool_channels["alive"]
     shard = jnp.clip(jnp.searchsorted(boundaries[1:-1], x, side="right"),
@@ -81,148 +147,368 @@ def partition_global(pool_channels: Dict[str, jnp.ndarray],
                                                             dcfg.n_shards - 1)]
     dst = sorted_shard * c + rank_in_shard
     ok = alive[order] & (rank_in_shard < c)
-    dst = jnp.where(ok, dst, dcfg.n_shards * c)
+    dst = jnp.where(ok, dst, dcfg.n_shards * c)          # parked → dropped
     for k, v in pool_channels.items():
-        buf_shape = (dcfg.n_shards * c,) + v.shape[1:]
-        if k == "alive":
-            buf = jnp.zeros(buf_shape, v.dtype)
-        else:
-            buf = jnp.zeros(buf_shape, v.dtype)
+        buf = jnp.zeros((dcfg.n_shards * c,) + v.shape[1:], v.dtype)
         out[k] = buf.at[dst].set(v[order], mode="drop")
-    # fix alive: only packed slots alive
+    # alive additionally masks the unpacked tail of every slab
     out["alive"] = jnp.zeros((dcfg.n_shards * c,), bool).at[dst].set(
-        alive[order], mode="drop")
+        ok, mode="drop")
     return out
 
 
-def _pack(mask: jnp.ndarray, channels: Dict[str, jnp.ndarray], cap: int
-          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Pack masked agents into a fixed (cap, _GHOST_CH) buffer. Returns
-    (buffer, overflow_count)."""
+def pack_channels(mask: jnp.ndarray, channels: Dict[str, jnp.ndarray],
+                  cap: int) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
+    """Pack masked agents into fixed (cap, ...) buffers, one per channel.
+
+    The buffer layout IS the pool's channel spec — whatever channels the pool
+    carries (behavior extras included) are shipped, dtype-preserving. The
+    packed ``alive`` doubles as the lane-validity mask (mask ⊆ alive; invalid
+    lanes are zeroed). Returns (buffers, overflow_count).
+    """
     idx, n = compaction.active_index_list(mask)
     take = idx[:cap]
     lane_ok = jnp.arange(cap) < jnp.minimum(n, cap)
-    buf = jnp.stack([
-        channels["position"][take, 0], channels["position"][take, 1],
-        channels["position"][take, 2], channels["diameter"][take],
-        channels["agent_type"][take].astype(jnp.float32),
-        lane_ok.astype(jnp.float32),
-    ], axis=-1)
-    buf = jnp.where(lane_ok[:, None], buf, 0.0)
+    buf = {}
+    for k, v in channels.items():
+        g = v[take]
+        keep = lane_ok.reshape((cap,) + (1,) * (g.ndim - 1))
+        buf[k] = jnp.where(keep, g, jnp.zeros_like(g))
+    buf["alive"] = lane_ok & channels["alive"][take]
     return buf, jnp.maximum(n - cap, 0)
 
 
-def make_distributed_step(dcfg: DistConfig, mesh, axis: str = "data"):
-    """Build the jitted shard_map step: (channels, boundaries, iteration) →
-    (channels, stats). Channels are the global SoA arrays sharded on dim 0."""
+def _ppermute_tree(tree, axis: str, perm):
+    return jax.tree_util.tree_map(
+        lambda a: jax.lax.ppermute(a, axis, perm), tree)
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    """shard_map across jax versions (new API, else experimental)."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
+class _ShardedDiffusionOps(diff_mod.DiffusionOps):
+    """diffusion.DiffusionOps over x-slabs of the substance grid.
+
+    ``step`` is the genuinely sharded compute: each substep exchanges
+    one-voxel face halos with the ring neighbors (Neumann edges at the global
+    faces) and runs the same FTCS arithmetic as the single-device grid
+    (diffusion.step_slab — bit-identical per voxel). Agent coupling crosses
+    slab lines through collectives, because quantile *agent* slabs need not
+    align with the fixed *voxel* slabs: secretion scatters into a global-dims
+    buffer reduced back to slabs with psum_scatter; sampling gathers the full
+    grid (only traced when a behavior actually samples).
+    """
+
+    def __init__(self, spec: diff_mod.DiffusionSpec, origin, axis: str,
+                 n_shards: int, fwd, bwd):
+        super().__init__(spec, origin)
+        self.axis, self.n_shards, self.fwd, self.bwd = axis, n_shards, fwd, bwd
+
+    def step(self, conc, dt):
+        recv_l = jax.lax.ppermute(conc[-1], self.axis, self.fwd)
+        recv_r = jax.lax.ppermute(conc[0], self.axis, self.bwd)
+        i = jax.lax.axis_index(self.axis)
+        x_lo = jnp.where(i == 0, conc[0], recv_l)              # Neumann edge
+        x_hi = jnp.where(i == self.n_shards - 1, conc[-1], recv_r)
+        return diff_mod.step_slab(self.spec, conc, dt, x_lo, x_hi)
+
+    def _gathered(self, conc):
+        return jax.lax.all_gather(conc, self.axis, tiled=True)
+
+    def sample(self, conc, position):
+        return diff_mod.sample(self.spec, self._gathered(conc), position,
+                               self.origin)
+
+    def gradient(self, conc, position):
+        return diff_mod.gradient(self.spec, self._gathered(conc), position,
+                                 self.origin)
+
+    def add_sources(self, conc, position, amount):
+        g = jnp.zeros(self.spec.dims, jnp.float32)
+        g = diff_mod.add_sources(self.spec, g, position, amount, self.origin)
+        return conc + jax.lax.psum_scatter(g, self.axis,
+                                           scatter_dimension=0, tiled=True)
+
+
+def _channel_template(dcfg: DistConfig, behaviors: Sequence[Behavior]
+                      ) -> AgentPool:
+    """Zero pool defining the channel spec (ghost layout, state layout)."""
+    specs: Dict[str, tuple] = {}
+    for b in behaviors:
+        specs.update(b.extra_specs())
+    specs[OWNED] = ((), jnp.bool_, False)
+    return make_pool(dcfg.total_capacity, extra_specs=specs)
+
+
+def make_distributed_step(dcfg: DistConfig, mesh, behaviors: Sequence[Behavior]
+                          = (), axis: str = "data"):
+    """Build the jitted shard_map step: DistState → DistState.
+
+    Per shard and per step: halo exchange (spec-derived ghost rows appended
+    to the local pool with owned=False) → the SHARED iteration core →
+    optional in-loop quantile rebalance → ring migration through the
+    birth-commit path → repack to local_capacity.
+    """
     cfg = dcfg.engine
-    spec = cfg.grid_spec
     n_shards = dcfg.n_shards
     c_local = dcfg.local_capacity
     hcap, mcap = dcfg.halo_capacity, dcfg.migrate_capacity
-    origin = jnp.asarray(cfg.domain_lo, jnp.float32)
-    dlo = jnp.asarray(cfg.domain_lo, jnp.float32)
-    dhi = jnp.asarray(cfg.domain_hi, jnp.float32)
-    box = jnp.asarray(cfg.interaction_radius, jnp.float32)
-    pair_fn = make_force_pair_fn(cfg.force,
-                                 jnp.asarray(cfg.adhesion, jnp.float32)
-                                 if cfg.adhesion is not None else None)
+    if not 0 < hcap <= c_local or not 0 < mcap <= c_local:
+        raise ValueError("halo/migrate capacity must be in (0, local_capacity]")
+    if cfg.diffusion is not None and cfg.diffusion.dims[0] % n_shards:
+        raise ValueError(f"diffusion dims[0]={cfg.diffusion.dims[0]} must be "
+                         f"divisible by n_shards={n_shards} (x-slab sharding)")
+    x_lo_dom = float(cfg.domain_lo[0])
+    x_hi_dom = float(cfg.domain_hi[0])
     fwd = [(i, i + 1) for i in range(n_shards - 1)]
     bwd = [(i + 1, i) for i in range(n_shards - 1)]
 
-    def step_shard(channels: Dict[str, jnp.ndarray], boundaries: jnp.ndarray):
+    diff_ops = None
+    if cfg.diffusion is not None:
+        diff_ops = _ShardedDiffusionOps(cfg.diffusion,
+                                        jnp.asarray(cfg.domain_lo, jnp.float32),
+                                        axis, n_shards, fwd, bwd)
+    core = make_iteration_core(cfg, behaviors, owned_channel=OWNED,
+                               pvary_axes=(axis,), diff_ops=diff_ops)
+    template = _channel_template(dcfg, behaviors)
+    names = list(template.channels().keys())
+
+    def step_shard(channels: Dict[str, jnp.ndarray], conc: jnp.ndarray,
+                   rng: jax.Array, boundaries: jnp.ndarray,
+                   iteration: jnp.ndarray):
         i = jax.lax.axis_index(axis)
         my_lo = boundaries[i]
         my_hi = boundaries[i + 1]
         alive = channels["alive"]
         x = channels["position"][:, 0]
-        r = cfg.interaction_radius
+        hw = jnp.float32(dcfg.halo_width)
 
-        # ---- halo exchange: boundary layers to ring neighbors ----
-        left_b, ovf_l = _pack(alive & (x < my_lo + r), channels, hcap)
-        right_b, ovf_r = _pack(alive & (x > my_hi - r), channels, hcap)
-        ghosts_from_left = jax.lax.ppermute(right_b, axis, fwd)   # i-1 → i
-        ghosts_from_right = jax.lax.ppermute(left_b, axis, bwd)   # i+1 → i
-        ghosts = jnp.concatenate([ghosts_from_left, ghosts_from_right], 0)
+        # ---- halo exchange: boundary bands → ghost rows of the neighbors ----
+        band_l, ovf_hl = pack_channels(alive & (x < my_lo + hw), channels, hcap)
+        band_r, ovf_hr = pack_channels(alive & (x > my_hi - hw), channels, hcap)
+        ghosts_l = _ppermute_tree(band_r, axis, fwd)     # from shard i-1
+        ghosts_r = _ppermute_tree(band_l, axis, bwd)     # from shard i+1
+        # edge shards pack bands the ring never ships (no neighbor beyond the
+        # domain face) — a pile-up against the wall must not flag overflow
+        ovf_hl = jnp.where(i > 0, ovf_hl, 0)
+        ovf_hr = jnp.where(i < n_shards - 1, ovf_hr, 0)
+        # ring halo exactness also needs every *interior* slab to be at least
+        # one band wide: a thinner one (quantile collapse against a pile-up —
+        # even an empty slab) puts its two neighbors within r of each other
+        # but two ring hops apart, so their pairs would be missed. The first/
+        # last slabs may be arbitrarily thin (no shard beyond them). Flagged
+        # on the same never-silent channel as the buffer overflows.
+        thin = ((my_hi - my_lo < hw) & (i > 0)
+                & (i < n_shards - 1)).astype(jnp.int32)
 
-        # ---- combined view: local agents + ghost force-sources ----
-        comb = {
-            "position": jnp.concatenate(
-                [channels["position"], ghosts[:, 0:3]], 0),
-            "diameter": jnp.concatenate([channels["diameter"], ghosts[:, 3]], 0),
-            "agent_type": jnp.concatenate(
-                [channels["agent_type"], ghosts[:, 4].astype(jnp.int32)], 0),
-            "alive": jnp.concatenate([alive, ghosts[:, 5] > 0.5], 0),
-        }
-        pool_like = make_pool(comb["position"].shape[0])
-        pool_like = dataclasses.replace(
-            pool_like, position=comb["position"], diameter=comb["diameter"],
-            agent_type=comb["agent_type"], alive=comb["alive"])
-        genv = grid_mod.build(spec, pool_like, origin, box)
+        full = {k: jnp.concatenate([channels[k], ghosts_l[k], ghosts_r[k]], 0)
+                for k in names}
+        full["extra." + OWNED] = jnp.concatenate(
+            [jnp.ones((c_local,), bool), jnp.zeros((2 * hcap,), bool)], 0)
+        pool = pool_from_channels(full)
 
-        n_local_live = jnp.sum(alive.astype(jnp.int32))
-        idx, _ = compaction.active_index_list(
-            jnp.concatenate([alive, jnp.zeros((2 * hcap,), bool)], 0))
-        res = grid_mod.neighbor_apply(
-            spec, genv, comb, idx, n_local_live, pair_fn,
-            {"force": ((3,), jnp.float32), "force_nnz": ((), jnp.int32)},
-            pvary_axes=(axis,))
-        dx = displacement(res["force"][:c_local], cfg.force, cfg.dt)
-        new_pos = jnp.clip(channels["position"] + dx, dlo, dhi)
-        new_pos = jnp.where(alive[:, None], new_pos, channels["position"])
-        channels = {**channels, "position": new_pos}
+        # ---- the shared Algorithm-1 iteration (engine.make_iteration_core) --
+        pool, conc, rng, stats = core(pool, conc, rng, iteration)
+        ch = pool.channels()
+        owned = ch["extra." + OWNED].astype(bool)
+        alive2 = ch["alive"] & owned
+        x2 = ch["position"][:, 0]
 
-        # ---- migration: leavers to ring neighbors ----
-        x2 = channels["position"][:, 0]
-        go_left = alive & (x2 < my_lo) & (i > 0)
-        go_right = alive & (x2 >= my_hi) & (i < n_shards - 1)
-        mig_l, ovf_ml = _pack(go_left, channels, mcap)
-        mig_r, ovf_mr = _pack(go_right, channels, mcap)
-        arrive_from_left = jax.lax.ppermute(mig_r, axis, fwd)
-        arrive_from_right = jax.lax.ppermute(mig_l, axis, bwd)
-        arrivals = jnp.concatenate([arrive_from_left, arrive_from_right], 0)
+        # ---- in-loop quantile rebalance (paper §4.2 balancing) ----
+        if dcfg.rebalance_frequency > 0:
+            def rebal(_):
+                xg = jax.lax.all_gather(x2, axis, tiled=True)
+                ag = jax.lax.all_gather(alive2, axis, tiled=True)
+                return quantile_boundaries(xg, ag, n_shards, x_lo_dom,
+                                           x_hi_dom)
+            boundaries = jax.lax.cond(
+                (iteration + 1) % dcfg.rebalance_frequency == 0,
+                rebal, lambda b: b, boundaries)
+            my_lo = boundaries[i]
+            my_hi = boundaries[i + 1]
 
-        # remove leavers, compact, append arrivals (paper §3.2 machinery)
-        stay = alive & ~go_left & ~go_right
-        perm, n_stay = compaction.compaction_permutation(stay)
-        packed = {k: jnp.take(v, perm, axis=0) for k, v in channels.items()}
-        packed["alive"] = jnp.take(stay, perm)
+        # ---- ring migration: leavers append via the §3.2 birth-commit path --
+        go_l = alive2 & (x2 < my_lo) & (i > 0)
+        go_r = alive2 & (x2 >= my_hi) & (i < n_shards - 1)
+        mig_l, ovf_ml = pack_channels(go_l, ch, mcap)
+        mig_r, ovf_mr = pack_channels(go_r, ch, mcap)
+        arrivals_l = _ppermute_tree(mig_r, axis, fwd)
+        arrivals_r = _ppermute_tree(mig_l, axis, bwd)
 
-        arr_valid = arrivals[:, 5] > 0.5
-        dst = n_stay + jnp.cumsum(arr_valid.astype(jnp.int32)) - 1
-        ok = arr_valid & (dst < c_local)
-        dst = jnp.where(ok, dst, c_local)
-        ovf_in = jnp.sum(arr_valid.astype(jnp.int32)) - jnp.sum(
-            ok.astype(jnp.int32))
-        packed["position"] = packed["position"].at[dst].set(
-            arrivals[:, 0:3], mode="drop")
-        packed["diameter"] = packed["diameter"].at[dst].set(
-            arrivals[:, 3], mode="drop")
-        packed["agent_type"] = packed["agent_type"].at[dst].set(
-            arrivals[:, 4].astype(jnp.int32), mode="drop")
-        packed["alive"] = packed["alive"].at[dst].set(ok, mode="drop")
+        ch["alive"] = alive2 & ~go_l & ~go_r       # drop ghosts + leavers
+        pool = compaction.compact(pool_from_channels(ch))
+        ovf_in = jnp.zeros((), jnp.int32)
+        for arr in (arrivals_l, arrivals_r):
+            valid = arr["alive"]
+            ovf_in += compaction.birth_overflow(pool, valid)
+            # commit_births preserves every shipped channel (born_iter, owned,
+            # behavior extras) — agents born this step migrate intact
+            pool = compaction.commit_births(pool, arr, valid, iteration)
 
-        stats = {
-            "n_live": jnp.sum(packed["alive"].astype(jnp.int32)),
-            "halo_overflow": ovf_l + ovf_r,
-            "migrate_overflow": ovf_ml + ovf_mr + ovf_in,
-            "box_overflow": (genv.max_run_count > spec.run_capacity
-                             ).astype(jnp.int32),
-        }
-        stats = {k: v.reshape(1) for k, v in stats.items()}   # (1,) per shard
-        return packed, stats
+        n_final = pool.n_live
+        ovf_cap = jnp.maximum(n_final - c_local, 0)     # clipped on repack
+        out_ch = {k: v[:c_local] for k, v in pool.channels().items()}
+        # an owned agent still outside its slab after this step's one ring
+        # hop (displaced ≥2 slabs by a rebalance) begins the next iteration
+        # with an incomplete neighborhood — nothing is dropped (it converges
+        # one hop per step), so it gets its own never-silent counter rather
+        # than polluting migrate_overflow's raise-the-buffer remediation
+        xf = out_ch["position"][:, 0]
+        in_flight = jnp.sum((out_ch["alive"]
+                             & (((xf < my_lo) & (i > 0))
+                                | ((xf >= my_hi) & (i < n_shards - 1)))
+                             ).astype(jnp.int32))
+        stats = dataclasses.replace(
+            stats,
+            n_live=jnp.sum(out_ch["alive"].astype(jnp.int32)),
+            halo_overflow=(ovf_hl + ovf_hr + thin).astype(jnp.int32),
+            migrate_overflow=(ovf_ml + ovf_mr + ovf_in
+                              + ovf_cap).astype(jnp.int32),
+            in_flight=in_flight.astype(jnp.int32))
+        stats = jax.tree_util.tree_map(lambda v: v.reshape(1), stats)
+        return out_ch, conc, rng.reshape(1, -1), boundaries, stats
 
-    in_specs = ({k: P(axis) for k in ("position", "diameter", "agent_type",
-                                      "alive")}, P())
-    out_specs = ({k: P(axis) for k in ("position", "diameter", "agent_type",
-                                       "alive")},
-                 {k: P(axis) for k in ("n_live", "halo_overflow",
-                                       "migrate_overflow", "box_overflow")})
-    if hasattr(jax, "shard_map"):
-        sharded = jax.shard_map(step_shard, mesh=mesh,
-                                in_specs=in_specs, out_specs=out_specs)
-    else:   # jax < 0.6: experimental namespace, no varying-axis checking
-        from jax.experimental.shard_map import shard_map
-        sharded = shard_map(step_shard, mesh=mesh, in_specs=in_specs,
-                            out_specs=out_specs, check_rep=False)
-    return jax.jit(sharded)
+    ch_specs = {k: P(axis) for k in names}
+    in_specs = (ch_specs, P(axis), P(axis), P(), P())
+    out_specs = (ch_specs, P(axis), P(axis), P(),
+                 StepStats(**{f: P(axis) for f in StepStats.FIELDS}))
+
+    def _shard_body(channels, conc, rng, boundaries, iteration):
+        return step_shard(channels, conc, rng.reshape(-1), boundaries,
+                          iteration)
+
+    sharded = _shard_map(_shard_body, mesh, in_specs, out_specs)
+
+    def step(state: DistState) -> DistState:
+        ch, conc, rng, boundaries, stats = sharded(
+            state.channels, state.conc, state.rng, state.boundaries,
+            state.iteration)
+        return DistState(channels=ch, conc=conc, rng=rng,
+                         boundaries=boundaries,
+                         iteration=state.iteration + 1, stats=stats)
+
+    return jax.jit(step)
+
+
+class DistributedSimulation:
+    """Drop-in distributed counterpart of engine.Simulation.
+
+    Same config + behaviors; state is sharded over ``dcfg.n_shards`` devices
+    of ``mesh`` (default: the first n_shards of jax.devices()). Because every
+    slab runs the shared iteration core, any scenario that runs on
+    `Simulation` runs here unchanged — forces, behaviors, births/deaths,
+    statics, and diffusion included.
+    """
+
+    def __init__(self, dcfg: DistConfig, behaviors: Sequence[Behavior] = (),
+                 mesh=None, axis: str = "data"):
+        self.dcfg = dcfg
+        self.behaviors = list(behaviors)
+        self.axis = axis
+        if mesh is None:
+            devices = jax.devices()
+            if len(devices) < dcfg.n_shards:
+                raise ValueError(
+                    f"n_shards={dcfg.n_shards} > {len(devices)} devices "
+                    f"(set XLA_FLAGS=--xla_force_host_platform_device_count)")
+            mesh = jax.sharding.Mesh(np.array(devices[:dcfg.n_shards]),
+                                     (axis,))
+        self.mesh = mesh
+        self._step_fn = make_distributed_step(dcfg, mesh, self.behaviors,
+                                              axis)
+
+    # -- state construction -------------------------------------------------
+    def init_state(self, position, diameter=None, agent_type=None,
+                   extra_init: Dict[str, jnp.ndarray] | None = None,
+                   seed: int = 0) -> DistState:
+        dcfg, cfg = self.dcfg, self.dcfg.engine
+        position = jnp.asarray(position)
+        staging = stage_pool(position.shape[0], self.behaviors, position,
+                             diameter, agent_type, extra_init,
+                             extra_specs={OWNED: ((), jnp.bool_, True)})
+        ch = staging.channels()
+        boundaries = quantile_boundaries(ch["position"][:, 0], ch["alive"],
+                                         dcfg.n_shards,
+                                         float(cfg.domain_lo[0]),
+                                         float(cfg.domain_hi[0]))
+        # never-silent contract at init too: partition_global drops agents
+        # past a slab's local_capacity, so refuse instead (host-side check —
+        # heavy ties can pile a whole cluster into one quantile slab)
+        b = np.asarray(boundaries)
+        shard = np.clip(np.searchsorted(b[1:-1], np.asarray(ch["position"][:, 0]),
+                                        side="right"), 0, dcfg.n_shards - 1)
+        per_shard = np.bincount(shard[np.asarray(ch["alive"])],
+                                minlength=dcfg.n_shards)
+        if per_shard.max(initial=0) > dcfg.local_capacity:
+            raise ValueError(
+                f"slab populations {per_shard.tolist()} exceed "
+                f"local_capacity={dcfg.local_capacity}; raise it (heavy ties "
+                f"in x can defeat quantile balancing)")
+        channels = partition_global(ch, boundaries, dcfg)
+        dspec = cfg.diffusion
+        conc = (jnp.zeros(dspec.dims, jnp.float32) if dspec
+                else jnp.zeros((dcfg.n_shards, 1, 1)))
+        rng = jax.vmap(lambda s: jax.random.fold_in(jax.random.PRNGKey(seed),
+                                                    s))(
+            jnp.arange(dcfg.n_shards, dtype=jnp.uint32))
+        return DistState(channels=channels, conc=conc, rng=rng,
+                         boundaries=boundaries,
+                         iteration=jnp.zeros((), jnp.int32),
+                         stats=StepStats.zeros((dcfg.n_shards,)))
+
+    # -- public API ----------------------------------------------------------
+    def step(self, state: DistState) -> DistState:
+        return self._step_fn(state)
+
+    def run(self, state: DistState, n_iterations: int,
+            check_overflow: bool = False) -> DistState:
+        """Run ``n_iterations``; with ``check_overflow`` the host enforces the
+        §4.2 never-silent-loss contract over every per-shard flag."""
+        for i in range(n_iterations):
+            state = self._step_fn(state)
+            if check_overflow:
+                s = state.stats
+                if int(jnp.sum(s.halo_overflow)):
+                    raise RuntimeError(
+                        f"iteration {i}: halo overflow (ghost band exceeded "
+                        f"halo_capacity={self.dcfg.halo_capacity}, or a slab "
+                        f"thinner than the {self.dcfg.halo_width:.3g} ghost "
+                        f"band); raise halo_capacity / revisit boundaries")
+                if int(jnp.sum(s.migrate_overflow)):
+                    raise RuntimeError(
+                        f"iteration {i}: migration overflow (buffer "
+                        f"{self.dcfg.migrate_capacity} or local_capacity "
+                        f"{self.dcfg.local_capacity} exceeded)")
+                if int(jnp.sum(s.in_flight)):
+                    raise RuntimeError(
+                        f"iteration {i}: {int(jnp.sum(s.in_flight))} agents "
+                        f"in flight across >1 slab (a rebalance moved a "
+                        f"boundary further than one slab width; their next "
+                        f"step sees an incomplete neighborhood) — lower "
+                        f"rebalance_frequency or accept the transient by "
+                        f"polling stats.in_flight instead of check_overflow")
+                if int(jnp.sum(s.box_overflow)):
+                    raise RuntimeError(
+                        f"iteration {i}: grid run overflow on a shard; raise "
+                        f"EngineConfig.max_per_run / max_per_box")
+                if int(jnp.sum(s.birth_overflow)):
+                    raise RuntimeError(
+                        f"iteration {i}: birth overflow on a shard; raise "
+                        f"DistConfig.local_capacity")
+        return state
+
+    def gather_channels(self, state: DistState) -> Dict[str, np.ndarray]:
+        """Host-side: fetch the global channel arrays (live agents only are
+        meaningful; order is arbitrary across shards)."""
+        return {k: np.asarray(v) for k, v in state.channels.items()}

@@ -16,6 +16,14 @@ The paper's two thread barriers (L6/L15) vanish: under jit the whole iteration
 is a single XLA program — the strongest possible form of 'maximize the parallel
 part' (Amdahl, paper Challenge 1).
 
+**The iteration core is engine-agnostic** (:func:`make_iteration_core`,
+DESIGN.md §7): the same body serves the single-device `Simulation` and each
+slab of the distributed shard_map engine. The distributed wrapper
+parameterizes it with an *owned* channel (local agents vs ghost force-sources
+from neighboring slabs), the mesh axes its collectives vary over
+(``pvary_axes``), and a sharded `DiffusionOps` — nothing about forces,
+behaviors, births/deaths, statics, or diffusion is duplicated per engine.
+
 Environment selection mirrors the paper's environment interface: the optimized
 uniform grid (default), the scatter-table 'standard' grid, or brute force
 (Fig 11 comparison).
@@ -35,6 +43,7 @@ from . import compaction, diffusion as diff_mod, forces as force_mod, grid as gr
 from . import morton, statics as statics_mod
 from .agents import AgentPool, make_pool
 from .behaviors import Behavior, BehaviorEffects
+from .stats import StepStats
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,7 +64,7 @@ class EngineConfig:
                                            # Morton sort of scatter/hash envs.
     environment: str = "uniform_grid"      # uniform_grid | scatter_grid | hash_grid | brute_force
     force_impl: str = "xla"                # xla | pallas (K1 windowed kernel;
-                                           # interpret mode on CPU, native on TPU)
+                                           # interpret mode off-TPU, native on TPU)
     max_per_box: int = 16
     max_per_run: Optional[int] = None      # gather width per 3-box z-run (None → 3·K)
     query_chunk: int = 2048
@@ -80,7 +89,7 @@ class EngineState:
     conc: jnp.ndarray                    # diffusion grid ((1,1,1) dummy if unused)
     rng: jax.Array
     iteration: jnp.ndarray               # () int32
-    stats: Dict[str, jnp.ndarray]        # per-iteration scalars
+    stats: StepStats                     # per-iteration counters (stats.py)
 
 
 @dataclasses.dataclass
@@ -91,9 +100,344 @@ class StepContext:
     domain_lo: jnp.ndarray
     domain_hi: jnp.ndarray
     iteration: jnp.ndarray
+    owned: jnp.ndarray                       # (C,) bool — live agents this
+                                             # engine instance owns; behaviors
+                                             # must act on this mask, never on
+                                             # pool.alive (under the distributed
+                                             # engine, alive also covers ghost
+                                             # force-sources whose effects are
+                                             # the neighbor shard's to commit)
     neighbor_apply: Callable                 # (pair_fn, out_specs) -> dict
     substance_gradient: Callable             # positions -> (N, 3)
     substance_value: Callable                # positions -> (N,)
+
+
+# -- environment dispatch (module-level: shared by both engines) -------------
+
+def build_env(cfg: EngineConfig, spec: grid_mod.GridSpec, pool: AgentPool,
+              origin: jnp.ndarray, box_size: jnp.ndarray):
+    """Build the iteration's environment.
+
+    Resident environments (uniform_grid, and brute_force — which keeps
+    the grid for statics bookkeeping) return a *permuted pool* alongside
+    the grid state: the pool itself is the key-sorted layout
+    (grid.build_resident). Scatter/hash return the pool unchanged.
+    """
+    if cfg.environment in ("uniform_grid", "brute_force"):
+        pool, genv, _ = grid_mod.build_resident(spec, pool, origin, box_size)
+        return pool, genv
+    if cfg.environment == "scatter_grid":
+        return pool, grid_mod.build_scatter_grid(spec, pool, origin, box_size)
+    if cfg.environment == "hash_grid":
+        return pool, grid_mod.build_hash_grid(spec, pool, origin, box_size)
+    raise ValueError(cfg.environment)
+
+
+def make_neighbor_apply(cfg: EngineConfig, spec: grid_mod.GridSpec, grid_env,
+                        channels: Dict[str, jnp.ndarray],
+                        default_mask: jnp.ndarray,
+                        pvary_axes: Tuple[str, ...] = ()):
+    """One neighbor_apply closure per step.
+
+    Every closure takes ``(pair_fn, out_specs, query_mask=None)`` — the mask
+    defaults to ``default_mask`` (the live *owned* set; ghost rows of a
+    distributed slab are gather sources, never queries). The uniform grid
+    runs the resident run-streaming loop (grid.resident_apply): contiguous
+    query slices, 9 streamed z-runs at width R, and whole-block skipping
+    driven by the mask (§5/O6 — this is where static blocks drop out of the
+    trip count). The hash grid streams its 27 probes through
+    grid.phased_chunk_apply; scatter ('standard implementation') and brute
+    force keep the wide chunk_apply loop.
+    """
+    capacity = channels["position"].shape[0]
+
+    if cfg.environment == "uniform_grid":
+        def apply(pair_fn, out_specs, query_mask=None):
+            if query_mask is None:
+                query_mask = default_mask
+            return grid_mod.resident_apply(spec, grid_env, channels,
+                                           query_mask, pair_fn, out_specs,
+                                           cfg.query_chunk,
+                                           pvary_axes=pvary_axes)
+        return apply
+
+    if cfg.environment == "hash_grid":
+        def phase_fn(q_pos, q_slot, j):
+            ids, valid = grid_mod.hash_grid_probe(spec, grid_env, q_pos, j)
+            valid &= ids != q_slot[:, None]              # exclude self
+            return ids, valid
+
+        def apply(pair_fn, out_specs, query_mask=None):
+            if query_mask is None:
+                query_mask = default_mask
+            query_idx, n_query = compaction.active_index_list(query_mask)
+            return grid_mod.phased_chunk_apply(
+                channels, channels, query_idx, n_query, phase_fn, 27,
+                pair_fn, out_specs, cfg.query_chunk, pvary_axes=pvary_axes)
+        return apply
+
+    if cfg.environment == "scatter_grid":
+        def box_cand(qp):
+            return grid_mod.scatter_grid_candidates(spec, grid_env, qp)
+    elif cfg.environment == "brute_force":
+        ids_all = jnp.arange(capacity, dtype=jnp.int32)
+
+        def box_cand(qp):
+            q = qp.shape[0]
+            ids = jnp.broadcast_to(ids_all[None], (q, capacity))
+            valid = jnp.broadcast_to(channels["alive"][None], (q, capacity))
+            return ids, valid
+    else:
+        raise ValueError(f"unknown environment {cfg.environment}")
+
+    def cand_fn(q_pos, q_slot):
+        ids, valid = box_cand(q_pos)
+        valid &= ids != q_slot[:, None]                  # exclude self
+        return ids, valid
+
+    def apply(pair_fn, out_specs, query_mask=None):
+        if query_mask is None:
+            query_mask = default_mask
+        query_idx, n_query = compaction.active_index_list(query_mask)
+        return grid_mod.chunk_apply(channels, channels, query_idx, n_query,
+                                    cand_fn, pair_fn, out_specs,
+                                    cfg.query_chunk, pvary_axes=pvary_axes)
+    return apply
+
+
+# -- the iteration core ------------------------------------------------------
+
+def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
+                        *, owned_channel: Optional[str] = None,
+                        pvary_axes: Tuple[str, ...] = (),
+                        diff_ops: Optional[diff_mod.DiffusionOps] = None):
+    """Build the pure Algorithm-1 iteration body both engines share.
+
+    Returns ``core(pool, conc, rng, iteration) -> (pool, conc, rng,
+    StepStats)``: resident build → run-streaming/Pallas forces → behaviors →
+    effects merge → death compaction + birth commit → statics bookkeeping →
+    diffusion step — exactly the paper's iteration, over whatever pool view
+    the caller hands in.
+
+    owned_channel: name of a bool extra channel distinguishing agents this
+      pool view *owns* from ghost force-sources appended by a distributed
+      wrapper (None → everything alive is owned, the single-device case).
+      Ghosts contribute to neighbor reductions and statics disturbance but
+      are never queried, never acted on by behaviors, never counted in stats,
+      and never committed — their authoritative step happens on the shard
+      that owns them. Newborns inherit owned=True (they are committed by the
+      shard that staged them).
+    pvary_axes: mesh axes the pool is sharded over (threaded to the query
+      loops so their carries are marked varying under shard_map).
+    diff_ops: substance-grid strategy (diffusion.DiffusionOps). Defaults to
+      the full-grid single-device implementation; the distributed engine
+      substitutes slab-sharded ops with face-halo exchange.
+    """
+    if cfg.force_impl == "pallas" and cfg.environment != "uniform_grid":
+        raise ValueError("force_impl='pallas' requires the uniform_grid "
+                         "environment (the kernel consumes its resident "
+                         "grid tables)")
+    behaviors = list(behaviors)
+    spec = cfg.grid_spec
+    origin = jnp.asarray(cfg.domain_lo, jnp.float32)
+    dlo = jnp.asarray(cfg.domain_lo, jnp.float32)
+    dhi = jnp.asarray(cfg.domain_hi, jnp.float32)
+    box_size = jnp.asarray(cfg.interaction_radius, jnp.float32)
+    adhesion = (jnp.asarray(cfg.adhesion, jnp.float32)
+                if cfg.adhesion is not None else None)
+    force_pair = force_mod.make_force_pair_fn(cfg.force, adhesion)
+    if diff_ops is None and cfg.diffusion is not None:
+        diff_ops = diff_mod.DiffusionOps(cfg.diffusion, origin)
+
+    def owned_of(pool: AgentPool) -> jnp.ndarray:
+        if owned_channel is None:
+            return pool.alive
+        return pool.extra[owned_channel].astype(bool) & pool.alive
+
+    def sort_pool(pool: AgentPool) -> AgentPool:
+        keys = morton.morton_keys(pool.position, origin, box_size, spec.dims)
+        keys = jnp.where(pool.alive, keys, grid_mod._DEAD_KEY)
+        order = jnp.argsort(keys).astype(jnp.int32)
+        return compaction.apply_permutation(pool, order)
+
+    def core(pool: AgentPool, conc: jnp.ndarray, rng: jax.Array,
+             it: jnp.ndarray):
+        rng, k_force, *bkeys = jax.random.split(rng, 2 + len(behaviors))
+        stats = StepStats.zeros()
+
+        # ---------------- pre standalone ops ----------------
+        # Resident envs reorder every build (the permutation IS the §4.2
+        # sort); the periodic Morton sort only serves scatter/hash.
+        if cfg.sort_frequency > 0 and cfg.environment in ("scatter_grid",
+                                                          "hash_grid"):
+            pool = jax.lax.cond(it % cfg.sort_frequency == 0,
+                                sort_pool, lambda p: p, pool)
+        pool, grid_env = build_env(cfg, spec, pool, origin, box_size)
+        box_overflow = stats.box_overflow
+        if cfg.environment == "uniform_grid":
+            # query exactness bound: every 3-box z-run must fit the run
+            # gather capacity (DESIGN.md §4.2 overflow contract)
+            box_overflow = (grid_env.max_run_count
+                            > spec.run_capacity).astype(jnp.int32)
+        elif cfg.environment == "hash_grid":
+            # same contract: a bucket fuller than the probe gather width
+            # would silently truncate candidates (grid.hash_grid_probe)
+            box_overflow = (
+                grid_env.max_bucket_count
+                > grid_mod.HASH_K_MULT * spec.max_per_box).astype(jnp.int32)
+
+        if cfg.diffusion is not None:
+            sub_dt = cfg.dt / cfg.diffusion_substeps
+            for _ in range(cfg.diffusion_substeps):
+                conc = diff_ops.step(conc, sub_dt)
+
+        channels = {k: v for k, v in pool.channels().items()
+                    if not k.startswith("extra.")}
+        owned_alive = owned_of(pool)
+        nbr_apply = make_neighbor_apply(cfg, spec, grid_env, channels,
+                                        default_mask=owned_alive,
+                                        pvary_axes=pvary_axes)
+
+        # static flags from last iteration's bookkeeping (paper §5):
+        # box-granular aggregation over the grid tables — no extra
+        # neighbor sweep (statics.py). Ghost rows carry their owner's
+        # bookkeeping, so boundary disturbance crosses shards.
+        if cfg.detect_static and cfg.environment in ("uniform_grid",
+                                                     "brute_force"):
+            static = statics_mod.update_static_flags(pool, spec, grid_env, it)
+            pool = dataclasses.replace(pool, static=static)
+
+        pos0 = pool.position
+        dia0 = pool.diameter
+
+        # ---------------- agent ops: forces ----------------
+        active = None
+        if cfg.use_forces:
+            if cfg.detect_static:
+                active = owned_alive & ~pool.static
+            else:
+                active = owned_alive
+            if cfg.force_impl == "pallas":
+                # K1 over the resident layout: the kernel consumes the
+                # step's grid tables directly (no sort/unsort) and skips
+                # fully-static row blocks (kernels/ops.py)
+                from ..kernels import ops as kops
+                f, nnz, ovf = kops.collision_force_resident(
+                    pool.position, pool.diameter, pool.agent_type,
+                    pool.alive, active, grid_env.starts, grid_env.counts,
+                    origin, box_size,
+                    dims=spec.dims, k_rep=cfg.force.k_rep,
+                    adhesion=cfg.adhesion,
+                    adhesion_band=cfg.force.adhesion_band)
+                # column-map overflow means possibly-missed pairs: surface
+                # it through the same never-silent contract (DESIGN.md §4.2)
+                box_overflow = jnp.maximum(box_overflow,
+                                           ovf.astype(jnp.int32))
+                res = {"force": f, "force_nnz": nnz}
+            else:
+                res = nbr_apply(force_pair,
+                                {"force": ((3,), jnp.float32),
+                                 "force_nnz": ((), jnp.int32)},
+                                query_mask=active)
+            dx = force_mod.displacement(res["force"], cfg.force, cfg.dt)
+            new_pos = jnp.clip(pool.position + dx, dlo, dhi)
+            new_pos = jnp.where(active[:, None], new_pos, pool.position)
+            force_nnz = jnp.where(active, res["force_nnz"], pool.force_nnz)
+            pool = dataclasses.replace(pool, position=new_pos,
+                                       force_nnz=force_nnz)
+
+        # ---------------- agent ops: behaviors ----------------
+        ctx = StepContext(
+            config=cfg, dt=cfg.dt, domain_lo=dlo, domain_hi=dhi,
+            iteration=it, owned=owned_alive, neighbor_apply=nbr_apply,
+            substance_gradient=(
+                (lambda p: diff_ops.gradient(conc, p))
+                if cfg.diffusion else (lambda p: jnp.zeros_like(p))),
+            substance_value=(
+                (lambda p: diff_ops.sample(conc, p))
+                if cfg.diffusion else (lambda p: jnp.zeros(p.shape[:-1]))),
+        )
+        birth_queues: List[Tuple[Dict[str, jnp.ndarray], jnp.ndarray]] = []
+        death_mask = jnp.zeros((pool.capacity,), bool)
+        for b, bk in zip(behaviors, bkeys):
+            eff = b(ctx, pool, bk)
+            if eff.set_channels:
+                ch = pool.channels()
+                for name, val in eff.set_channels.items():
+                    ch[name] = val
+                pool = pool.with_channels(ch)
+            if eff.birth_channels is not None:
+                birth_queues.append((eff.birth_channels, eff.birth_valid))
+            if eff.death_mask is not None:
+                death_mask |= eff.death_mask
+            if eff.secretion is not None and cfg.diffusion is not None:
+                conc = diff_ops.add_sources(conc, pool.position,
+                                            eff.secretion)
+
+        # bookkeeping for the next static detection
+        move_d = pool.position - pos0
+        moved = jnp.sum(move_d * move_d, -1) > cfg.force.move_eps ** 2
+        grew = pool.diameter > dia0 + 1e-12
+        pool = dataclasses.replace(pool, moved=moved & pool.alive,
+                                   grew=grew & pool.alive)
+
+        # ---------------- post standalone ops: commit ----------------
+        # ghosts are the neighbor shard's to kill — only owned deaths commit
+        death_mask &= owned_of(pool)
+        deaths = jnp.sum((death_mask & pool.alive).astype(jnp.int32))
+        pool = dataclasses.replace(pool, alive=pool.alive & ~death_mask)
+        # n_active = force-computed agents still alive at iteration end
+        # (counting at force time could exceed n_live after deaths)
+        n_active = (jnp.sum((active & pool.alive).astype(jnp.int32))
+                    if active is not None
+                    else jnp.sum(owned_of(pool).astype(jnp.int32)))
+        pool = jax.lax.cond(deaths > 0, compaction.compact,
+                            lambda p: p, pool)
+
+        births = jnp.zeros((), jnp.int32)
+        birth_overflow = jnp.zeros((), jnp.int32)
+        for q, valid in birth_queues:
+            if owned_channel is not None:
+                # newborns are committed — and later migrated if needed — by
+                # the shard that staged them
+                q = dict(q)
+                q["extra." + owned_channel] = jnp.ones_like(valid)
+            birth_overflow += compaction.birth_overflow(pool, valid)
+            births += jnp.sum(valid.astype(jnp.int32))
+            pool = compaction.commit_births(pool, q, valid, it)
+
+        stats = dataclasses.replace(
+            stats, n_live=jnp.sum(owned_of(pool).astype(jnp.int32)),
+            n_active=n_active, births=births, deaths=deaths,
+            box_overflow=box_overflow, birth_overflow=birth_overflow)
+        return pool, conc, rng, stats
+
+    return core
+
+
+def stage_pool(capacity: int, behaviors: Sequence[Behavior], position,
+               diameter=None, agent_type=None,
+               extra_init: Dict[str, jnp.ndarray] | None = None,
+               extra_specs: Dict[str, tuple] | None = None) -> AgentPool:
+    """Initial pool with every behavior's extra channels (both engines).
+
+    ``extra_specs`` lets a caller add engine-owned channels on top (the
+    distributed engine's ``owned`` flag)."""
+    specs: Dict[str, tuple] = {}
+    for b in behaviors:
+        specs.update(b.extra_specs())
+    if extra_specs:
+        specs.update(extra_specs)
+    position = jnp.asarray(position)
+    pool = make_pool(capacity, position=position,
+                     diameter=None if diameter is None else jnp.asarray(diameter),
+                     agent_type=None if agent_type is None else jnp.asarray(agent_type),
+                     extra_specs=specs)
+    if extra_init:
+        n = position.shape[0]
+        for k, v in extra_init.items():
+            pool.extra[k] = pool.extra[k].at[:n].set(jnp.asarray(v))
+    return pool
 
 
 class Simulation:
@@ -103,282 +447,29 @@ class Simulation:
         self.config = config
         self.behaviors = list(behaviors)
         self.spec = config.grid_spec
-        if config.force_impl == "pallas" and config.environment != "uniform_grid":
-            raise ValueError("force_impl='pallas' requires the uniform_grid "
-                             "environment (the kernel consumes its resident "
-                             "grid tables)")
         self._step_fn = jax.jit(self._build_step())
 
     # -- state construction -------------------------------------------------
     def init_state(self, position, diameter=None, agent_type=None,
                    extra_init: Dict[str, jnp.ndarray] | None = None,
                    seed: int = 0) -> EngineState:
-        specs: Dict[str, tuple] = {}
-        for b in self.behaviors:
-            specs.update(b.extra_specs())
-        pool = make_pool(self.config.capacity, position=jnp.asarray(position),
-                         diameter=None if diameter is None else jnp.asarray(diameter),
-                         agent_type=None if agent_type is None else jnp.asarray(agent_type),
-                         extra_specs=specs)
-        if extra_init:
-            n = jnp.asarray(position).shape[0]
-            for k, v in extra_init.items():
-                pool.extra[k] = pool.extra[k].at[:n].set(jnp.asarray(v))
+        pool = stage_pool(self.config.capacity, self.behaviors, position,
+                          diameter, agent_type, extra_init)
         dspec = self.config.diffusion
         conc = jnp.zeros(dspec.dims, jnp.float32) if dspec else jnp.zeros((1, 1, 1))
-        stats = {k: jnp.zeros((), jnp.int32) for k in
-                 ("n_live", "n_active", "births", "deaths", "box_overflow",
-                  "birth_overflow")}
         return EngineState(pool=pool, conc=conc, rng=jax.random.PRNGKey(seed),
-                           iteration=jnp.zeros((), jnp.int32), stats=stats)
-
-    # -- environment dispatch ------------------------------------------------
-    def _make_neighbor_apply(self, pool: AgentPool, grid_env, channels):
-        """One neighbor_apply closure per step.
-
-        Every closure takes ``(pair_fn, out_specs, query_mask=None)`` — the
-        mask defaults to the live set. The uniform grid runs the resident
-        run-streaming loop (grid.resident_apply): contiguous query slices,
-        9 streamed z-runs at width R, and whole-block skipping driven by the
-        mask (§5/O6 — this is where static blocks drop out of the trip
-        count). The hash grid streams its 27 probes through
-        grid.phased_chunk_apply; scatter ('standard implementation') and
-        brute force keep the wide chunk_apply loop.
-        """
-        cfg, spec = self.config, self.spec
-
-        if cfg.environment == "uniform_grid":
-            def apply(pair_fn, out_specs, query_mask=None):
-                if query_mask is None:
-                    query_mask = pool.alive
-                return grid_mod.resident_apply(spec, grid_env, channels,
-                                               query_mask, pair_fn, out_specs,
-                                               cfg.query_chunk)
-            return apply
-
-        if cfg.environment == "hash_grid":
-            def phase_fn(q_pos, q_slot, j):
-                ids, valid = grid_mod.hash_grid_probe(spec, grid_env, q_pos, j)
-                valid &= ids != q_slot[:, None]              # exclude self
-                return ids, valid
-
-            def apply(pair_fn, out_specs, query_mask=None):
-                if query_mask is None:
-                    query_mask = pool.alive
-                query_idx, n_query = compaction.active_index_list(query_mask)
-                return grid_mod.phased_chunk_apply(
-                    channels, channels, query_idx, n_query, phase_fn, 27,
-                    pair_fn, out_specs, cfg.query_chunk)
-            return apply
-
-        if cfg.environment == "scatter_grid":
-            def box_cand(qp):
-                return grid_mod.scatter_grid_candidates(spec, grid_env, qp)
-        elif cfg.environment == "brute_force":
-            ids_all = jnp.arange(pool.capacity, dtype=jnp.int32)
-
-            def box_cand(qp):
-                q = qp.shape[0]
-                ids = jnp.broadcast_to(ids_all[None], (q, pool.capacity))
-                valid = jnp.broadcast_to(pool.alive[None], (q, pool.capacity))
-                return ids, valid
-        else:
-            raise ValueError(f"unknown environment {cfg.environment}")
-
-        def cand_fn(q_pos, q_slot):
-            ids, valid = box_cand(q_pos)
-            valid &= ids != q_slot[:, None]                  # exclude self
-            return ids, valid
-
-        def apply(pair_fn, out_specs, query_mask=None):
-            if query_mask is None:
-                query_mask = pool.alive
-            query_idx, n_query = compaction.active_index_list(query_mask)
-            return grid_mod.chunk_apply(channels, channels, query_idx, n_query,
-                                        cand_fn, pair_fn, out_specs,
-                                        cfg.query_chunk)
-        return apply
-
-    def _build_env(self, pool, origin, box_size):
-        """Build the iteration's environment.
-
-        Resident environments (uniform_grid, and brute_force — which keeps
-        the grid for statics bookkeeping) return a *permuted pool* alongside
-        the grid state: the pool itself is the key-sorted layout
-        (grid.build_resident). Scatter/hash return the pool unchanged.
-        """
-        cfg, spec = self.config, self.spec
-        if cfg.environment in ("uniform_grid", "brute_force"):
-            pool, genv, _ = grid_mod.build_resident(spec, pool, origin, box_size)
-            return pool, genv
-        if cfg.environment == "scatter_grid":
-            return pool, grid_mod.build_scatter_grid(spec, pool, origin, box_size)
-        if cfg.environment == "hash_grid":
-            return pool, grid_mod.build_hash_grid(spec, pool, origin, box_size)
-        raise ValueError(cfg.environment)
+                           iteration=jnp.zeros((), jnp.int32),
+                           stats=StepStats.zeros())
 
     # -- the iteration -------------------------------------------------------
     def _build_step(self):
-        cfg = self.config
-        spec = self.spec
-        behaviors = self.behaviors
-        origin = jnp.asarray(cfg.domain_lo, jnp.float32)
-        dlo = jnp.asarray(cfg.domain_lo, jnp.float32)
-        dhi = jnp.asarray(cfg.domain_hi, jnp.float32)
-        box_size = jnp.asarray(cfg.interaction_radius, jnp.float32)
-        adhesion = (jnp.asarray(cfg.adhesion, jnp.float32)
-                    if cfg.adhesion is not None else None)
-        force_pair = force_mod.make_force_pair_fn(cfg.force, adhesion)
-
-        def sort_pool(pool: AgentPool) -> AgentPool:
-            keys = morton.morton_keys(pool.position, origin, box_size, spec.dims)
-            keys = jnp.where(pool.alive, keys, grid_mod._DEAD_KEY)
-            order = jnp.argsort(keys).astype(jnp.int32)
-            return compaction.apply_permutation(pool, order)
+        core = make_iteration_core(self.config, self.behaviors)
 
         def step(state: EngineState) -> EngineState:
-            pool = state.pool
-            it = state.iteration
-            rng, k_force, *bkeys = jax.random.split(state.rng, 2 + len(behaviors))
-            stats = dict(state.stats)
-
-            # ---------------- pre standalone ops ----------------
-            # Resident envs reorder every build (the permutation IS the §4.2
-            # sort); the periodic Morton sort only serves scatter/hash.
-            if cfg.sort_frequency > 0 and cfg.environment in ("scatter_grid",
-                                                              "hash_grid"):
-                pool = jax.lax.cond(it % cfg.sort_frequency == 0,
-                                    sort_pool, lambda p: p, pool)
-            pool, grid_env = self._build_env(pool, origin, box_size)
-            if cfg.environment == "uniform_grid":
-                # query exactness bound: every 3-box z-run must fit the run
-                # gather capacity (DESIGN.md §4.2 overflow contract)
-                stats["box_overflow"] = (grid_env.max_run_count
-                                         > spec.run_capacity).astype(jnp.int32)
-            elif cfg.environment == "hash_grid":
-                # same contract: a bucket fuller than the probe gather width
-                # would silently truncate candidates (grid.hash_grid_probe)
-                stats["box_overflow"] = (
-                    grid_env.max_bucket_count
-                    > grid_mod.HASH_K_MULT * spec.max_per_box).astype(jnp.int32)
-
-            conc = state.conc
-            if cfg.diffusion is not None:
-                sub_dt = cfg.dt / cfg.diffusion_substeps
-                for _ in range(cfg.diffusion_substeps):
-                    conc = diff_mod.step(cfg.diffusion, conc, sub_dt)
-
-            channels = {k: v for k, v in pool.channels().items()
-                        if not k.startswith("extra.")}
-            nbr_apply = self._make_neighbor_apply(pool, grid_env, channels)
-
-            # static flags from last iteration's bookkeeping (paper §5):
-            # box-granular aggregation over the grid tables — no extra
-            # neighbor sweep (statics.py)
-            if cfg.detect_static and cfg.environment in ("uniform_grid",
-                                                         "brute_force"):
-                static = statics_mod.update_static_flags(pool, spec, grid_env,
-                                                         it)
-                pool = dataclasses.replace(pool, static=static)
-
-            pos0 = pool.position
-            dia0 = pool.diameter
-
-            # ---------------- agent ops: forces ----------------
-            active = None
-            if cfg.use_forces:
-                if cfg.detect_static:
-                    active = pool.alive & ~pool.static
-                else:
-                    active = pool.alive
-                if cfg.force_impl == "pallas":
-                    # K1 over the resident layout: the kernel consumes the
-                    # step's grid tables directly (no sort/unsort) and skips
-                    # fully-static row blocks (kernels/ops.py)
-                    from ..kernels import ops as kops
-                    f, nnz, ovf = kops.collision_force_resident(
-                        pool.position, pool.diameter, pool.agent_type,
-                        pool.alive, active, grid_env.starts, grid_env.counts,
-                        origin, box_size,
-                        dims=spec.dims, k_rep=cfg.force.k_rep,
-                        adhesion=cfg.adhesion,
-                        adhesion_band=cfg.force.adhesion_band)
-                    # column-map overflow means possibly-missed pairs: surface
-                    # it through the same never-silent contract (DESIGN.md §4.2)
-                    stats["box_overflow"] = jnp.maximum(
-                        stats["box_overflow"], ovf.astype(jnp.int32))
-                    res = {"force": f, "force_nnz": nnz}
-                else:
-                    res = nbr_apply(force_pair,
-                                    {"force": ((3,), jnp.float32),
-                                     "force_nnz": ((), jnp.int32)},
-                                    query_mask=active)
-                dx = force_mod.displacement(res["force"], cfg.force, cfg.dt)
-                new_pos = jnp.clip(pool.position + dx, dlo, dhi)
-                new_pos = jnp.where(active[:, None], new_pos, pool.position)
-                force_nnz = jnp.where(active, res["force_nnz"], pool.force_nnz)
-                pool = dataclasses.replace(pool, position=new_pos,
-                                           force_nnz=force_nnz)
-
-            # ---------------- agent ops: behaviors ----------------
-            ctx = StepContext(
-                config=cfg, dt=cfg.dt, domain_lo=dlo, domain_hi=dhi,
-                iteration=it, neighbor_apply=nbr_apply,
-                substance_gradient=(
-                    (lambda p: diff_mod.gradient(cfg.diffusion, conc, p, origin))
-                    if cfg.diffusion else (lambda p: jnp.zeros_like(p))),
-                substance_value=(
-                    (lambda p: diff_mod.sample(cfg.diffusion, conc, p, origin))
-                    if cfg.diffusion else (lambda p: jnp.zeros(p.shape[:-1]))),
-            )
-            birth_queues: List[Tuple[Dict[str, jnp.ndarray], jnp.ndarray]] = []
-            death_mask = jnp.zeros((pool.capacity,), bool)
-            for b, bk in zip(behaviors, bkeys):
-                eff = b(ctx, pool, bk)
-                if eff.set_channels:
-                    ch = pool.channels()
-                    for name, val in eff.set_channels.items():
-                        ch[name] = val
-                    pool = pool.with_channels(ch)
-                if eff.birth_channels is not None:
-                    birth_queues.append((eff.birth_channels, eff.birth_valid))
-                if eff.death_mask is not None:
-                    death_mask |= eff.death_mask
-                if eff.secretion is not None and cfg.diffusion is not None:
-                    conc = diff_mod.add_sources(cfg.diffusion, conc,
-                                                pool.position, eff.secretion,
-                                                origin)
-
-            # bookkeeping for the next static detection
-            move_d = pool.position - pos0
-            moved = jnp.sum(move_d * move_d, -1) > cfg.force.move_eps ** 2
-            grew = pool.diameter > dia0 + 1e-12
-            pool = dataclasses.replace(pool, moved=moved & pool.alive,
-                                       grew=grew & pool.alive)
-
-            # ---------------- post standalone ops: commit ----------------
-            deaths = jnp.sum((death_mask & pool.alive).astype(jnp.int32))
-            stats["deaths"] = deaths
-            pool = dataclasses.replace(pool, alive=pool.alive & ~death_mask)
-            # n_active = force-computed agents still alive at iteration end
-            # (counting at force time could exceed n_live after deaths)
-            stats["n_active"] = (jnp.sum((active & pool.alive).astype(jnp.int32))
-                                 if active is not None else pool.n_live)
-            pool = jax.lax.cond(deaths > 0, compaction.compact,
-                                lambda p: p, pool)
-
-            births = jnp.zeros((), jnp.int32)
-            overflow = jnp.zeros((), jnp.int32)
-            for q, valid in birth_queues:
-                overflow += compaction.birth_overflow(pool, valid)
-                births += jnp.sum(valid.astype(jnp.int32))
-                pool = compaction.commit_births(pool, q, valid, it)
-            stats["births"] = births
-            stats["birth_overflow"] = overflow
-            stats["n_live"] = pool.n_live
-
+            pool, conc, rng, stats = core(state.pool, state.conc, state.rng,
+                                          state.iteration)
             return EngineState(pool=pool, conc=conc, rng=rng,
-                               iteration=it + 1, stats=stats)
+                               iteration=state.iteration + 1, stats=stats)
 
         return step
 

@@ -393,6 +393,8 @@ def resident_apply(spec: GridSpec,
 
         acc0 = {name: jnp.zeros((b, *sfx), dt)
                 for name, (sfx, dt) in out_specs.items()}
+        if pvary_axes:   # inner carry must match the varying results it sums
+            acc0 = {k: _pcast_varying(v, pvary_axes) for k, v in acc0.items()}
         acc = jax.lax.fori_loop(0, 9, run, acc0)
         new_outs = {}
         for name, val in acc.items():
@@ -452,6 +454,8 @@ def phased_chunk_apply(channels: Dict[str, jnp.ndarray],
 
         acc0 = {name: jnp.zeros((b, *sfx), dt)
                 for name, (sfx, dt) in out_specs.items()}
+        if pvary_axes:   # inner carry must match the varying results it sums
+            acc0 = {k: _pcast_varying(v, pvary_axes) for k, v in acc0.items()}
         if n_phases == 1:
             acc = phase(jnp.int32(0), acc0)
         else:

@@ -25,6 +25,13 @@ granularity — on TPU per-lane predication saves nothing, so the resident
 layout's query loop drops whole fully-static blocks via a dynamic trip count
 (grid.resident_apply / compaction.active_block_list), and the Pallas kernel
 gives fully-static row blocks an empty column list (kernels/ops).
+
+Under the distributed engine (DESIGN.md §7) the same functions run per slab:
+ghost rows ship their owner's moved/grew/born_iter/force_nnz bookkeeping, so
+boundary disturbance wakes agents across shard lines. Because a disturbance
+up to *two* box widths away can flip an agent's flag (the disturbed box plus
+one windowed-OR spread), the distributed wrapper widens its ghost band to
+2·r when ``detect_static`` is on — keeping the never-wrong-skip guarantee.
 """
 
 from __future__ import annotations

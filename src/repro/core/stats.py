@@ -1,0 +1,81 @@
+"""Per-iteration statistics — one dataclass shared by both engines.
+
+The single-device engine used a plain dict and the distributed engine grew its
+own ad-hoc per-shard dict; overflow observability (DESIGN.md §4.2 — the engine
+never silently drops interactions) now flows through this one structure for
+both. Fields the single-device engine cannot produce (halo/migration traffic)
+are simply zero there, so monitoring code is engine-agnostic.
+
+Shapes: scalars () in the single-device engine; (n_shards,) per-shard vectors
+in the distributed engine (one entry per slab). Dict-style access
+(``stats["n_live"]``) is kept so existing callers and tests read either engine
+the same way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class StepStats:
+    """Counters of one iteration (paper 'statistics' standalone operation).
+
+    n_live:           live agents at iteration end
+    n_active:         force-computed agents still alive at iteration end
+                      (§5 static skipping makes this < n_live)
+    births / deaths:  agents added / removed this iteration (§3.2)
+    box_overflow:     grid run / hash bucket / Pallas column-map capacity
+                      exceeded — possibly-missed neighbor pairs (§4.2)
+    birth_overflow:   staged newborns that did not fit in capacity
+    halo_overflow:    ghost-band agents that did not fit the halo buffer
+                      (distributed only; §7)
+    migrate_overflow: migrating agents dropped for buffer/capacity reasons
+                      (distributed only; §7)
+    in_flight:        owned agents still outside their slab after this step's
+                      ring hop (displaced ≥2 slabs by a rebalance). Nothing
+                      was dropped — they converge one hop per step — but
+                      their next iteration runs with an incomplete
+                      neighborhood, so the flag shares the never-silent
+                      contract (distributed only; §7)
+    """
+
+    n_live: jnp.ndarray
+    n_active: jnp.ndarray
+    births: jnp.ndarray
+    deaths: jnp.ndarray
+    box_overflow: jnp.ndarray
+    birth_overflow: jnp.ndarray
+    halo_overflow: jnp.ndarray
+    migrate_overflow: jnp.ndarray
+    in_flight: jnp.ndarray
+
+    FIELDS = ("n_live", "n_active", "births", "deaths", "box_overflow",
+              "birth_overflow", "halo_overflow", "migrate_overflow",
+              "in_flight")
+
+    @classmethod
+    def zeros(cls, shape: tuple = ()) -> "StepStats":
+        return cls(**{f: jnp.zeros(shape, jnp.int32) for f in cls.FIELDS})
+
+    # dict-style access so both engines' stats read identically
+    def __getitem__(self, key: str) -> jnp.ndarray:
+        if key not in self.FIELDS:
+            raise KeyError(key)
+        return getattr(self, key)
+
+    def keys(self):
+        return iter(self.FIELDS)
+
+    def items(self):
+        return ((f, getattr(self, f)) for f in self.FIELDS)
+
+    def overflowed(self) -> jnp.ndarray:
+        """Any never-silent-loss flag set (§4.2 contract, either engine)."""
+        return (jnp.sum(self.box_overflow) + jnp.sum(self.birth_overflow)
+                + jnp.sum(self.halo_overflow) + jnp.sum(self.migrate_overflow)
+                + jnp.sum(self.in_flight)) > 0

@@ -103,10 +103,15 @@ def collision_force_resident(position: jnp.ndarray, diameter: jnp.ndarray,
                              *, dims: Tuple[int, int, int], k_rep: float = 2.0,
                              adhesion: Optional[Tuple[Tuple[float, ...], ...]] = None,
                              adhesion_band: float = 0.4, maxb: int = 64,
-                             interpret: bool = True
+                             interpret: Optional[bool] = None
                              ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """K1 over the RESIDENT grid-ordered pool: column map → kernel. No sort,
     no unsort, no candidate matrix.
+
+    ``interpret=None`` resolves per backend: native Mosaic on TPU, interpret
+    mode elsewhere (CPU CI, the shard_map host-device parity tests). Both
+    engines call through here — the distributed slabs run the identical
+    kernel on their local resident pool.
 
     Inputs must already be in grid-key order with the grid's per-box
     ``(starts, counts)`` tables (grid.build_resident) — the engine's resident
@@ -127,6 +132,8 @@ def collision_force_resident(position: jnp.ndarray, diameter: jnp.ndarray,
     adhesion_band, so every interacting pair falls inside the 3×3×3
     neighborhood.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     c = position.shape[0]
     n_pad = ((c + BLOCK - 1) // BLOCK) * BLOCK
     pad = n_pad - c
@@ -172,7 +179,7 @@ def collision_force(position: jnp.ndarray, diameter: jnp.ndarray,
                     *, dims: Tuple[int, int, int], k_rep: float = 2.0,
                     adhesion: Optional[Tuple[Tuple[float, ...], ...]] = None,
                     adhesion_band: float = 0.4, maxb: int = 64,
-                    interpret: bool = True
+                    interpret: Optional[bool] = None
                     ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Slot-order compat wrapper: linear-key sort → resident core → unsort.
 

@@ -1,8 +1,17 @@
-"""Distributed ABM engine: multi-shard == single-device (subprocess test).
+"""Distributed ABM engine: multi-shard == single-device (subprocess tests).
+
+The distributed engine contains no force/query/behavior logic of its own —
+every slab runs engine.make_iteration_core, the same Algorithm-1 body as
+`Simulation`. These tests hold it to that claim: a forces-only run and a full
+SIR epidemiology scenario (behaviors + deterministic births/deaths + agents
+migrating across slabs mid-run + in-loop quantile rebalance) must match the
+single-device oracle, and the sharded-diffusion path (face halos + collective
+agent coupling) must reproduce the full-grid substance field.
 
 The main pytest process must keep the default 1-CPU view (conftest contract),
-so the 8-device shard_map run executes in a subprocess with
---xla_force_host_platform_device_count=8.
+so the 4-shard shard_map runs execute in one subprocess with
+--xla_force_host_platform_device_count=4. Pure-host helpers
+(quantile_boundaries hardening) are tested in-process.
 """
 
 import json
@@ -15,82 +24,284 @@ import numpy as np
 
 _SCRIPT = textwrap.dedent("""
     import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import json
-    import dataclasses
+    import numpy as np
     import jax
     import jax.numpy as jnp
-    import numpy as np
-    from repro.core import EngineConfig, ForceParams, Simulation
-    from repro.core import distributed as D
+    from repro.core import (DistConfig, DistributedSimulation, EngineConfig,
+                            ForceParams, Simulation)
+    from repro.core.behaviors import (Behavior, BehaviorEffects, Chemotaxis,
+                                      Infection, Secretion, INFECTED,
+                                      RECOVERED, SUSCEPTIBLE)
+    from repro.core.diffusion import DiffusionSpec
 
+    results = {}
     rng = np.random.default_rng(0)
+    SIDE = 48.0
+
+
+    def live_summary(pos, *extras):
+        o = np.lexsort(pos.T)
+        return (pos[o],) + tuple(e[o] for e in extras)
+
+
+    # ---------------- case 1: forces only, 4 slabs ----------------
     N = 400
-    SIDE = 64.0
     cfg = EngineConfig(capacity=512, domain_lo=(0, 0, 0),
                        domain_hi=(SIDE,) * 3, interaction_radius=4.0,
                        dt=0.1, max_per_box=64, query_chunk=128,
                        force=ForceParams(max_displacement=0.5))
     pos = rng.uniform(2, SIDE - 2, (N, 3)).astype(np.float32)
     dia = np.full(N, 3.0, np.float32)
-
-    # ---- single-device reference (forces only) ----
     sim = Simulation(cfg, [])
     st = sim.init_state(pos, diameter=dia)
     for _ in range(5):
         st = sim.step(st)
-    ref_pos = np.asarray(st.pool.position)[np.asarray(st.pool.alive)]
-    ref_sorted = ref_pos[np.lexsort(ref_pos.T)]
+    a = np.asarray(st.pool.alive)
+    (ref_pos,) = live_summary(np.asarray(st.pool.position)[a])
 
-    # ---- distributed (8 slabs) ----
-    n_shards = 8
-    dcfg = D.DistConfig(engine=cfg, n_shards=n_shards, local_capacity=256,
-                        halo_capacity=128, migrate_capacity=64)
-    channels = {
-        "position": jnp.asarray(np.pad(pos, ((0, 112), (0, 0)))),
-        "diameter": jnp.asarray(np.pad(dia, (0, 112))),
-        "agent_type": jnp.zeros(512, jnp.int32),
-        "alive": jnp.asarray(np.arange(512) < N),
+    dcfg = DistConfig(engine=cfg, n_shards=4, local_capacity=256,
+                      halo_capacity=128, migrate_capacity=64)
+    dsim = DistributedSimulation(dcfg)
+    dst = dsim.init_state(pos, diameter=dia)
+    dst = dsim.run(dst, 5, check_overflow=True)
+    da = np.asarray(dst.channels["alive"])
+    (out_pos,) = live_summary(np.asarray(dst.channels["position"])[da])
+    counts = np.asarray(dst.stats["n_live"]).ravel()
+    results["forces"] = {
+        "n_ref": int(a.sum()), "n_dist": int(da.sum()),
+        "max_err": float(np.abs(ref_pos - out_pos).max())
+                   if a.sum() == da.sum() else -1.0,
+        "n_live_per_shard": counts.tolist(),
+        "owned_committed": bool(np.all(
+            np.asarray(dst.channels["extra.owned"])[da])),
     }
-    bounds = D.quantile_boundaries(channels["position"][:, 0],
-                                   channels["alive"], n_shards, 0.0, SIDE)
-    sharded = D.partition_global(channels, bounds, dcfg)
-    mesh_kw = {}
-    if hasattr(jax.sharding, "AxisType"):   # jax >= 0.6
-        mesh_kw["axis_types"] = (jax.sharding.AxisType.Auto,)
-    mesh = jax.make_mesh((n_shards,), ("data",), **mesh_kw)
-    step = D.make_distributed_step(dcfg, mesh)
-    stats = None
-    for _ in range(5):
-        sharded, stats = step(sharded, bounds)
-    out_alive = np.asarray(sharded["alive"])
-    out_pos = np.asarray(sharded["position"])[out_alive]
-    out_sorted = out_pos[np.lexsort(out_pos.T)]
 
-    result = {
-        "n_ref": int(len(ref_sorted)), "n_dist": int(len(out_sorted)),
-        "max_err": float(np.abs(ref_sorted - out_sorted).max())
-                   if len(ref_sorted) == len(out_sorted) else -1.0,
-        "halo_overflow": int(np.asarray(stats["halo_overflow"]).sum()),
-        "migrate_overflow": int(np.asarray(stats["migrate_overflow"]).sum()),
-        "n_live_per_shard": np.asarray(stats["n_live"]).ravel().tolist(),
+
+    # ---------------- case 2: SIR + births/deaths + migration ----------------
+    class Drift(Behavior):
+        '''Deterministic +x drift: every agent crosses slab boundaries.'''
+        def __init__(self, vx):
+            self.vx = vx
+
+        def __call__(self, ctx, pool, rng):
+            step = jnp.asarray([self.vx, 0.0, 0.0]) * ctx.dt
+            new_pos = jnp.where(ctx.owned[:, None], pool.position + step,
+                                pool.position)
+            new_pos = jnp.clip(new_pos, ctx.domain_lo, ctx.domain_hi)
+            return BehaviorEffects(set_channels={"position": new_pos})
+
+
+    class RecoveredFate(Behavior):
+        '''Deterministic births+deaths: a recovered agent seeds one
+        susceptible child 3 steps after recovery and dies after 6.'''
+        def extra_specs(self):
+            return {"post": ((), jnp.int32, 0)}
+
+        def __call__(self, ctx, pool, rng):
+            rec = ctx.owned & (pool.agent_type == RECOVERED)
+            post = jnp.where(rec, pool.extra["post"] + 1, pool.extra["post"])
+            bp = jnp.clip(pool.position + jnp.asarray([0.0, 1.5, 0.0]),
+                          ctx.domain_lo, ctx.domain_hi)
+            return BehaviorEffects(
+                set_channels={"extra.post": post},
+                birth_channels={"position": bp, "diameter": pool.diameter,
+                                "agent_type": jnp.zeros_like(pool.agent_type)},
+                birth_valid=rec & (post == 3),
+                death_mask=rec & (post >= 6))
+
+
+    def sir_behaviors():
+        # beta=1.0 makes Infection deterministic (u < 1.0 always); drift,
+        # recovery, births and deaths are deterministic by construction, so
+        # the 4-shard run must match the oracle exactly (up to fp tolerance)
+        return [Drift(1.2), Infection(radius=4.0, beta=1.0, recovery_time=4),
+                RecoveredFate()]
+
+
+    N = 500
+    cfg = EngineConfig(capacity=1024, domain_lo=(0, 0, 0),
+                       domain_hi=(SIDE,) * 3, interaction_radius=4.0,
+                       dt=0.5, use_forces=True, max_per_box=64,
+                       query_chunk=128, force=ForceParams(max_displacement=0.5))
+    pos = rng.uniform(1, SIDE - 1, (N, 3)).astype(np.float32)
+    dia = np.full(N, 2.0, np.float32)
+    types = np.zeros(N, np.int32)
+    types[:10] = INFECTED
+    timers = {"infect_timer": np.full(N, 4, np.int32)}
+
+    sim = Simulation(cfg, sir_behaviors())
+    st = sim.init_state(pos, diameter=dia, agent_type=types, extra_init=timers)
+    births = deaths = 0
+    for _ in range(20):
+        st = sim.step(st)
+        births += int(st.stats["births"])
+        deaths += int(st.stats["deaths"])
+    a = np.asarray(st.pool.alive)
+    ref_pos, ref_type, ref_post = live_summary(
+        np.asarray(st.pool.position)[a],
+        np.asarray(st.pool.agent_type)[a],
+        np.asarray(st.pool.extra["post"])[a])
+
+    dcfg = DistConfig(engine=cfg, n_shards=4, local_capacity=512,
+                      halo_capacity=256, migrate_capacity=128,
+                      rebalance_frequency=3)
+    dsim = DistributedSimulation(dcfg, sir_behaviors())
+    dst = dsim.init_state(pos, diameter=dia, agent_type=types,
+                          extra_init=timers)
+    bounds0 = np.asarray(dst.boundaries).copy()
+    d_births = halo_ovf = mig_ovf = in_flight = 0
+    for _ in range(20):
+        dst = dsim.step(dst)
+        d_births += int(np.asarray(dst.stats["births"]).sum())
+        # stats are per-step: accumulate so a mid-run overflow can't hide
+        halo_ovf += int(np.asarray(dst.stats["halo_overflow"]).sum())
+        mig_ovf += int(np.asarray(dst.stats["migrate_overflow"]).sum())
+        in_flight += int(np.asarray(dst.stats["in_flight"]).sum())
+    da = np.asarray(dst.channels["alive"])
+    out_pos, out_type, out_post = live_summary(
+        np.asarray(dst.channels["position"])[da],
+        np.asarray(dst.channels["agent_type"])[da],
+        np.asarray(dst.channels["extra.post"])[da])
+    same_n = int(a.sum()) == int(da.sum())
+    results["sir"] = {
+        "n_ref": int(a.sum()), "n_dist": int(da.sum()),
+        "births_ref": births, "deaths_ref": deaths, "births_dist": d_births,
+        "pos_err": float(np.abs(ref_pos - out_pos).max()) if same_n else -1.0,
+        "type_match": bool(same_n and (ref_type == out_type).all()),
+        "post_match": bool(same_n and (ref_post == out_post).all()),
+        "sir_counts": [int((out_type == k).sum()) for k in (0, 1, 2)],
+        "halo_overflow": halo_ovf,
+        "migrate_overflow": mig_ovf,
+        "in_flight": in_flight,
+        "rebalanced": bool(
+            np.any(np.asarray(dst.boundaries) != bounds0)),
+        "n_live_per_shard": np.asarray(dst.stats["n_live"]).ravel().tolist(),
     }
-    print("RESULT " + json.dumps(result))
+
+
+    # ---------------- case 3: sharded diffusion (face halos) ----------------
+    dspec = DiffusionSpec(dims=(16, 8, 8), coefficient=0.2, decay=0.01,
+                          voxel=3.0)
+    cfg = EngineConfig(capacity=256, domain_lo=(0, 0, 0),
+                       domain_hi=(SIDE, 24, 24), interaction_radius=4.0,
+                       dt=0.5, use_forces=False, max_per_box=64,
+                       query_chunk=64, diffusion=dspec, diffusion_substeps=2)
+    beh = lambda: [Secretion(rate=2.0), Chemotaxis(speed=0.8)]
+    pos = rng.uniform(1, 23, (200, 3)).astype(np.float32)
+    pos[:, 0] = rng.uniform(1, SIDE - 1, 200)
+    dia = np.full(200, 2.0, np.float32)
+    sim = Simulation(cfg, beh())
+    st = sim.init_state(pos, diameter=dia)
+    for _ in range(8):
+        st = sim.step(st)
+    dcfg = DistConfig(engine=cfg, n_shards=4, local_capacity=128,
+                      halo_capacity=64, migrate_capacity=32)
+    dsim = DistributedSimulation(dcfg, beh())
+    dst = dsim.run(dsim.init_state(pos, diameter=dia), 8,
+                   check_overflow=True)
+    ref_c = np.asarray(st.conc)
+    out_c = np.asarray(dst.conc)
+    a = np.asarray(st.pool.alive)
+    da = np.asarray(dst.channels["alive"])
+    (rp,) = live_summary(np.asarray(st.pool.position)[a])
+    (dp,) = live_summary(np.asarray(dst.channels["position"])[da])
+    results["diffusion"] = {
+        "conc_err": float(np.abs(ref_c - out_c).max()),
+        "conc_scale": float(ref_c.max()),
+        "pos_err": float(np.abs(rp - dp).max()) if len(rp) == len(dp)
+                   else -1.0,
+    }
+
+    print("RESULT " + json.dumps(results))
 """)
 
 
-def test_distributed_matches_single_device():
+def _run_subprocess():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
                           capture_output=True, text=True, timeout=900)
     assert proc.returncode == 0, proc.stderr[-3000:]
     line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
-    res = json.loads(line[len("RESULT "):])
-    assert res["halo_overflow"] == 0
-    assert res["migrate_overflow"] == 0
+    return json.loads(line[len("RESULT "):])
+
+
+_CACHE = {}
+
+
+def _results():
+    if "res" not in _CACHE:
+        _CACHE["res"] = _run_subprocess()
+    return _CACHE["res"]
+
+
+def test_distributed_forces_match_single_device():
+    res = _results()["forces"]
     assert res["n_ref"] == res["n_dist"], res
     assert 0 <= res["max_err"] < 1e-3, res
+    assert res["owned_committed"], "ghost rows leaked into the committed state"
     # population balance: quantile slabs hold comparable counts
     counts = res["n_live_per_shard"]
     assert max(counts) - min(counts) <= 0.5 * max(counts), counts
+
+
+def test_distributed_sir_parity_with_births_deaths_migration():
+    res = _results()["sir"]
+    assert res["halo_overflow"] == 0 and res["migrate_overflow"] == 0, res
+    assert res["in_flight"] == 0, res
+    assert res["n_ref"] == res["n_dist"], res
+    assert res["births_ref"] > 0 and res["deaths_ref"] > 0, \
+        f"scenario must exercise births+deaths: {res}"
+    assert res["births_dist"] == res["births_ref"], res
+    assert 0 <= res["pos_err"] < 1e-3, res
+    assert res["type_match"], "infection state diverged from the oracle"
+    assert res["post_match"], "behavior extra channel diverged (ghost/migration layout)"
+    assert res["sir_counts"][1] + res["sir_counts"][2] > 10, \
+        f"epidemic should have spread: {res}"
+    assert res["rebalanced"], "in-loop rebalance never updated boundaries"
+
+
+def test_distributed_diffusion_slab_halos():
+    res = _results()["diffusion"]
+    assert res["conc_err"] <= 1e-4 * max(1.0, res["conc_scale"]), res
+    assert 0 <= res["pos_err"] < 1e-3, res
+
+
+# ---------------- pure-host hardening (no subprocess) ----------------
+
+def test_quantile_boundaries_all_dead():
+    import jax.numpy as jnp
+    from repro.core.distributed import quantile_boundaries
+    x = jnp.linspace(0.0, 10.0, 64)
+    alive = jnp.zeros((64,), bool)
+    b = np.asarray(quantile_boundaries(x, alive, 4, 0.0, 10.0))
+    assert b[0] == 0.0 and b[-1] == 10.0
+    assert np.all(np.diff(b) >= 0), b
+    assert np.all((b >= 0.0) & (b <= 10.0)), b
+
+
+def test_quantile_boundaries_single_cluster():
+    import jax.numpy as jnp
+    from repro.core.distributed import quantile_boundaries
+    x = jnp.full((128,), 7.25)
+    alive = jnp.ones((128,), bool)
+    b = np.asarray(quantile_boundaries(x, alive, 8, 0.0, 10.0))
+    assert b[0] == 0.0 and b[-1] == 10.0
+    assert np.all(np.diff(b) >= 0), b
+    # every inner boundary collapses onto the cluster; agents land in 1 slab
+    assert np.all(b[1:-1] == np.float32(7.25)), b
+
+
+def test_quantile_boundaries_balanced_split():
+    import jax.numpy as jnp
+    from repro.core.distributed import quantile_boundaries
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.uniform(0, 10, 4096).astype(np.float32))
+    alive = jnp.asarray(rng.uniform(size=4096) < 0.7)
+    b = np.asarray(quantile_boundaries(x, alive, 4, 0.0, 10.0))
+    assert np.all(np.diff(b) > 0)
+    xs = np.asarray(x)[np.asarray(alive)]
+    counts = np.histogram(xs, bins=b)[0]
+    assert max(counts) - min(counts) <= 0.1 * max(counts), counts
