@@ -1,0 +1,118 @@
+"""Capacity ladder at paper scale — the Fig 12/13 peak-population analog.
+
+The paper's headline scale (1.72e9 agents on one server, §6/Fig 12-13) rests
+on its custom pool allocator (§4.3): populations grow for the whole run
+without per-agent allocation cost. Our port's analog is the capacity ladder
+(engine.CapacityLadder, DESIGN.md §4.3): a geometric sequence of fixed-shape
+pools crossed automatically when any overflow flag fires — *zero* manual
+capacity settings.
+
+This benchmark runs the ladder's defining scenario: an exponential-growth
+population (GrowDivide + RandomWalk spread) seeded with 1k cells and left to
+divide until it passes ``CAPACITY_TARGET`` live agents (default 2.6M — ≥10×
+BENCH_scaling's largest point). The pool starts at the seed size; every rung
+(pool capacity, max_per_run) is chosen by the ladder from the overflow
+provenance in StepStats. Records ``BENCH_capacity.json``: peak live count,
+the rung schedule, recompile count, µs/step per rung, and the bytes/agent of
+the float32 vs memory-lean DtypePolicy channel specs.
+
+Env overrides (CI smoke): ``CAPACITY_TARGET``, ``CAPACITY_SEED_AGENTS``,
+``CAPACITY_MAX_STEPS``.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import (CapacityLadder, DtypePolicy, EngineConfig, LadderConfig,
+                        make_pool)
+from repro.core.behaviors import GrowDivide, RandomWalk
+
+from .common import emit, write_bench_json
+
+SIDE = 512.0              # 128^3 boxes at r=4: ~1.3 agents/box at 2.6M
+
+
+def _bytes_per_agent(policy: DtypePolicy) -> float:
+    pool = make_pool(8, policy=policy)
+    return sum(v.nbytes for v in pool.channels().values()) / 8.0
+
+
+def run() -> None:
+    target = int(os.environ.get("CAPACITY_TARGET", 2_600_000))
+    n_seed = int(os.environ.get("CAPACITY_SEED_AGENTS", 1_000))
+    max_steps = int(os.environ.get("CAPACITY_MAX_STEPS", 80))
+
+    lean = DtypePolicy(aux_float="bfloat16", compact_ints=True)
+    cfg = EngineConfig(
+        capacity=max(1024, n_seed),          # seed-sized; the ladder does the rest
+        domain_lo=(0.0, 0.0, 0.0), domain_hi=(SIDE,) * 3,
+        interaction_radius=4.0, dt=1.0, use_forces=False,
+        max_per_box=8, query_chunk=8192, dtypes=lean)
+    behaviors = [GrowDivide(rate=0.55, threshold_diameter=6.0),
+                 RandomWalk(sigma=0.6)]
+    ladder = CapacityLadder(cfg, behaviors, LadderConfig(growth_factor=2.0))
+
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(4.0, SIDE - 4.0, (n_seed, 3)).astype(np.float32)
+    state = ladder.init_state(pos, diameter=np.full(n_seed, 5.0, np.float32))
+
+    steps = []
+    peak = n_seed
+    t_total0 = time.perf_counter()
+    for i in range(max_steps):
+        t0 = time.perf_counter()
+        state = ladder.step(state)           # includes any grow/recompile/rewind
+        n_live = int(state.stats["n_live"])  # host sync — also fences timing
+        us = (time.perf_counter() - t0) * 1e6
+        steps.append({"iteration": i, "n_live": n_live,
+                      "capacity": ladder.config.capacity, "us": us})
+        peak = max(peak, n_live)
+        if n_live >= target:
+            break
+    total_s = time.perf_counter() - t_total0
+
+    # µs/step per rung: median over the steps run at each capacity, skipping
+    # each rung's first step (it pays that rung's compile)
+    per_rung = []
+    for cap in sorted({s["capacity"] for s in steps}):
+        at = [s["us"] for s in steps if s["capacity"] == cap]
+        warm = at[1:] if len(at) > 1 else at
+        n_at = max(s["n_live"] for s in steps if s["capacity"] == cap)
+        per_rung.append({"capacity": cap, "steps": len(at),
+                         "max_n_live": n_at,
+                         "us_per_step": float(np.median(warm))})
+        emit(f"capacity_rung_c{cap}", float(np.median(warm)),
+             f"n_live<={n_at}")
+
+    reached = peak >= target
+    emit("capacity_peak", total_s * 1e6,
+         f"peak_live={peak} target={target} rungs={len(ladder.rungs)} "
+         f"recompiles={ladder.recompiles}")
+    write_bench_json("BENCH_capacity.json", {
+        "seed_agents": n_seed,
+        "target_live": target,
+        "peak_live": peak,
+        "reached_target": reached,
+        "steps_run": len(steps),
+        "total_s": total_s,
+        "final_capacity": ladder.config.capacity,
+        "final_max_per_run": ladder.config.grid_spec.run_capacity,
+        "recompiles": ladder.recompiles,
+        "rung_schedule": ladder.rungs,
+        "us_per_step_per_rung": per_rung,
+        "bytes_per_agent": {
+            "float32": _bytes_per_agent(DtypePolicy()),
+            "lean": _bytes_per_agent(lean),
+        },
+        "manual_capacity_settings": 0,       # the ladder chose every rung
+    })
+    if not reached:
+        # RuntimeError, not SystemExit: run.py aggregates per-module failures
+        # through `except Exception` and SystemExit would bypass it
+        raise RuntimeError(
+            f"capacity ladder stopped at {peak} live agents "
+            f"(< target {target}) after {len(steps)} steps")

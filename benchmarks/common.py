@@ -44,6 +44,7 @@ def write_bench_json(filename: str, payload: dict) -> str:
     The target directory is overridable with $BENCH_OUT_DIR (CI artifacts).
     """
     out_dir = os.environ.get("BENCH_OUT_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, filename)
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)

@@ -44,7 +44,7 @@ def _flags(state) -> int:
     cumulative — every step must be inspected)."""
     return sum(int(np.asarray(state.stats[f]).sum())
                for f in ("halo_overflow", "migrate_overflow", "box_overflow",
-                         "birth_overflow", "in_flight"))
+                         "birth_overflow", "in_flight", "thin_slab"))
 
 
 def _step_time(dsim, state, n_steps: int) -> tuple:

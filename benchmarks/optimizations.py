@@ -21,6 +21,8 @@ trip count vs a full force sweep. Recorded in ``BENCH_statics.json``.
 
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
 from repro.core import EngineConfig, ForceParams, Simulation
@@ -104,17 +106,12 @@ def _monolayer_bench(statics: bool) -> float:
 
 
 def run() -> None:
-    for workload in ("cluster", "front"):
-        base = _bench("scatter_grid", 0, False, workload)
-        emit(f"fig9_{workload}_baseline", base, "scatter grid, no opts")
-        t = _bench("uniform_grid", 0, False, workload)
-        emit(f"fig9_{workload}_grid", t, f"speedup={base / t:.2f}x")
-        t2 = _bench("uniform_grid", 10, False, workload)
-        emit(f"fig9_{workload}_grid_sort", t2, f"speedup={base / t2:.2f}x")
-        t3 = _bench("uniform_grid", 10, True, workload)
-        emit(f"fig9_{workload}_grid_sort_statics", t3,
-             f"speedup={base / t3:.2f}x")
-
+    # FIG9_MONOLAYER_ONLY=1 skips the 8-config Fig-9 sweep and runs just the
+    # static-monolayer micro-benchmark — the part BENCH_statics.json records —
+    # at its full 20k-agent size, so the CI regression gate (benchmarks/
+    # trend.py) compares like against like without paying for the sweep.
+    if not os.environ.get("FIG9_MONOLAYER_ONLY"):
+        _sweeps()
     off = _monolayer_bench(False)
     on = _monolayer_bench(True)
     emit("fig9_static_monolayer_off", off, "full force sweep every step")
@@ -128,3 +125,16 @@ def run() -> None:
         "detect_static_on_us_per_step": on,
         "speedup": off / on,
     })
+
+
+def _sweeps() -> None:
+    for workload in ("cluster", "front"):
+        base = _bench("scatter_grid", 0, False, workload)
+        emit(f"fig9_{workload}_baseline", base, "scatter grid, no opts")
+        t = _bench("uniform_grid", 0, False, workload)
+        emit(f"fig9_{workload}_grid", t, f"speedup={base / t:.2f}x")
+        t2 = _bench("uniform_grid", 10, False, workload)
+        emit(f"fig9_{workload}_grid_sort", t2, f"speedup={base / t2:.2f}x")
+        t3 = _bench("uniform_grid", 10, True, workload)
+        emit(f"fig9_{workload}_grid_sort_statics", t3,
+             f"speedup={base / t3:.2f}x")

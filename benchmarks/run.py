@@ -7,6 +7,7 @@
 #   Fig 11 neighbor.py       neighbor-search environment comparison
 #   Fig 12 sorting.py        sort-frequency study
 #   Fig 13 allocator.py      pool allocator vs fresh allocation
+#   §4.3   capacity.py       capacity ladder to paper-scale populations
 #
 # The roofline tables (assignment §Roofline) come from the dry-run
 # (`python -m repro.launch.dryrun --all`), not from this harness — this
@@ -18,13 +19,13 @@ import traceback
 
 
 def main() -> None:
-    from . import (allocator, breakdown, cellsort, neighbor, optimizations,
-                   scaling, sorting)
+    from . import (allocator, breakdown, capacity, cellsort, neighbor,
+                   optimizations, scaling, sorting)
 
     modules = [("fig5_breakdown", breakdown), ("fig6_scaling", scaling),
                ("fig7_cellsort", cellsort), ("fig9_optimizations", optimizations),
                ("fig11_neighbor", neighbor), ("fig12_sorting", sorting),
-               ("fig13_allocator", allocator)]
+               ("fig13_allocator", allocator), ("ladder_capacity", capacity)]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     failed = []

@@ -1,0 +1,185 @@
+"""Benchmark-regression gate: fresh BENCH_*.json vs committed baselines.
+
+CI produces fresh records (BENCH_OUT_DIR=<fresh dir>) and this module
+compares their timing leaves against the baselines committed at the repo
+root, failing the job on a >``threshold``× step-time regression. The
+comparison is deliberately *noise-tolerant* (single-sample timings on
+shared runners swing ±30-40%):
+
+  * only timing leaves are gated (key ends in ``_us``/``us_per_step``/
+    ``ms_per_step`` or sits under a ``search_us``/``build_us``/
+    ``us_per_step`` mapping) — derived quantities (slopes, speedups,
+    counts) are informational;
+  * entries faster than ``--floor-us`` in the baseline are reported but
+    never gated (short timings on shared CI runners are dominated by
+    scheduler noise);
+  * a metric ratio in (threshold, 1.5·threshold] only fails when the
+    file's *median* ratio has also drifted (>1.15) — a real regression in
+    a code path moves its related metrics together, a lone borderline
+    spike is noise; ratios beyond 1.5·threshold fail on their own;
+  * committed baselines are *envelopes* (per-key max over several clean
+    runs), so the threshold is measured from the slow edge of normal
+    variance, not from one lucky sample;
+  * missing files or keys are skipped with a note (CI smoke runs reduced
+    size lists), never failed.
+
+Baselines are tied to the hardware that measured them: a runner-class
+change (or first run on new CI hardware) can shift every ratio uniformly.
+If the gate fails across the board with a drifted file median, re-baseline
+from the job's uploaded ``bench-records`` artifact (it contains the fresh
+records) rather than chasing a phantom regression.
+
+Writes a markdown trend table to ``$GITHUB_STEP_SUMMARY`` when set (the CI
+job summary), always to stdout.
+
+Usage:
+    python -m benchmarks.trend --baseline . --fresh bench_fresh \
+        [--threshold 1.3] [--floor-us 20000]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List
+
+# Files under the gate (BENCH_capacity.json is excluded: its rung schedule —
+# and therefore which steps pay recompiles — is scenario-dependent, so
+# step-time comparisons across runs are not apples-to-apples).
+GATED_FILES = ("BENCH_neighbor.json", "BENCH_scaling.json",
+               "BENCH_statics.json", "BENCH_distributed.json")
+
+_TIMING_SUFFIXES = ("_us", "us_per_step", "ms_per_step")
+_TIMING_PARENTS = ("search_us", "build_us", "us_per_step")
+
+
+def _flatten(obj, prefix="") -> Dict[str, float]:
+    """Dotted-path → numeric leaf map (lists indexed by stable labels)."""
+    out: Dict[str, float] = {}
+    if isinstance(obj, dict):
+        for k, v in sorted(obj.items()):
+            out.update(_flatten(v, f"{prefix}{k}."))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            # label list entries by their stable identity keys (ALL present
+            # tags, so a baseline measured at one size never compares against
+            # a fresh record at another — mismatched keys are skipped), else
+            # by index
+            label = str(i)
+            if isinstance(v, dict):
+                tags = [f"{t}={v[t]}"
+                        for t in ("n_shards", "n_agents", "n", "capacity")
+                        if t in v]
+                if tags:
+                    label = ",".join(tags)
+            out.update(_flatten(v, f"{prefix}{label}."))
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        out[prefix[:-1]] = float(obj)
+    return out
+
+
+def _is_timing(path: str) -> bool:
+    if path.startswith("history."):     # archival constants, not measurements
+        return False
+    leaf = path.rsplit(".", 1)[-1]
+    if any(leaf.endswith(s) for s in _TIMING_SUFFIXES):
+        return True
+    parts = path.split(".")
+    return any(p in _TIMING_PARENTS for p in parts[:-1])
+
+
+def compare(baseline_dir: str, fresh_dir: str, threshold: float,
+            floor_us: float) -> tuple[List[dict], List[str]]:
+    rows, notes = [], []
+    for fname in GATED_FILES:
+        bpath = os.path.join(baseline_dir, fname)
+        fpath = os.path.join(fresh_dir, fname)
+        if not os.path.exists(bpath):
+            notes.append(f"no committed baseline for {fname} — skipped")
+            continue
+        if not os.path.exists(fpath):
+            notes.append(f"no fresh record for {fname} — skipped")
+            continue
+        with open(bpath) as f:
+            base = _flatten(json.load(f))
+        with open(fpath) as f:
+            fresh = _flatten(json.load(f))
+        file_rows = []
+        for path, bval in sorted(base.items()):
+            if not _is_timing(path) or path not in fresh:
+                continue
+            fval = fresh[path]
+            base_us = bval * (1000.0 if "ms_per_step" in path else 1.0)
+            ratio = fval / bval if bval > 0 else float("inf")
+            gated = base_us >= floor_us
+            file_rows.append({
+                "file": fname, "metric": path, "baseline": bval,
+                "fresh": fval, "ratio": ratio, "gated": gated,
+            })
+        gated_ratios = sorted(r["ratio"] for r in file_rows if r["gated"])
+        med = (gated_ratios[len(gated_ratios) // 2] if gated_ratios else 1.0)
+        for r in file_rows:
+            # corroboration rule: borderline spikes need the file's median
+            # to have drifted too; big spikes fail alone
+            r["regressed"] = r["gated"] and r["ratio"] > threshold and (
+                med > 1.15 or r["ratio"] > 1.5 * threshold)
+        rows.extend(file_rows)
+    return rows, notes
+
+
+def markdown(rows: List[dict], notes: List[str], threshold: float) -> str:
+    lines = ["## Benchmark trend (fresh vs committed baseline)", "",
+             f"Gate: fail on >{threshold}× step-time regression "
+             "(sub-floor entries informational).", "",
+             "| file | metric | baseline | fresh | ratio | status |",
+             "|---|---|---:|---:|---:|---|"]
+    for r in rows:
+        status = ("**REGRESSED**" if r["regressed"]
+                  else "ok" if r["gated"] else "noise-floor")
+        if r["gated"] and r["ratio"] < 1 / 1.1:
+            status = "improved"
+        lines.append(
+            f"| {r['file']} | `{r['metric']}` | {r['baseline']:.1f} | "
+            f"{r['fresh']:.1f} | {r['ratio']:.2f}× | {status} |")
+    if notes:
+        lines += [""] + [f"- {n}" for n in notes]
+    return "\n".join(lines) + "\n"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=".")
+    ap.add_argument("--fresh", default="bench_fresh")
+    ap.add_argument("--threshold", type=float, default=1.3)
+    ap.add_argument("--floor-us", type=float, default=20000.0,
+                    help="baseline timings below this many µs are reported "
+                         "but never gated (CI noise)")
+    args = ap.parse_args()
+
+    rows, notes = compare(args.baseline, args.fresh, args.threshold,
+                          args.floor_us)
+    md = markdown(rows, notes, args.threshold)
+    print(md)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(md)
+
+    regressed = [r for r in rows if r["regressed"]]
+    if regressed:
+        for r in regressed:
+            print(f"REGRESSION: {r['file']} {r['metric']} "
+                  f"{r['baseline']:.1f} -> {r['fresh']:.1f} "
+                  f"({r['ratio']:.2f}x > {args.threshold}x)", file=sys.stderr)
+        return 1
+    if not rows:
+        print("no comparable metrics found — check --baseline/--fresh dirs",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

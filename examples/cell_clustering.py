@@ -7,6 +7,8 @@ shrinks as clusters form.
     PYTHONPATH=src python examples/cell_clustering.py
 """
 
+import os
+
 import numpy as np
 
 from repro.core import EngineConfig, Simulation
@@ -23,7 +25,8 @@ def mean_pairwise(p, k=512):
 
 def main():
     rng = np.random.default_rng(4)
-    n = 4_000
+    n = int(os.environ.get("EXAMPLE_N", 4_000))        # CI smoke caps size
+    epochs = int(os.environ.get("EXAMPLE_EPOCHS", 6))
     side = 64.0
     cfg = EngineConfig(
         capacity=n, domain_lo=(0, 0, 0), domain_hi=(side,) * 3,
@@ -35,8 +38,8 @@ def main():
     state = sim.init_state(pos, diameter=np.full(n, 1.0, np.float32))
     p0 = np.asarray(state.pool.position[:n])
     print(f"initial mean pairwise distance: {mean_pairwise(p0):.2f}")
-    for epoch in range(6):
-        state = sim.run(state, 10)
+    for epoch in range(epochs):
+        state = sim.run(state, 10, check_overflow=True)
         p = np.asarray(state.pool.position[:n])
         print(f"iter {int(state.iteration):3d}: mean pairwise "
               f"{mean_pairwise(p):.2f}  substance max {float(state.conc.max()):.1f}")

@@ -16,6 +16,7 @@ On a CPU-only machine, fake 4 devices first:
         PYTHONPATH=src python examples/epidemiology.py --distributed
 """
 
+import os
 import sys
 
 import numpy as np
@@ -24,7 +25,8 @@ from repro.core import DistConfig, DistributedSimulation, EngineConfig, Simulati
 from repro.core.behaviors import (Infection, RandomWalk, INFECTED,
                                   RECOVERED, SUSCEPTIBLE)
 
-N_AGENTS = 20_000
+N_AGENTS = int(os.environ.get("EXAMPLE_N", 20_000))   # CI smoke caps size
+EPOCHS = int(os.environ.get("EXAMPLE_EPOCHS", 10))
 SIDE = 140.0
 
 
@@ -62,8 +64,8 @@ def main():
                            extra_init={"infect_timer": np.full(N_AGENTS, 40,
                                                                np.int32)})
     print(f"{'iter':>5} {'S':>7} {'I':>7} {'R':>7}")
-    for epoch in range(10):
-        state = sim.run(state, 20)
+    for epoch in range(EPOCHS):
+        state = sim.run(state, 20, check_overflow=True)
         t = report(state.iteration, state.pool.agent_type, state.pool.alive)
     assert (t != SUSCEPTIBLE).sum() > 20, "epidemic should have spread"
     print("OK: epidemic spread and recovered")
@@ -80,9 +82,11 @@ def main_distributed(n_shards: int = 4):
             f"--xla_force_host_platform_device_count={n_shards}")
     rng = np.random.default_rng(1)
     pos, types = initial_population(rng)
+    local_capacity = 2 * N_AGENTS // n_shards
     dcfg = DistConfig(engine=make_config(), n_shards=n_shards,
-                      local_capacity=2 * N_AGENTS // n_shards,
-                      halo_capacity=4096, migrate_capacity=2048,
+                      local_capacity=local_capacity,
+                      halo_capacity=min(4096, local_capacity),
+                      migrate_capacity=min(2048, local_capacity),
                       rebalance_frequency=10)
     dsim = DistributedSimulation(dcfg, behaviors())
     state = dsim.init_state(pos, diameter=np.full(N_AGENTS, 1.0, np.float32),
@@ -90,7 +94,7 @@ def main_distributed(n_shards: int = 4):
                             extra_init={"infect_timer": np.full(N_AGENTS, 40,
                                                                 np.int32)})
     print(f"{'iter':>5} {'S':>7} {'I':>7} {'R':>7}   (over {n_shards} shards)")
-    for epoch in range(10):
+    for epoch in range(EPOCHS):
         state = dsim.run(state, 20, check_overflow=True)
         t = report(state.iteration, state.channels["agent_type"],
                    state.channels["alive"])

@@ -8,6 +8,8 @@ below n_live (the paper's 9.22× speedup mechanism).
     PYTHONPATH=src python examples/neuroscience.py
 """
 
+import os
+
 import numpy as np
 
 from repro.core import EngineConfig, ForceParams, Simulation
@@ -31,9 +33,10 @@ def main():
     state = sim.init_state(pos, diameter=np.full(n_cones, 2.0, np.float32),
                            agent_type=np.full(n_cones, GROWTH_CONE, np.int32),
                            extra_init={"direction": d0})
+    epochs = int(os.environ.get("EXAMPLE_EPOCHS", 10))
     print(f"{'iter':>5} {'n_live':>7} {'n_active':>9} {'active%':>8}")
-    for epoch in range(10):
-        state = sim.run(state, 10)
+    for epoch in range(epochs):
+        state = sim.run(state, 10, check_overflow=True)
         live = int(state.stats["n_live"])
         act = int(state.stats["n_active"])
         print(f"{int(state.iteration):5d} {live:7d} {act:9d} {act / max(live,1):8.1%}")

@@ -2,37 +2,53 @@
 
 Cells divide under mechanical constraints and die stochastically; deaths
 exercise the parallel-removal path (paper §3.2; Fig 9 notes a 31.7% gain for
-this use case). Prints population dynamics.
+this use case). This example runs on the **capacity ladder** (DESIGN.md
+§4.3): the pool starts at the seed size and every capacity (pool slots, grid
+run width) grows automatically — geometrically, with a rewound re-run of the
+overflowing step — when the population outgrows it, so no capacity number in
+this file was tuned to the scenario.
 
     PYTHONPATH=src python examples/oncology.py
 """
 
+import os
+
 import numpy as np
 
-from repro.core import EngineConfig, ForceParams, Simulation
+from repro.core import CapacityLadder, EngineConfig, ForceParams
+
 from repro.core.behaviors import GrowDivide, RandomDeath, RandomWalk
 
 
 def main():
     rng = np.random.default_rng(3)
-    cfg = EngineConfig(capacity=16384, domain_lo=(0, 0, 0),
+    n_seed = 256
+    cfg = EngineConfig(capacity=n_seed,          # seed-sized: the ladder grows it
+                       domain_lo=(0, 0, 0),
                        domain_hi=(160, 160, 160), interaction_radius=14.0,
                        dt=0.2, sort_frequency=10, max_per_box=160,
                        force=ForceParams(max_displacement=1.0))
-    sim = Simulation(cfg, [GrowDivide(rate=0.7, threshold_diameter=12.0),
-                           RandomWalk(sigma=0.1),
-                           RandomDeath(rate=0.012)])
-    pos = rng.uniform(55, 105, (256, 3)).astype(np.float32)
-    state = sim.init_state(pos, diameter=np.full(256, 9.0, np.float32))
-    print(f"{'iter':>5} {'n_live':>7} {'births':>7} {'deaths':>7}")
-    for epoch in range(6):
-        state = sim.run(state, 10, check_overflow=True)
+    ladder = CapacityLadder(cfg, [GrowDivide(rate=0.7, threshold_diameter=12.0),
+                                  RandomWalk(sigma=0.1),
+                                  RandomDeath(rate=0.012)])
+    pos = rng.uniform(55, 105, (n_seed, 3)).astype(np.float32)
+    state = ladder.init_state(pos, diameter=np.full(n_seed, 9.0, np.float32))
+    print(f"{'iter':>5} {'n_live':>7} {'births':>7} {'deaths':>7} {'capacity':>9}")
+    for epoch in range(int(os.environ.get("EXAMPLE_EPOCHS", 6))):
+        state = ladder.run(state, 10)
         print(f"{int(state.iteration):5d} {int(state.stats['n_live']):7d} "
-              f"{int(state.stats['births']):7d} {int(state.stats['deaths']):7d}")
+              f"{int(state.stats['births']):7d} "
+              f"{int(state.stats['deaths']):7d} "
+              f"{ladder.config.capacity:9d}")
     alive = np.asarray(state.pool.alive)
     n = int(state.stats["n_live"])
     assert alive[:n].all() and not alive[n:].any(), "compaction invariant"
-    print("OK: tumor grew with concurrent birth/death churn")
+    if int(state.iteration) >= 30:     # first division needs ~22 steps
+        assert ladder.rungs, \
+            "seed-sized pool should have forced at least one rung"
+    print(f"rung schedule: {ladder.rungs}")
+    print("OK: tumor grew with concurrent birth/death churn "
+          f"({ladder.recompiles} automatic capacity recompiles)")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,8 @@ Runs in ~1 min on one CPU core.
     PYTHONPATH=src python examples/quickstart.py
 """
 
+import os
+
 import numpy as np
 
 from repro.core import EngineConfig, ForceParams, Simulation
@@ -27,7 +29,7 @@ def main():
     pos = rng.uniform(50, 70, (128, 3)).astype(np.float32)
     state = sim.init_state(pos, diameter=np.full(128, 8.0, np.float32))
 
-    for epoch in range(6):
+    for epoch in range(int(os.environ.get("EXAMPLE_EPOCHS", 6))):
         state = sim.run(state, 10, check_overflow=True)
         print(f"iter {int(state.iteration):3d}: n_live={int(state.stats['n_live']):5d} "
               f"births={int(state.stats['births'])}")

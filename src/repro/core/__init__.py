@@ -1,14 +1,18 @@
 """repro.core — the paper's simulation engine (BioDynaMo optimizations O1-O6)."""
 
-from .agents import AgentPool, make_pool, pool_from_channels
-from .distributed import DistConfig, DistributedSimulation, DistState
-from .engine import (EngineConfig, EngineState, Simulation, StepContext,
-                     make_iteration_core)
+from .agents import AgentPool, DtypePolicy, make_pool, pool_from_channels
+from .compaction import grow_channels, grow_pool
+from .distributed import (DistConfig, DistributedCapacityLadder,
+                          DistributedSimulation, DistState)
+from .engine import (CapacityLadder, EngineConfig, EngineState, LadderConfig,
+                     Simulation, StepContext, make_iteration_core)
 from .forces import ForceParams
 from .grid import GridSpec
 from .stats import StepStats
 
-__all__ = ["AgentPool", "make_pool", "pool_from_channels", "EngineConfig",
-           "EngineState", "Simulation", "StepContext", "make_iteration_core",
-           "ForceParams", "GridSpec", "StepStats", "DistConfig",
-           "DistributedSimulation", "DistState"]
+__all__ = ["AgentPool", "DtypePolicy", "make_pool", "pool_from_channels",
+           "grow_channels", "grow_pool", "EngineConfig", "EngineState",
+           "Simulation", "StepContext", "make_iteration_core",
+           "CapacityLadder", "LadderConfig", "ForceParams", "GridSpec",
+           "StepStats", "DistConfig", "DistributedSimulation",
+           "DistributedCapacityLadder", "DistState"]

@@ -30,6 +30,44 @@ import jax
 import jax.numpy as jnp
 
 
+@dataclasses.dataclass(frozen=True)
+class DtypePolicy:
+    """Per-channel storage dtypes — each capacity rung holds more agents/byte.
+
+    Positions stay float32 unconditionally (force accuracy and grid keys
+    depend on them); the policy only narrows *auxiliary* channels:
+
+      aux_float:    dtype name for ``diameter`` and every float32 behavior
+                    extra channel ('float32' | 'bfloat16' | 'float16').
+                    Narrowing is a tolerance trade, not bit-exact — the
+                    ladder parity contract is float32-policy only.
+      compact_ints: store ``agent_type`` and ``force_nnz`` as int16.
+                    Range-safe when type ids < 32768 and an agent's neighbor
+                    count < 32768 (both hold for every paper scenario);
+                    ``born_iter`` stays int32 (iteration counts don't fit).
+
+    Strings (not dtypes) keep the policy hashable inside the frozen
+    EngineConfig jit cache key.
+    """
+
+    aux_float: str = "float32"
+    compact_ints: bool = False
+
+    @property
+    def aux_dtype(self) -> jnp.dtype:
+        return jnp.dtype(self.aux_float)
+
+    @property
+    def int_dtype(self) -> jnp.dtype:
+        return jnp.dtype(jnp.int16 if self.compact_ints else jnp.int32)
+
+    def extra_dtype(self, declared: Any) -> jnp.dtype:
+        """Storage dtype for a behavior extra channel declared as ``declared``."""
+        if jnp.dtype(declared) == jnp.dtype(jnp.float32):
+            return self.aux_dtype
+        return jnp.dtype(declared)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class AgentPool:
@@ -102,12 +140,15 @@ def make_pool(capacity: int,
               diameter: jnp.ndarray | None = None,
               agent_type: jnp.ndarray | None = None,
               extra_specs: Dict[str, Any] | None = None,
-              dtype: jnp.dtype = jnp.float32) -> AgentPool:
+              dtype: jnp.dtype = jnp.float32,
+              policy: DtypePolicy | None = None) -> AgentPool:
     """Allocate a pool of ``capacity`` slots; fill the first ``n_live`` from args.
 
     ``extra_specs`` maps channel name → (shape_suffix, dtype, fill_value) or an
-    (n_live, ...) array of initial values.
+    (n_live, ...) array of initial values. ``policy`` narrows auxiliary channel
+    dtypes (DtypePolicy); positions keep ``dtype`` (float32) regardless.
     """
+    policy = policy or DtypePolicy()
     if position is not None:
         n_live = position.shape[0]
 
@@ -119,22 +160,25 @@ def make_pool(capacity: int,
         return full
 
     pos = pad(position, 0.0, (3,), dtype)
-    dia = pad(diameter, 0.0, (), dtype) if diameter is not None else pad(None, 10.0, (), dtype)
+    dia = pad(diameter, 0.0, (), policy.aux_dtype) if diameter is not None \
+        else pad(None, 10.0, (), policy.aux_dtype)
     if diameter is None and n_live > 0:
         dia = dia.at[:n_live].set(10.0)
-    typ = pad(agent_type, 0, (), jnp.int32) if agent_type is not None else jnp.zeros(
-        (capacity,), jnp.int32)
+    typ = pad(agent_type, 0, (), policy.int_dtype) if agent_type is not None \
+        else jnp.zeros((capacity,), policy.int_dtype)
     alive = jnp.arange(capacity) < n_live
 
     extra = {}
     for name, spec in (extra_specs or {}).items():
         if isinstance(spec, tuple):
             shape_suffix, dt, fill = spec
-            extra[name] = jnp.full((capacity, *shape_suffix), fill, dtype=dt)
+            extra[name] = jnp.full((capacity, *shape_suffix), fill,
+                                   dtype=policy.extra_dtype(dt))
         else:  # array of initial live values
             arr = jnp.asarray(spec)
-            full = jnp.zeros((capacity, *arr.shape[1:]), dtype=arr.dtype)
-            extra[name] = full.at[:n_live].set(arr)
+            dt = policy.extra_dtype(arr.dtype)
+            full = jnp.zeros((capacity, *arr.shape[1:]), dtype=dt)
+            extra[name] = full.at[:n_live].set(arr.astype(dt))
 
     return AgentPool(
         position=pos,
@@ -145,6 +189,6 @@ def make_pool(capacity: int,
         moved=jnp.ones((capacity,), bool),   # everything "moved" at t=0: no static skips
         grew=jnp.zeros((capacity,), bool),
         born_iter=jnp.zeros((capacity,), jnp.int32),
-        force_nnz=jnp.zeros((capacity,), jnp.int32),
+        force_nnz=jnp.zeros((capacity,), policy.int_dtype),
         extra=extra,
     )

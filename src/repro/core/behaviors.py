@@ -14,6 +14,12 @@ death) would duplicate the effect its owning shard commits authoritatively.
 Ghosts still appear as *neighbors* in ``ctx.neighbor_apply`` reductions,
 which is exactly what makes cross-slab interactions exact.
 
+All per-agent randomness is drawn through :mod:`rand` (capacity-stable
+threefry streams): the value an agent sees depends on (key, slot, lane) but
+never on the pool's capacity, so the capacity ladder (DESIGN.md §4.3) can
+grow the pool mid-run without perturbing the trajectory — ``jax.random``'s
+array draws do not have this property.
+
 The catalogue below covers the paper's five benchmark simulations (Table 1):
   GrowDivide          cell proliferation / oncology (create agents)
   RandomWalk          epidemiology / oncology (agents move randomly)
@@ -32,6 +38,7 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import rand
 from .agents import AgentPool
 
 
@@ -86,9 +93,8 @@ class GrowDivide(Behavior):
         # halve the volume: d' = d / 2^(1/3)
         halved = new_dia * (0.5 ** (1.0 / 3.0))
         mother_dia = jnp.where(divide, halved, new_dia)
-        # daughter placement
-        k1, _ = jax.random.split(rng)
-        direction = jax.random.normal(k1, pool.position.shape, pool.position.dtype)
+        # daughter placement (capacity-stable draw: ladder parity)
+        direction = rand.normal_rows(rng, pool.capacity, 3)
         direction /= jnp.sqrt(
             jnp.sum(direction * direction, -1, keepdims=True) + 1e-12)
         d_pos = pool.position + direction * (mother_dia * 0.5)[:, None]
@@ -113,8 +119,7 @@ class RandomWalk(Behavior):
         mask = ctx.owned
         if self.applies_to is not None:
             mask &= pool.agent_type == self.applies_to
-        step = self.sigma * jax.random.normal(rng, pool.position.shape,
-                                              pool.position.dtype)
+        step = self.sigma * rand.normal_rows(rng, pool.capacity, 3)
         new_pos = jnp.where(mask[:, None], pool.position + step * ctx.dt,
                             pool.position)
         new_pos = jnp.clip(new_pos, ctx.domain_lo, ctx.domain_hi)
@@ -156,7 +161,7 @@ class Infection(Behavior):
 
         res = ctx.neighbor_apply(pair_fn, {"exposed": ((), jnp.int32)})
         exposed = res["exposed"] > 0
-        u = jax.random.uniform(rng, (pool.capacity,))
+        u = rand.uniform_rows(rng, pool.capacity)
         newly = ctx.owned & (pool.agent_type == SUSCEPTIBLE) & exposed \
             & (u < self.beta)
         timer = pool.extra["infect_timer"]
@@ -218,7 +223,7 @@ class RandomDeath(Behavior):
         mask = ctx.owned
         if self.applies_to is not None:
             mask &= pool.agent_type == self.applies_to
-        u = jax.random.uniform(rng, (pool.capacity,))
+        u = rand.uniform_rows(rng, pool.capacity)
         return BehaviorEffects(death_mask=mask & (u < self.rate))
 
 
@@ -249,7 +254,7 @@ class NeuriteGrowth(Behavior):
         k1, k2, k3 = jax.random.split(rng, 3)
         cones = ctx.owned & (pool.agent_type == GROWTH_CONE)
         d = pool.extra["direction"]
-        d = d + self.noise * jax.random.normal(k1, d.shape, d.dtype)
+        d = d + self.noise * rand.normal_rows(k1, pool.capacity, 3)
         d /= jnp.sqrt(jnp.sum(d * d, -1, keepdims=True) + 1e-12)
         step = self.speed * ctx.dt
         new_pos = jnp.where(cones[:, None], pool.position + d * step, pool.position)
@@ -262,9 +267,9 @@ class NeuriteGrowth(Behavior):
         seg_type = jnp.full_like(pool.agent_type, NEURITE_SEGMENT)
 
         # bifurcation: stage a second cone with a rotated direction
-        u = jax.random.uniform(k2, (pool.capacity,))
+        u = rand.uniform_rows(k2, pool.capacity)
         bif = cones & (u < self.bif_prob)
-        rot = d + 0.8 * jax.random.normal(k3, d.shape, d.dtype)
+        rot = d + 0.8 * rand.normal_rows(k3, pool.capacity, 3)
         rot /= jnp.sqrt(jnp.sum(rot * rot, -1, keepdims=True) + 1e-12)
         cone_type = jnp.full_like(pool.agent_type, GROWTH_CONE)
 

@@ -114,6 +114,61 @@ def birth_overflow(pool: AgentPool, queue_valid: jnp.ndarray) -> jnp.ndarray:
     return jnp.maximum(n_new - free, 0)
 
 
+# ---------------------------------------------------------------------------
+# Capacity-ladder restage (DESIGN.md §4.3)
+# ---------------------------------------------------------------------------
+#
+# Growing a rung cannot resize arrays in place (XLA shapes are static): the
+# restage allocates the larger fixed-shape channels and copies the old pool
+# into the prefix. The old buffers are *donated* — XLA may reuse their memory
+# for the output, so peak footprint during a grow is new + O(1) channels, not
+# old + new. (Donation is a no-op on backends that don't implement it, e.g.
+# CPU; correctness never depends on it.)
+
+_GROW_CACHE: dict = {}
+
+
+def _grow_fn(new_capacity: int, donate: bool):
+    key = (new_capacity, donate)
+    if key not in _GROW_CACHE:
+        def grow(ch: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+            out = {}
+            for k, v in ch.items():
+                pad = jnp.zeros((new_capacity - v.shape[0], *v.shape[1:]),
+                                v.dtype)
+                out[k] = jnp.concatenate([v, pad], axis=0)
+            return out
+        _GROW_CACHE[key] = jax.jit(grow, donate_argnums=(0,) if donate else ())
+    return _GROW_CACHE[key]
+
+
+def grow_channels(ch: Dict[str, jnp.ndarray], new_capacity: int,
+                  donate: bool | None = None) -> Dict[str, jnp.ndarray]:
+    """Re-stage a channel dict into ``new_capacity`` slots (dtype-preserving).
+
+    Slots ``[old_capacity, new_capacity)`` are zero-filled — dead (``alive``
+    False), exactly like the tail of a freshly made pool — so live-trajectory
+    parity vs a pre-sized pool holds (dead-slot content never reaches a live
+    agent; DESIGN.md §4.3). ``donate`` defaults to on wherever the backend
+    implements buffer donation.
+    """
+    cap = next(iter(ch.values())).shape[0]
+    if new_capacity < cap:
+        raise ValueError(f"cannot shrink pool {cap} -> {new_capacity}")
+    if new_capacity == cap:
+        return ch
+    if donate is None:
+        donate = jax.default_backend() not in ("cpu",)
+    return _grow_fn(new_capacity, donate)(ch)
+
+
+def grow_pool(pool: AgentPool, new_capacity: int,
+              donate: bool | None = None) -> AgentPool:
+    """Re-stage a pool into a larger fixed-shape pool (capacity-ladder rung)."""
+    return pool.with_channels(grow_channels(pool.channels(), new_capacity,
+                                            donate))
+
+
 def active_index_list(active: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Compact the indices of active agents to the front (static-region support).
 

@@ -47,13 +47,20 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from . import compaction, diffusion as diff_mod
+from . import compaction, diffusion as diff_mod, grid as grid_mod
 from .agents import AgentPool, make_pool, pool_from_channels
 from .behaviors import Behavior
-from .engine import EngineConfig, make_iteration_core, stage_pool
+from .engine import (EngineConfig, LadderConfig, LadderDriverBase, next_rung,
+                     make_iteration_core, stage_pool)
 from .stats import StepStats
 
 OWNED = "owned"          # bool extra channel: local agent (True) vs ghost
+
+
+class SlabCapacityError(ValueError):
+    """An initial slab population exceeds local_capacity (init-time §4.2
+    never-silent check). Typed so the distributed capacity ladder can catch
+    exactly this condition and grow, rather than matching error prose."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -248,7 +255,8 @@ def _channel_template(dcfg: DistConfig, behaviors: Sequence[Behavior]
     for b in behaviors:
         specs.update(b.extra_specs())
     specs[OWNED] = ((), jnp.bool_, False)
-    return make_pool(dcfg.total_capacity, extra_specs=specs)
+    return make_pool(dcfg.total_capacity, extra_specs=specs,
+                     policy=dcfg.engine.dtypes)
 
 
 def make_distributed_step(dcfg: DistConfig, mesh, behaviors: Sequence[Behavior]
@@ -369,12 +377,21 @@ def make_distributed_step(dcfg: DistConfig, mesh, behaviors: Sequence[Behavior]
                              & (((xf < my_lo) & (i > 0))
                                 | ((xf >= my_hi) & (i < n_shards - 1)))
                              ).astype(jnp.int32))
+        # which-capacity provenance (§4.3): each flag names exactly one
+        # growable knob — halo_overflow → halo_capacity, migrate_overflow →
+        # migrate_capacity, birth_overflow (staged newborns + arrivals +
+        # repack clipping) → local_capacity with capacity_demand its rung
+        # target; thin_slab is NOT growable (quantile geometry, not a buffer)
         stats = dataclasses.replace(
             stats,
             n_live=jnp.sum(out_ch["alive"].astype(jnp.int32)),
-            halo_overflow=(ovf_hl + ovf_hr + thin).astype(jnp.int32),
-            migrate_overflow=(ovf_ml + ovf_mr + ovf_in
-                              + ovf_cap).astype(jnp.int32),
+            halo_overflow=(ovf_hl + ovf_hr).astype(jnp.int32),
+            migrate_overflow=(ovf_ml + ovf_mr).astype(jnp.int32),
+            birth_overflow=(stats.birth_overflow + ovf_in
+                            + ovf_cap).astype(jnp.int32),
+            capacity_demand=(n_final + ovf_in
+                             + stats.birth_overflow).astype(jnp.int32),
+            thin_slab=thin.astype(jnp.int32),
             in_flight=in_flight.astype(jnp.int32))
         stats = jax.tree_util.tree_map(lambda v: v.reshape(1), stats)
         return out_ch, conc, rng.reshape(1, -1), boundaries, stats
@@ -436,7 +453,8 @@ class DistributedSimulation:
         position = jnp.asarray(position)
         staging = stage_pool(position.shape[0], self.behaviors, position,
                              diameter, agent_type, extra_init,
-                             extra_specs={OWNED: ((), jnp.bool_, True)})
+                             extra_specs={OWNED: ((), jnp.bool_, True)},
+                             policy=cfg.dtypes)
         ch = staging.channels()
         boundaries = quantile_boundaries(ch["position"][:, 0], ch["alive"],
                                          dcfg.n_shards,
@@ -451,7 +469,7 @@ class DistributedSimulation:
         per_shard = np.bincount(shard[np.asarray(ch["alive"])],
                                 minlength=dcfg.n_shards)
         if per_shard.max(initial=0) > dcfg.local_capacity:
-            raise ValueError(
+            raise SlabCapacityError(
                 f"slab populations {per_shard.tolist()} exceed "
                 f"local_capacity={dcfg.local_capacity}; raise it (heavy ties "
                 f"in x can defeat quantile balancing)")
@@ -482,14 +500,19 @@ class DistributedSimulation:
                 if int(jnp.sum(s.halo_overflow)):
                     raise RuntimeError(
                         f"iteration {i}: halo overflow (ghost band exceeded "
-                        f"halo_capacity={self.dcfg.halo_capacity}, or a slab "
-                        f"thinner than the {self.dcfg.halo_width:.3g} ghost "
-                        f"band); raise halo_capacity / revisit boundaries")
+                        f"halo_capacity={self.dcfg.halo_capacity}); raise "
+                        f"halo_capacity")
+                if int(jnp.sum(s.thin_slab)):
+                    raise RuntimeError(
+                        f"iteration {i}: an interior slab is thinner than "
+                        f"the {self.dcfg.halo_width:.3g} ghost band (one-hop "
+                        f"ring cannot ship every cross-shard pair); revisit "
+                        f"boundaries / fewer shards")
                 if int(jnp.sum(s.migrate_overflow)):
                     raise RuntimeError(
-                        f"iteration {i}: migration overflow (buffer "
-                        f"{self.dcfg.migrate_capacity} or local_capacity "
-                        f"{self.dcfg.local_capacity} exceeded)")
+                        f"iteration {i}: migration overflow (ring buffer "
+                        f"migrate_capacity={self.dcfg.migrate_capacity} "
+                        f"exceeded)")
                 if int(jnp.sum(s.in_flight)):
                     raise RuntimeError(
                         f"iteration {i}: {int(jnp.sum(s.in_flight))} agents "
@@ -504,7 +527,11 @@ class DistributedSimulation:
                         f"EngineConfig.max_per_run / max_per_box")
                 if int(jnp.sum(s.birth_overflow)):
                     raise RuntimeError(
-                        f"iteration {i}: birth overflow on a shard; raise "
+                        f"iteration {i}: local pool overflow on a shard "
+                        f"(staged newborns / migration arrivals / repack "
+                        f"exceeded local_capacity="
+                        f"{self.dcfg.local_capacity}; per-shard demand "
+                        f"{np.asarray(s.capacity_demand).tolist()}); raise "
                         f"DistConfig.local_capacity")
         return state
 
@@ -512,3 +539,149 @@ class DistributedSimulation:
         """Host-side: fetch the global channel arrays (live agents only are
         meaningful; order is arbitrary across shards)."""
         return {k: np.asarray(v) for k, v in state.channels.items()}
+
+
+# ---------------------------------------------------------------------------
+# Distributed capacity ladder (DESIGN.md §4.3) — agreed global rungs
+# ---------------------------------------------------------------------------
+
+class DistributedCapacityLadder(LadderDriverBase):
+    """`DistributedSimulation.run` with automatic growth, one global rung.
+
+    Every capacity knob (local pool slots, halo band, migration ring,
+    max_per_run) is *static and shared* across shards — a single shard's
+    overflow therefore grows the knob for the whole mesh ("agreed global
+    rung"): rung targets are the max of the per-shard demand provenance in
+    StepStats, so one recompile serves every slab and the shard_map program
+    stays homogeneous. Like the single-device CapacityLadder, the
+    overflowing iteration is re-run from its pre-step state, which keeps
+    trajectories bit-identical to a pre-sized run.
+
+    Non-buffer exactness flags (thin_slab, in_flight) are not growable —
+    they raise with remediation guidance instead of looping forever.
+    """
+
+    def __init__(self, dcfg: DistConfig, behaviors: Sequence[Behavior] = (),
+                 ladder=None, mesh=None, axis: str = "data"):
+        self.ladder = ladder or LadderConfig()
+        self.dcfg = dcfg
+        self.behaviors = list(behaviors)
+        self.axis = axis
+        self._mesh = mesh
+        self.rungs: list = []
+        self.recompiles = 0
+        self._sim = DistributedSimulation(dcfg, self.behaviors, mesh, axis)
+
+    @property
+    def sim(self) -> DistributedSimulation:
+        return self._sim
+
+    def init_state(self, *args, **kwargs) -> DistState:
+        """init with ladder semantics: an initial population too big for a
+        slab grows local_capacity instead of raising (bounded retries)."""
+        for _ in range(self.ladder.max_grows_per_step):
+            try:
+                return self._sim.init_state(*args, **kwargs)
+            except SlabCapacityError:
+                d = self.dcfg
+                new_local = next_rung(d.local_capacity, d.local_capacity + 1,
+                                      self.ladder.growth_factor,
+                                      self.ladder.round_to)
+                self._rebuild(dataclasses.replace(d, local_capacity=new_local),
+                              iteration=-1)
+        raise RuntimeError("init_state: local_capacity growth did not "
+                           "converge (pathological initial distribution)")
+
+    # -- growth policy -------------------------------------------------------
+    def _diagnose(self, stats: StepStats) -> Optional[DistConfig]:
+        d, lad = self.dcfg, self.ladder
+        tot = lambda f: int(np.asarray(jnp.sum(stats[f])))
+        if tot("thin_slab"):
+            raise RuntimeError(
+                "thin interior slab (quantile geometry, not a buffer size) — "
+                "the ladder cannot grow past it; use fewer shards or a wider "
+                "domain")
+        if tot("in_flight"):
+            raise RuntimeError(
+                "agents in flight across >1 slab after a rebalance — lower "
+                "rebalance_frequency (not a capacity problem)")
+        changes = {}
+        if tot("box_overflow"):
+            demand = int(np.asarray(jnp.max(stats["box_demand"])))
+            eng = d.engine
+            if eng.environment == "hash_grid":
+                need = -(-demand // grid_mod.HASH_K_MULT)
+                eng = dataclasses.replace(eng, max_per_box=next_rung(
+                    eng.max_per_box, need, lad.growth_factor))
+            else:
+                cur = eng.grid_spec.run_capacity
+                eng = dataclasses.replace(eng, max_per_run=next_rung(
+                    cur, demand, lad.growth_factor))
+            changes["engine"] = eng
+        if tot("halo_overflow"):
+            demand = d.halo_capacity + int(np.asarray(
+                jnp.max(stats["halo_overflow"])))
+            changes["halo_capacity"] = next_rung(
+                d.halo_capacity, demand, lad.growth_factor, lad.round_to)
+        if tot("migrate_overflow"):
+            demand = d.migrate_capacity + int(np.asarray(
+                jnp.max(stats["migrate_overflow"])))
+            changes["migrate_capacity"] = next_rung(
+                d.migrate_capacity, demand, lad.growth_factor, lad.round_to)
+        if tot("birth_overflow"):
+            demand = int(np.asarray(jnp.max(stats["capacity_demand"])))
+            new_local = next_rung(d.local_capacity, demand,
+                                  lad.growth_factor, lad.round_to)
+            if (lad.max_capacity is not None
+                    and new_local * d.n_shards > lad.max_capacity):
+                raise RuntimeError(
+                    f"capacity ladder exhausted: per-shard demand {demand} "
+                    f"needs {new_local}×{d.n_shards} slots > "
+                    f"max_capacity={lad.max_capacity}")
+            changes["local_capacity"] = new_local
+        if not changes:
+            return None
+        new_d = dataclasses.replace(d, **changes)
+        # static contract: halo/migrate buffers never exceed local_capacity
+        if new_d.local_capacity < max(new_d.halo_capacity,
+                                      new_d.migrate_capacity):
+            new_d = dataclasses.replace(
+                new_d, local_capacity=max(new_d.halo_capacity,
+                                          new_d.migrate_capacity))
+        return new_d
+
+    def _rebuild(self, new_d: DistConfig, iteration: int) -> None:
+        self._log_rungs(
+            iteration,
+            [(f, getattr(self.dcfg, f), getattr(new_d, f))
+             for f in ("local_capacity", "halo_capacity", "migrate_capacity")]
+            + [(f, getattr(self.dcfg.engine, f), getattr(new_d.engine, f))
+               for f in ("max_per_box", "max_per_run")])
+        self.dcfg = new_d
+        self._sim = DistributedSimulation(new_d, self.behaviors, self._mesh,
+                                          self.axis)
+
+    def _restage(self, state: DistState, old_local: int, new_local: int
+                 ) -> DistState:
+        """Host-side re-pack of every shard's slab into the new local width.
+
+        Each shard's live prefix is preserved verbatim; new tail slots are
+        zero (dead) — the distributed analog of compaction.grow_channels.
+        """
+        n = self.dcfg.n_shards
+        ch = {}
+        for k, v in state.channels.items():
+            a = np.asarray(v).reshape((n, old_local) + v.shape[1:])
+            pad = np.zeros((n, new_local - old_local) + v.shape[1:], a.dtype)
+            ch[k] = jnp.asarray(
+                np.concatenate([a, pad], axis=1).reshape(
+                    (n * new_local,) + v.shape[1:]))
+        return dataclasses.replace(state, channels=ch)
+
+    def _grow(self, new_d: DistConfig, prev: DistState,
+              iteration: int) -> DistState:
+        old_local = self.dcfg.local_capacity
+        self._rebuild(new_d, iteration)
+        if new_d.local_capacity != old_local:
+            prev = self._restage(prev, old_local, new_d.local_capacity)
+        return prev

@@ -41,7 +41,7 @@ import jax.numpy as jnp
 
 from . import compaction, diffusion as diff_mod, forces as force_mod, grid as grid_mod
 from . import morton, statics as statics_mod
-from .agents import AgentPool, make_pool
+from .agents import AgentPool, DtypePolicy, make_pool
 from .behaviors import Behavior, BehaviorEffects
 from .stats import StepStats
 
@@ -72,6 +72,10 @@ class EngineConfig:
     force: force_mod.ForceParams = dataclasses.field(default_factory=force_mod.ForceParams)
     diffusion: Optional[diff_mod.DiffusionSpec] = None
     diffusion_substeps: int = 1
+    dtypes: DtypePolicy = dataclasses.field(default_factory=DtypePolicy)
+                                           # channel storage dtypes (§4.3:
+                                           # narrower aux channels → more
+                                           # agents per byte per rung)
 
     @property
     def grid_spec(self) -> grid_mod.GridSpec:
@@ -274,14 +278,18 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
                                 sort_pool, lambda p: p, pool)
         pool, grid_env = build_env(cfg, spec, pool, origin, box_size)
         box_overflow = stats.box_overflow
+        box_demand = stats.box_demand
         if cfg.environment == "uniform_grid":
             # query exactness bound: every 3-box z-run must fit the run
-            # gather capacity (DESIGN.md §4.2 overflow contract)
+            # gather capacity (DESIGN.md §4.2 overflow contract); the demand
+            # is the which-capacity provenance the ladder sizes rungs from
+            box_demand = grid_env.max_run_count.astype(jnp.int32)
             box_overflow = (grid_env.max_run_count
                             > spec.run_capacity).astype(jnp.int32)
         elif cfg.environment == "hash_grid":
             # same contract: a bucket fuller than the probe gather width
             # would silently truncate candidates (grid.hash_grid_probe)
+            box_demand = grid_env.max_bucket_count.astype(jnp.int32)
             box_overflow = (
                 grid_env.max_bucket_count
                 > grid_mod.HASH_K_MULT * spec.max_per_box).astype(jnp.int32)
@@ -342,7 +350,8 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
             dx = force_mod.displacement(res["force"], cfg.force, cfg.dt)
             new_pos = jnp.clip(pool.position + dx, dlo, dhi)
             new_pos = jnp.where(active[:, None], new_pos, pool.position)
-            force_nnz = jnp.where(active, res["force_nnz"], pool.force_nnz)
+            force_nnz = jnp.where(active, res["force_nnz"],
+                                  pool.force_nnz).astype(pool.force_nnz.dtype)
             pool = dataclasses.replace(pool, position=new_pos,
                                        force_nnz=force_nnz)
 
@@ -364,7 +373,9 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
             if eff.set_channels:
                 ch = pool.channels()
                 for name, val in eff.set_channels.items():
-                    ch[name] = val
+                    # behaviors compute in f32/int32; storage keeps the
+                    # pool's policy dtype (DtypePolicy, §4.3)
+                    ch[name] = val.astype(ch[name].dtype)
                 pool = pool.with_channels(ch)
             if eff.birth_channels is not None:
                 birth_queues.append((eff.birth_channels, eff.birth_valid))
@@ -406,10 +417,15 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
             births += jnp.sum(valid.astype(jnp.int32))
             pool = compaction.commit_births(pool, q, valid, it)
 
+        n_live_end = jnp.sum(owned_of(pool).astype(jnp.int32))
         stats = dataclasses.replace(
-            stats, n_live=jnp.sum(owned_of(pool).astype(jnp.int32)),
+            stats, n_live=n_live_end,
             n_active=n_active, births=births, deaths=deaths,
-            box_overflow=box_overflow, birth_overflow=birth_overflow)
+            box_overflow=box_overflow, birth_overflow=birth_overflow,
+            box_demand=box_demand,
+            # slots needed to have committed every staged agent (§4.3
+            # provenance: the capacity rung target)
+            capacity_demand=n_live_end + birth_overflow)
         return pool, conc, rng, stats
 
     return core
@@ -418,11 +434,13 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
 def stage_pool(capacity: int, behaviors: Sequence[Behavior], position,
                diameter=None, agent_type=None,
                extra_init: Dict[str, jnp.ndarray] | None = None,
-               extra_specs: Dict[str, tuple] | None = None) -> AgentPool:
+               extra_specs: Dict[str, tuple] | None = None,
+               policy: DtypePolicy | None = None) -> AgentPool:
     """Initial pool with every behavior's extra channels (both engines).
 
     ``extra_specs`` lets a caller add engine-owned channels on top (the
-    distributed engine's ``owned`` flag)."""
+    distributed engine's ``owned`` flag); ``policy`` narrows auxiliary
+    channel storage dtypes (DtypePolicy, §4.3)."""
     specs: Dict[str, tuple] = {}
     for b in behaviors:
         specs.update(b.extra_specs())
@@ -432,11 +450,12 @@ def stage_pool(capacity: int, behaviors: Sequence[Behavior], position,
     pool = make_pool(capacity, position=position,
                      diameter=None if diameter is None else jnp.asarray(diameter),
                      agent_type=None if agent_type is None else jnp.asarray(agent_type),
-                     extra_specs=specs)
+                     extra_specs=specs, policy=policy)
     if extra_init:
         n = position.shape[0]
         for k, v in extra_init.items():
-            pool.extra[k] = pool.extra[k].at[:n].set(jnp.asarray(v))
+            arr = jnp.asarray(v).astype(pool.extra[k].dtype)
+            pool.extra[k] = pool.extra[k].at[:n].set(arr)
     return pool
 
 
@@ -454,7 +473,8 @@ class Simulation:
                    extra_init: Dict[str, jnp.ndarray] | None = None,
                    seed: int = 0) -> EngineState:
         pool = stage_pool(self.config.capacity, self.behaviors, position,
-                          diameter, agent_type, extra_init)
+                          diameter, agent_type, extra_init,
+                          policy=self.config.dtypes)
         dspec = self.config.diffusion
         conc = jnp.zeros(dspec.dims, jnp.float32) if dspec else jnp.zeros((1, 1, 1))
         return EngineState(pool=pool, conc=conc, rng=jax.random.PRNGKey(seed),
@@ -505,3 +525,177 @@ class Simulation:
             if callback is not None:
                 callback(i, state)
         return state
+
+
+# ---------------------------------------------------------------------------
+# Capacity ladder (DESIGN.md §4.3) — automatic pool growth across rungs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LadderConfig:
+    """How the capacity ladder grows on overflow.
+
+    growth_factor:      geometric rung ratio (BioDynaMo's pool allocator
+                        grows block counts geometrically for the same
+                        amortization argument, paper §4.3).
+    max_capacity:       hard ceiling on pool capacity; exceeding it raises
+                        instead of growing (never silent).
+    max_grows_per_step: safety bound on grow→re-run cycles for ONE iteration
+                        (a scenario whose demand outruns geometric growth
+                        this badly is a config bug, not a ladder job).
+    round_to:           capacities round up to a multiple of this (keeps
+                        rung shapes block-aligned for the query loops).
+    """
+
+    growth_factor: float = 2.0
+    max_capacity: Optional[int] = None
+    max_grows_per_step: int = 16
+    round_to: int = 64
+
+
+def next_rung(old: int, demand: int, factor: float, round_to: int = 1) -> int:
+    """Smallest geometric rung ≥ demand (always at least one rung up)."""
+    new = max(int(math.ceil(old * factor)), old + 1)
+    while new < demand:
+        new = int(math.ceil(new * factor))
+    return -(-new // round_to) * round_to
+
+
+class LadderDriverBase:
+    """The overflow→grow→re-run loop shared by both ladder drivers.
+
+    Subclass contract: ``self._sim`` is the current-rung engine (anything
+    with a jitted ``step``), ``_diagnose(stats)`` returns the next-rung
+    config or None (raising on non-growable flags), and
+    ``_grow(new_cfg, prev_state, iteration)`` rebuilds the engine at the new
+    rung and returns the (possibly restaged) pre-step state to re-run.
+    """
+
+    ladder: "LadderConfig"
+
+    def step(self, state):
+        """One iteration with automatic growth (rewinds the step on overflow).
+
+        The overflowing execution dropped work (newborns, candidate pairs),
+        so its output is discarded and the iteration re-runs from its
+        pre-step state at the new rung — never resumed from.
+
+        The input ``state`` is CONSUMED: on a growing step its pool buffers
+        are donated to the restage (compaction.grow_channels), so on
+        backends with donation support (not CPU) a caller-held reference to
+        ``state`` may point at deleted arrays afterwards. Treat ``step`` as
+        taking ownership, exactly like stepping a jitted function with
+        donated arguments."""
+        prev = state
+        state = self._sim.step(prev)
+        grows = 0
+        while True:
+            new_cfg = self._diagnose(state.stats)   # host sync on the flags
+            if new_cfg is None:
+                return state
+            grows += 1
+            if grows > self.ladder.max_grows_per_step:
+                raise RuntimeError(
+                    f"iteration {int(prev.iteration)}: still overflowing "
+                    f"after {grows - 1} grows — demand outruns "
+                    f"growth_factor={self.ladder.growth_factor}")
+            prev = self._grow(new_cfg, prev, int(prev.iteration))
+            state = self._sim.step(prev)
+
+    def run(self, state, n_iterations: int,
+            callback: Callable | None = None):
+        for i in range(n_iterations):
+            state = self.step(state)
+            if callback is not None:
+                callback(i, state)
+        return state
+
+    def _log_rungs(self, iteration: int, triples) -> None:
+        """Record (field, old, new) growth events + count the recompile."""
+        for field, old, new in triples:
+            if old != new:
+                self.rungs.append({"iteration": iteration, "field": field,
+                                   "old": old, "new": new})
+        self.recompiles += 1
+
+
+class CapacityLadder(LadderDriverBase):
+    """Host-side driver: `Simulation.run` with automatic capacity growth.
+
+    The paper's custom heap (§4.3) lets populations grow without per-agent
+    allocation cost; under jit every shape is static, so the JAX-idiom
+    analog is a *ladder of fixed-shape pools*: run the jitted iteration
+    core, watch the never-silent overflow flags (StepStats), and when one
+    fires, grow the affected capacity geometrically, re-stage the pool into
+    the larger shape (buffer donation bounds peak memory), recompile, and
+    **re-run the very iteration that overflowed** from its pre-step state.
+    The rewind is what makes trajectories bit-identical to a pre-sized
+    pool: the overflowing step dropped work (newborns, candidate pairs),
+    so its output is discarded, never resumed from.
+
+    Which knob grows is read off the stats provenance:
+
+      birth_overflow  → ``capacity``       (rung target: capacity_demand)
+      box_overflow    → ``max_per_run``    (uniform grid; target box_demand)
+                        ``max_per_box``    (hash grid bucket width)
+
+    Growth events are recorded in ``self.rungs`` and recompiles counted in
+    ``self.recompiles`` (benchmarks/capacity.py reports both).
+    """
+
+    def __init__(self, config: EngineConfig, behaviors: Sequence[Behavior] = (),
+                 ladder: LadderConfig | None = None):
+        self.ladder = ladder or LadderConfig()
+        self.behaviors = list(behaviors)
+        self.config = config
+        self.rungs: List[Dict] = []
+        self.recompiles = 0
+        self._sim = Simulation(config, self.behaviors)
+
+    @property
+    def sim(self) -> Simulation:
+        """The current-rung Simulation (rebuilt at every grow)."""
+        return self._sim
+
+    def init_state(self, *args, **kwargs) -> EngineState:
+        return self._sim.init_state(*args, **kwargs)
+
+    # -- growth policy -------------------------------------------------------
+    def _diagnose(self, stats: StepStats) -> Optional[EngineConfig]:
+        """New config for the overflow recorded in ``stats`` (None = no grow)."""
+        cfg, lad = self.config, self.ladder
+        changes: Dict[str, int] = {}
+        if int(stats["box_overflow"]):
+            demand = int(stats["box_demand"])
+            if cfg.environment == "hash_grid":
+                need = -(-demand // grid_mod.HASH_K_MULT)
+                changes["max_per_box"] = next_rung(
+                    cfg.max_per_box, need, lad.growth_factor)
+            else:
+                cur = cfg.grid_spec.run_capacity
+                changes["max_per_run"] = next_rung(
+                    cur, demand, lad.growth_factor)
+        if int(stats["birth_overflow"]):
+            demand = int(stats["capacity_demand"])
+            new_cap = next_rung(cfg.capacity, demand, lad.growth_factor,
+                                lad.round_to)
+            if lad.max_capacity is not None and new_cap > lad.max_capacity:
+                raise RuntimeError(
+                    f"capacity ladder exhausted: demand {demand} needs rung "
+                    f"{new_cap} > max_capacity={lad.max_capacity}")
+            changes["capacity"] = new_cap
+        if not changes:
+            return None
+        return dataclasses.replace(cfg, **changes)
+
+    def _grow(self, new_cfg: EngineConfig, prev: EngineState,
+              iteration: int) -> EngineState:
+        self._log_rungs(iteration,
+                        [(f, getattr(self.config, f), getattr(new_cfg, f))
+                         for f in ("capacity", "max_per_box", "max_per_run")])
+        self.config = new_cfg
+        self._sim = Simulation(new_cfg, self.behaviors)
+        if new_cfg.capacity != prev.pool.capacity:
+            prev = dataclasses.replace(
+                prev, pool=compaction.grow_pool(prev.pool, new_cfg.capacity))
+        return prev

@@ -96,7 +96,9 @@ class GridState:
     order: jnp.ndarray         # (C,) int32 — slot ids sorted by key (dead at end)
     rank: jnp.ndarray          # (C,) int32 — inverse of order
     starts: jnp.ndarray        # (M,) int32 — first sorted position of each box
-    counts: jnp.ndarray        # (M,) int32 — agents in each box
+    counts: jnp.ndarray        # (M,) table_count_dtype(capacity): int16 when
+                               #      the pool fits int16, else int32 —
+                               #      values bounded by capacity (§4.3)
     max_count: jnp.ndarray     # ()   int32 — max agents in any box
     max_run_count: jnp.ndarray # ()   int32 — max agents in any 3-box z-run
                                #      (the query-exactness bound; overflow iff
@@ -114,6 +116,17 @@ def _pcast_varying(v: jnp.ndarray, axes: Tuple[str, ...]) -> jnp.ndarray:
     return v
 
 
+def table_count_dtype(capacity: int) -> jnp.dtype:
+    """Dtype of per-box/per-bucket occupancy tables, capacity-parameterized.
+
+    A box can hold at most ``capacity`` agents, so counts fit int16 whenever
+    the pool does — halving the (M,)-table footprint at small ladder rungs
+    (DESIGN.md §4.3). Sums of ≤3 counts (z-runs) are equally bounded by
+    ``capacity`` and stay in range. Starts always need int32 (values up to
+    capacity *positions*, but also used as table offsets up to M)."""
+    return jnp.dtype(jnp.int16 if capacity < 2 ** 15 else jnp.int32)
+
+
 def box_tables(sorted_keys: jnp.ndarray, table_size: int
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Dense per-box (starts, counts) from the key-sorted keys.
@@ -121,11 +134,14 @@ def box_tables(sorted_keys: jnp.ndarray, table_size: int
     One searchsorted over M+1 ids gives starts AND counts (ends[i]=starts[i+1];
     the M'th entry lands at n_live because dead keys sort above every box id).
     Shared with the kernel compat wrapper (kernels/ops.collision_force) so the
-    table derivation exists exactly once.
+    table derivation exists exactly once. Counts use the capacity-
+    parameterized :func:`table_count_dtype`.
     """
     box_ids = jnp.arange(table_size + 1, dtype=jnp.uint32)
     bounds = jnp.searchsorted(sorted_keys, box_ids, side="left").astype(jnp.int32)
-    return bounds[:-1], bounds[1:] - bounds[:-1]
+    counts = (bounds[1:] - bounds[:-1]).astype(
+        table_count_dtype(sorted_keys.shape[0]))
+    return bounds[:-1], counts
 
 
 def _index_tables(spec: GridSpec, sorted_keys: jnp.ndarray):
@@ -605,7 +621,7 @@ def build_hash_grid(spec: GridSpec, pool: AgentPool, origin, box_size,
     bucket_ids = jnp.arange(n_buckets, dtype=jnp.uint32)
     starts = jnp.searchsorted(sorted_keys, bucket_ids, side="left").astype(jnp.int32)
     ends = jnp.searchsorted(sorted_keys, bucket_ids, side="right").astype(jnp.int32)
-    counts = ends - starts
+    counts = (ends - starts).astype(table_count_dtype(pool.capacity))
     return HashGridState(origin=jnp.asarray(origin), box_size=jnp.asarray(box_size),
                          keys=keys, cell_keys=cell_keys, order=order,
                          starts=starts, counts=counts,

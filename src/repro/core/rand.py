@@ -1,0 +1,102 @@
+"""Capacity-stable per-row random draws (capacity-ladder bit-parity support).
+
+``jax.random.uniform(key, (C,))`` is NOT prefix-stable in ``C``: threefry
+counter pairing splits the flattened size in half, so the value at row ``i``
+depends on the total array length. Under the capacity ladder (DESIGN.md §4.3)
+the pool's ``C`` changes at every rung while the *live* agents stay in slots
+``[0, n_live)`` — a behavior drawing capacity-shaped randomness the stock way
+would therefore diverge from a pre-sized run the moment the pool grows,
+breaking the ladder's bit-identical-trajectory contract.
+
+This module provides draws where the value at ``[i, j]`` is a pure function of
+``(key, i, j)`` and never of the array length: one threefry-2x32 block per
+element, counter = (row, column). Behaviors use these for all per-agent
+randomness (behaviors.py), which is what makes growing the pool mid-run
+invisible to the trajectory.
+
+The threefry-2x32 implementation below is the standard 20-round ARX cipher
+(Salmon et al. 2011), vectorized in jnp (uint32 wrap-around arithmetic). It is
+deliberately independent of jax's internal PRNG plumbing: the bit streams are
+stable across jax versions, and both raw ``(2,)`` uint32 keys and new-style
+typed keys are accepted.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_ROTATIONS = ((13, 15, 26, 6), (17, 29, 16, 24))
+_PARITY = jnp.uint32(0x1BD11BDA)
+
+
+def _key_halves(key: jax.Array) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(k0, k1) uint32 scalars from a raw (2,) uint32 key or a typed key."""
+    if jnp.issubdtype(key.dtype, jnp.integer):
+        data = key.astype(jnp.uint32)
+    else:                                   # new-style typed PRNG key
+        data = jax.random.key_data(key).astype(jnp.uint32)
+    return data[..., 0], data[..., 1]
+
+
+def _rotl(x: jnp.ndarray, r: int) -> jnp.ndarray:
+    return (x << jnp.uint32(r)) | (x >> jnp.uint32(32 - r))
+
+
+def threefry2x32(k0: jnp.ndarray, k1: jnp.ndarray,
+                 x0: jnp.ndarray, x1: jnp.ndarray
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One threefry-2x32 block per lane: counters (x0, x1) → two uint32 streams."""
+    ks = (k0, k1, k0 ^ k1 ^ _PARITY)
+    x0 = x0 + ks[0]
+    x1 = x1 + ks[1]
+    for i in range(5):
+        for r in _ROTATIONS[i % 2]:
+            x0 = x0 + x1
+            x1 = _rotl(x1, r)
+            x1 = x1 ^ x0
+        x0 = x0 + ks[(i + 1) % 3]
+        x1 = x1 + ks[(i + 2) % 3] + jnp.uint32(i + 1)
+    return x0, x1
+
+
+def _row_col_bits(key: jax.Array, rows: int, cols: int
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(rows, cols) pairs of uint32 streams, element = f(key, row, col) only."""
+    k0, k1 = _key_halves(key)
+    r = jnp.arange(rows, dtype=jnp.uint32)[:, None]
+    c = jnp.arange(cols, dtype=jnp.uint32)[None, :]
+    return threefry2x32(k0, k1, jnp.broadcast_to(r, (rows, cols)),
+                        jnp.broadcast_to(c, (rows, cols)))
+
+
+def _to_unit(bits: jnp.ndarray) -> jnp.ndarray:
+    """uint32 → float32 in [0, 1) with 24 bits of mantissa entropy."""
+    return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2 ** -24)
+
+
+def uniform_rows(key: jax.Array, rows: int, cols: int | None = None
+                 ) -> jnp.ndarray:
+    """Uniform [0, 1) draws of shape (rows,) or (rows, cols).
+
+    The value at row ``i`` (column ``j``) depends only on ``(key, i, j)`` —
+    growing ``rows`` extends the array without changing existing entries
+    (the property ``jax.random.uniform`` does not have).
+    """
+    b0, _ = _row_col_bits(key, rows, 1 if cols is None else cols)
+    u = _to_unit(b0)
+    return u[:, 0] if cols is None else u
+
+
+def normal_rows(key: jax.Array, rows: int, cols: int | None = None
+                ) -> jnp.ndarray:
+    """Standard-normal draws of shape (rows,) or (rows, cols), capacity-stable.
+
+    Box–Muller over the two streams of one threefry block per element (u1 is
+    mapped to (0, 1] so the log is finite).
+    """
+    b0, b1 = _row_col_bits(key, rows, 1 if cols is None else cols)
+    u1 = jnp.float32(1.0) - _to_unit(b0)           # (0, 1]
+    u2 = _to_unit(b1)
+    z = jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(jnp.float32(2.0 * jnp.pi) * u2)
+    return z[:, 0] if cols is None else z

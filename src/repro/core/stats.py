@@ -42,6 +42,18 @@ class StepStats:
                       their next iteration runs with an incomplete
                       neighborhood, so the flag shares the never-silent
                       contract (distributed only; §7)
+    thin_slab:        an interior slab is thinner than the ghost band, so the
+                      one-hop ring cannot ship every cross-shard pair
+                      (distributed only; §7). NOT fixable by growing a
+                      buffer — kept separate from halo_overflow so the
+                      capacity ladder knows the difference (§4.3)
+    box_demand:       which-capacity provenance for box_overflow: the largest
+                      observed 3-box z-run (uniform grid) or hash bucket
+                      occupancy this step. The capacity ladder sizes the next
+                      ``max_per_run`` / ``max_per_box`` rung directly from it
+    capacity_demand:  slots the pool would have needed this step to commit
+                      every staged agent (live + dropped); the ladder's
+                      ``capacity`` / ``local_capacity`` rung target
     """
 
     n_live: jnp.ndarray
@@ -53,10 +65,13 @@ class StepStats:
     halo_overflow: jnp.ndarray
     migrate_overflow: jnp.ndarray
     in_flight: jnp.ndarray
+    thin_slab: jnp.ndarray
+    box_demand: jnp.ndarray
+    capacity_demand: jnp.ndarray
 
     FIELDS = ("n_live", "n_active", "births", "deaths", "box_overflow",
               "birth_overflow", "halo_overflow", "migrate_overflow",
-              "in_flight")
+              "in_flight", "thin_slab", "box_demand", "capacity_demand")
 
     @classmethod
     def zeros(cls, shape: tuple = ()) -> "StepStats":
@@ -75,7 +90,11 @@ class StepStats:
         return ((f, getattr(self, f)) for f in self.FIELDS)
 
     def overflowed(self) -> jnp.ndarray:
-        """Any never-silent-loss flag set (§4.2 contract, either engine)."""
+        """Any never-silent-loss flag set (§4.2 contract, either engine).
+
+        Demands (box_demand / capacity_demand) are provenance, not flags —
+        they are excluded; thin_slab and in_flight are exactness flags and
+        count."""
         return (jnp.sum(self.box_overflow) + jnp.sum(self.birth_overflow)
                 + jnp.sum(self.halo_overflow) + jnp.sum(self.migrate_overflow)
-                + jnp.sum(self.in_flight)) > 0
+                + jnp.sum(self.in_flight) + jnp.sum(self.thin_slab)) > 0

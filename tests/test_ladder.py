@@ -1,0 +1,320 @@
+"""Capacity ladder (DESIGN.md §4.3): overflow→grow→re-run must be invisible.
+
+The contract under test: a run that starts in a deliberately tiny pool and
+grows through several rungs (capacity, max_per_run — and distributed:
+local/halo/migrate capacity) produces **bit-identical** live trajectories to
+a run pre-sized at the final rung. This leans on two engine properties that
+are tested here on their own as well:
+
+  * restage safety — grow_pool/grow_channels preserve the live prefix
+    verbatim and append dead zero slots (donation or not);
+  * capacity-stable randomness — behaviors draw through rand.py, so a draw
+    at slot i is independent of the pool's capacity.
+
+The dtype policy is a tolerance trade, not bit-exact: its parity test is
+approximate by design.
+"""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax.numpy as jnp
+
+import pytest
+
+from repro.core import (CapacityLadder, DtypePolicy, EngineConfig, ForceParams,
+                        LadderConfig, Simulation, grow_channels, grow_pool,
+                        make_pool)
+from repro.core import rand
+from repro.core.behaviors import GrowDivide, RandomDeath, RandomWalk
+
+
+def _live_sorted(pool):
+    a = np.asarray(pool.alive)
+    p = np.asarray(pool.position)[a]
+    o = np.lexsort(p.T)
+    return p[o], np.asarray(pool.diameter)[a][o], np.asarray(pool.agent_type)[a][o]
+
+
+# ---------------------------------------------------------------------------
+# restage / dtype-policy building blocks
+# ---------------------------------------------------------------------------
+
+def test_grow_pool_preserves_live_prefix_and_dtypes():
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0, 10, (5, 3)).astype(np.float32)
+    policy = DtypePolicy(aux_float="bfloat16", compact_ints=True)
+    pool = make_pool(8, position=pos, diameter=np.full(5, 2.0, np.float32),
+                     agent_type=np.arange(5, dtype=np.int32),
+                     extra_specs={"t": ((), jnp.int32, 7)}, policy=policy)
+    grown = grow_pool(pool, 32)
+    assert grown.capacity == 32
+    for k, v in pool.channels().items():
+        g = grown.channels()[k]
+        assert g.dtype == v.dtype, k
+        assert np.array_equal(np.asarray(g[:8]), np.asarray(v)), k
+    assert not np.asarray(grown.alive[8:]).any()
+    assert int(grown.n_live) == int(pool.n_live) == 5
+    # shrinking is refused, same-size is the identity
+    with pytest.raises(ValueError):
+        grow_channels(pool.channels(), 4)
+    assert grow_pool(pool, 8) is not None
+
+
+def test_grow_channels_donation_safety():
+    """Explicit donate=True must produce the same values as donate=False —
+    and on backends without donation support it degrades to a copy (jax
+    warns 'donated buffers were not usable' on CPU; that is the expected
+    degradation, not an error)."""
+    import warnings
+    ch = {"a": jnp.arange(12, dtype=jnp.float32).reshape(6, 2),
+          "alive": jnp.asarray([True, True, False, True, False, False])}
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", UserWarning)
+        out_d = grow_channels(dict(ch), 10, donate=True)
+    out_n = grow_channels(dict(ch), 10, donate=False)
+    for k in ch:
+        assert np.array_equal(np.asarray(out_d[k]), np.asarray(out_n[k]))
+    assert out_d["a"].shape == (10, 2)
+    assert not np.asarray(out_d["alive"][6:]).any()
+
+
+def test_dtype_policy_shrinks_bytes_per_agent():
+    base = make_pool(64, policy=DtypePolicy())
+    lean = make_pool(64, policy=DtypePolicy(aux_float="bfloat16",
+                                            compact_ints=True))
+    nbytes = lambda p: sum(v.nbytes for v in p.channels().values())
+    assert lean.diameter.dtype == jnp.bfloat16
+    assert lean.agent_type.dtype == jnp.int16
+    assert lean.force_nnz.dtype == jnp.int16
+    assert lean.position.dtype == jnp.float32          # never narrowed
+    assert lean.born_iter.dtype == jnp.int32           # iteration counter
+    assert nbytes(lean) < nbytes(base)
+
+
+def test_rand_rows_are_capacity_stable():
+    import jax
+    key = jax.random.PRNGKey(42)
+    u_small = np.asarray(rand.uniform_rows(key, 50))
+    u_big = np.asarray(rand.uniform_rows(key, 5000))
+    assert np.array_equal(u_small, u_big[:50])
+    n_small = np.asarray(rand.normal_rows(key, 50, 3))
+    n_big = np.asarray(rand.normal_rows(key, 700, 3))
+    assert np.array_equal(n_small, n_big[:50])
+    # sanity: the streams are actually random-looking
+    u = np.asarray(rand.uniform_rows(key, 20000))
+    assert 0.45 < u.mean() < 0.55 and u.min() >= 0.0 and u.max() < 1.0
+    z = np.asarray(rand.normal_rows(key, 20000))
+    assert abs(z.mean()) < 0.05 and 0.9 < z.std() < 1.1
+
+
+# ---------------------------------------------------------------------------
+# overflow provenance (stats.py)
+# ---------------------------------------------------------------------------
+
+def test_overflow_provenance_demands():
+    rng = np.random.default_rng(1)
+    n = 48
+    cfg = EngineConfig(capacity=n, domain_lo=(0, 0, 0), domain_hi=(24.0,) * 3,
+                       interaction_radius=4.0, dt=1.0, max_per_box=2,
+                       query_chunk=64, use_forces=False)
+    sim = Simulation(cfg, [GrowDivide(rate=3.0, threshold_diameter=6.0)])
+    # clustered into ~2×2×2 boxes so a z-run far exceeds run_capacity=6
+    pos = rng.uniform(1, 9, (n, 3)).astype(np.float32)
+    st = sim.init_state(pos, diameter=np.full(n, 5.0, np.float32))
+    st = sim.step(st)            # every cell divides: 48 newborns, 0 free slots
+    s = st.stats
+    assert int(s["birth_overflow"]) > 0
+    assert int(s["capacity_demand"]) == int(s["n_live"]) + int(s["birth_overflow"])
+    # max_per_box=2 → run capacity 6; a 48-in-24³ population exceeds it
+    assert int(s["box_overflow"]) == 1
+    assert int(s["box_demand"]) > cfg.grid_spec.run_capacity
+
+
+# ---------------------------------------------------------------------------
+# the ladder itself: bit-parity vs a pre-sized pool
+# ---------------------------------------------------------------------------
+
+def _scenario():
+    return [GrowDivide(rate=0.8, threshold_diameter=6.0),
+            RandomWalk(sigma=0.3),
+            RandomDeath(rate=0.01)]
+
+
+_BASE = dict(domain_lo=(0, 0, 0), domain_hi=(96.0,) * 3,
+             interaction_radius=4.0, dt=1.0, max_per_box=4, query_chunk=256,
+             force=ForceParams(max_displacement=0.5))
+
+
+def test_ladder_bit_parity_vs_presized():
+    rng = np.random.default_rng(0)
+    n0 = 64
+    pos = rng.uniform(4, 92, (n0, 3)).astype(np.float32)
+    dia = np.full(n0, 5.2, np.float32)
+
+    ladder = CapacityLadder(EngineConfig(capacity=96, **_BASE), _scenario(),
+                            LadderConfig(growth_factor=2.0, round_to=32))
+    st = ladder.init_state(pos, diameter=dia)
+    st = ladder.run(st, 9)
+
+    fields = {r["field"] for r in ladder.rungs}
+    assert "capacity" in fields, ladder.rungs
+    assert ladder.recompiles == len(ladder.rungs) >= 3
+
+    # oracle: pre-sized at the ladder's final rung, same seed state
+    sim = Simulation(ladder.config, _scenario())
+    st2 = sim.init_state(pos, diameter=dia)
+    st2 = sim.run(st2, 9, check_overflow=True)
+
+    assert int(st.stats["n_live"]) == int(st2.stats["n_live"]) > n0
+    p1, d1, t1 = _live_sorted(st.pool)
+    p2, d2, t2 = _live_sorted(st2.pool)
+    assert np.array_equal(p1, p2), "positions must be bit-identical"
+    assert np.array_equal(d1, d2)
+    assert np.array_equal(t1, t2)
+
+
+def test_ladder_box_rung_bit_parity():
+    """A pure run-capacity (max_per_run) rung mid-run: forces computed at a
+    wider gather width must still be bit-identical (zero lanes are exact
+    additive identities in the streamed reduction)."""
+    rng = np.random.default_rng(3)
+    n = 256
+    cfg = EngineConfig(capacity=1024, domain_lo=(0, 0, 0),
+                       domain_hi=(24.0,) * 3, interaction_radius=4.0, dt=0.5,
+                       max_per_box=3, query_chunk=128,
+                       force=ForceParams(max_displacement=0.5))
+    pos = rng.uniform(1, 23, (n, 3)).astype(np.float32)
+    dia = np.full(n, 3.0, np.float32)
+    ladder = CapacityLadder(cfg, [GrowDivide(rate=0.5, threshold_diameter=5.0)])
+    st = ladder.run(ladder.init_state(pos, diameter=dia), 5)
+    assert any(r["field"] == "max_per_run" for r in ladder.rungs), ladder.rungs
+
+    sim = Simulation(ladder.config, [GrowDivide(rate=0.5, threshold_diameter=5.0)])
+    st2 = sim.run(sim.init_state(pos, diameter=dia), 5, check_overflow=True)
+    p1, d1, _ = _live_sorted(st.pool)
+    p2, d2, _ = _live_sorted(st2.pool)
+    assert np.array_equal(p1, p2)
+    assert np.array_equal(d1, d2)
+
+
+def test_ladder_max_capacity_raises():
+    rng = np.random.default_rng(5)
+    pos = rng.uniform(4, 92, (64, 3)).astype(np.float32)
+    ladder = CapacityLadder(EngineConfig(capacity=96, **_BASE),
+                            [GrowDivide(rate=2.0, threshold_diameter=6.0)],
+                            LadderConfig(max_capacity=128))
+    st = ladder.init_state(pos, diameter=np.full(64, 5.5, np.float32))
+    with pytest.raises(RuntimeError, match="ladder exhausted"):
+        ladder.run(st, 6)
+
+
+def test_dtype_policy_trajectory_parity_within_tolerance():
+    """bfloat16 aux channels trade precision for bytes: trajectories must
+    track the float32 run closely (same counts, nearby positions) without
+    being bit-equal."""
+    rng = np.random.default_rng(7)
+    n = 200
+    pos = rng.uniform(4, 60, (n, 3)).astype(np.float32)
+    dia = np.full(n, 3.0, np.float32)
+    mk = lambda policy: Simulation(
+        EngineConfig(capacity=512, domain_lo=(0, 0, 0), domain_hi=(64.0,) * 3,
+                     interaction_radius=4.0, dt=0.5, max_per_box=16,
+                     query_chunk=256, force=ForceParams(max_displacement=0.5),
+                     dtypes=policy),
+        [GrowDivide(rate=0.25, threshold_diameter=4.5)])
+    s32 = mk(DtypePolicy())
+    lean = mk(DtypePolicy(aux_float="bfloat16", compact_ints=True))
+    st32 = s32.run(s32.init_state(pos, diameter=dia), 6, check_overflow=True)
+    stbf = lean.run(lean.init_state(pos, diameter=dia), 6, check_overflow=True)
+    assert stbf.pool.diameter.dtype == jnp.bfloat16
+    n32, nbf = int(st32.stats["n_live"]), int(stbf.stats["n_live"])
+    assert abs(n32 - nbf) <= 0.05 * n32, (n32, nbf)
+    if n32 == nbf:
+        p1, _, _ = _live_sorted(st32.pool)
+        p2, _, _ = _live_sorted(stbf.pool)
+        # bf16 diameters perturb forces ~1%; positions stay within ~2% of
+        # the domain scale over this horizon
+        assert float(np.abs(p1 - p2).max()) < 1.5
+
+
+# ---------------------------------------------------------------------------
+# distributed ladder: 4 shards, mid-run migration, agreed global rungs
+# ---------------------------------------------------------------------------
+
+_DIST_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import (DistConfig, DistributedCapacityLadder,
+                            DistributedSimulation, EngineConfig, ForceParams,
+                            LadderConfig)
+    from repro.core.behaviors import Behavior, BehaviorEffects, GrowDivide
+
+    class Drift(Behavior):
+        '''Deterministic +x drift: forces agents across slab boundaries.'''
+        def __call__(self, ctx, pool, rng):
+            step = jnp.asarray([1.0, 0.0, 0.0]) * ctx.dt
+            new_pos = jnp.where(ctx.owned[:, None], pool.position + step,
+                                pool.position)
+            new_pos = jnp.clip(new_pos, ctx.domain_lo, ctx.domain_hi)
+            return BehaviorEffects(set_channels={"position": new_pos})
+
+    beh = lambda: [GrowDivide(rate=0.8, threshold_diameter=6.0), Drift()]
+    rng = np.random.default_rng(1)
+    SIDE = 64.0
+    N0 = 64
+    cfg = EngineConfig(capacity=N0, domain_lo=(0, 0, 0),
+                       domain_hi=(SIDE,) * 3, interaction_radius=4.0, dt=1.0,
+                       max_per_box=8, query_chunk=128,
+                       force=ForceParams(max_displacement=0.5))
+    pos = rng.uniform(2, SIDE - 2, (N0, 3)).astype(np.float32)
+    dia = np.full(N0, 5.2, np.float32)
+
+    dl = DistributedCapacityLadder(
+        DistConfig(engine=cfg, n_shards=4, local_capacity=48,
+                   halo_capacity=24, migrate_capacity=12,
+                   rebalance_frequency=3),
+        beh(), LadderConfig())
+    st = dl.init_state(pos, diameter=dia)
+    st = dl.run(st, 7)
+
+    ds = DistributedSimulation(dl.dcfg, beh())
+    st2 = ds.init_state(pos, diameter=dia)
+    st2 = ds.run(st2, 7, check_overflow=True)
+
+    a1 = np.asarray(st.channels["alive"]); a2 = np.asarray(st2.channels["alive"])
+    p1 = np.asarray(st.channels["position"])[a1]
+    p2 = np.asarray(st2.channels["position"])[a2]
+    o1 = np.lexsort(p1.T); o2 = np.lexsort(p2.T)
+    results = {
+        "n_ladder": int(a1.sum()), "n_presized": int(a2.sum()), "n0": N0,
+        "bit_exact": bool(a1.sum() == a2.sum()
+                          and np.array_equal(p1[o1], p2[o2])),
+        "rung_fields": sorted({r["field"] for r in dl.rungs}),
+        "recompiles": dl.recompiles,
+        "migrated": bool(np.asarray(st.stats["n_live"]).min() > 0),
+    }
+    print("RESULT " + json.dumps(results))
+""")
+
+
+def test_distributed_ladder_bit_parity():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", _DIST_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    res = json.loads(line[len("RESULT "):])
+    assert res["n_ladder"] == res["n_presized"] > res["n0"], res
+    assert res["bit_exact"], res
+    assert "local_capacity" in res["rung_fields"], res
+    assert res["recompiles"] >= 2, res
