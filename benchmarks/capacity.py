@@ -9,15 +9,20 @@ capacity settings.
 
 This benchmark runs the ladder's defining scenario: an exponential-growth
 population (GrowDivide + RandomWalk spread) seeded with 1k cells and left to
-divide until it passes ``CAPACITY_TARGET`` live agents (default 2.6M — ≥10×
-BENCH_scaling's largest point). The pool starts at the seed size; every rung
-(pool capacity, max_per_run) is chosen by the ladder from the overflow
-provenance in StepStats. Records ``BENCH_capacity.json``: peak live count,
-the rung schedule, recompile count, µs/step per rung, and the bytes/agent of
-the float32 vs memory-lean DtypePolicy channel specs.
+divide until it passes ``CAPACITY_TARGET`` live agents (default 10.5M — past
+the paper-scale 10M mark, ≥2 capacity rungs beyond the previous 4.19M
+record). The pool starts at the seed size; every rung (pool capacity,
+max_per_run) is chosen by the ladder from the overflow provenance in
+StepStats. Records ``BENCH_capacity.json``: peak live count, the rung
+schedule, recompile count, and **per rung** the whole-step µs plus a
+standalone build-time split (the O(N) counting-sort resident build timed on
+its own, compile excluded) — the build keys are what benchmarks/trend.py
+gates, since the whole-step schedule depends on where rungs/recompiles land.
 
 Env overrides (CI smoke): ``CAPACITY_TARGET``, ``CAPACITY_SEED_AGENTS``,
-``CAPACITY_MAX_STEPS``.
+``CAPACITY_MAX_STEPS``; ``CAPACITY_STEP_BUDGET_S`` (>0 fails the run when
+the final rung's median warm step exceeds the budget — the CI paper-scale
+job's step-time guard).
 """
 
 from __future__ import annotations
@@ -25,15 +30,18 @@ from __future__ import annotations
 import os
 import time
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (CapacityLadder, DtypePolicy, EngineConfig, LadderConfig,
                         make_pool)
+from repro.core import grid as grid_mod
 from repro.core.behaviors import GrowDivide, RandomWalk
 
 from .common import emit, write_bench_json
 
-SIDE = 512.0              # 128^3 boxes at r=4: ~1.3 agents/box at 2.6M
+SIDE = 512.0              # 128^3 boxes at r=4: ~5 agents/box at 10.5M
 
 
 def _bytes_per_agent(policy: DtypePolicy) -> float:
@@ -41,10 +49,30 @@ def _bytes_per_agent(policy: DtypePolicy) -> float:
     return sum(v.nbytes for v in pool.channels().values()) / 8.0
 
 
+def _measure_build_us(cfg: EngineConfig, pool) -> float:
+    """Median µs of the standalone jitted resident build at this rung
+    (compile excluded). This is the apples-to-apples build-time key the
+    trend gate watches: unlike whole-step times it does not depend on when
+    rungs/recompiles land in the growth schedule."""
+    spec = cfg.grid_spec
+    origin = jnp.asarray(cfg.domain_lo, jnp.float32)
+    box = jnp.asarray(cfg.cell_size, jnp.float32)
+    build = jax.jit(lambda p: grid_mod.make_builder(
+        spec, method="resident", sort_impl=cfg.sort_impl)(p, origin, box))
+    jax.block_until_ready(build(pool))           # compile
+    ts = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        jax.block_until_ready(build(pool))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
 def run() -> None:
-    target = int(os.environ.get("CAPACITY_TARGET", 2_600_000))
+    target = int(os.environ.get("CAPACITY_TARGET", 10_500_000))
     n_seed = int(os.environ.get("CAPACITY_SEED_AGENTS", 1_000))
     max_steps = int(os.environ.get("CAPACITY_MAX_STEPS", 80))
+    budget_s = float(os.environ.get("CAPACITY_STEP_BUDGET_S", "0") or 0.0)
 
     lean = DtypePolicy(aux_float="bfloat16", compact_ints=True)
     cfg = EngineConfig(
@@ -61,6 +89,7 @@ def run() -> None:
     state = ladder.init_state(pos, diameter=np.full(n_seed, 5.0, np.float32))
 
     steps = []
+    build_us_by_cap = {}
     peak = n_seed
     t_total0 = time.perf_counter()
     for i in range(max_steps):
@@ -71,22 +100,35 @@ def run() -> None:
         steps.append({"iteration": i, "n_live": n_live,
                       "capacity": ladder.config.capacity, "us": us})
         peak = max(peak, n_live)
+        if ladder.config.capacity not in build_us_by_cap:
+            build_us_by_cap[ladder.config.capacity] = _measure_build_us(
+                ladder.config, state.pool)
         if n_live >= target:
             break
     total_s = time.perf_counter() - t_total0
+    # re-measure the final rung at peak occupancy (the first measurement ran
+    # right after the grow, on a half-empty pool)
+    build_us_by_cap[ladder.config.capacity] = _measure_build_us(
+        ladder.config, state.pool)
 
     # µs/step per rung: median over the steps run at each capacity, skipping
-    # each rung's first step (it pays that rung's compile)
+    # each rung's first step (it pays that rung's compile); build_us is the
+    # standalone resident-build time at that rung, step_other_us the
+    # remainder (behaviors + compaction + queries)
     per_rung = []
     for cap in sorted({s["capacity"] for s in steps}):
         at = [s["us"] for s in steps if s["capacity"] == cap]
         warm = at[1:] if len(at) > 1 else at
         n_at = max(s["n_live"] for s in steps if s["capacity"] == cap)
+        step_us = float(np.median(warm))
+        build_us = build_us_by_cap[cap]
         per_rung.append({"capacity": cap, "steps": len(at),
                          "max_n_live": n_at,
-                         "us_per_step": float(np.median(warm))})
-        emit(f"capacity_rung_c{cap}", float(np.median(warm)),
-             f"n_live<={n_at}")
+                         "us_per_step": step_us,
+                         "build_us": build_us,
+                         "step_other_us": max(step_us - build_us, 0.0)})
+        emit(f"capacity_rung_c{cap}", step_us, f"n_live<={n_at}")
+        emit(f"capacity_build_c{cap}", build_us, f"n_live<={n_at}")
 
     reached = peak >= target
     emit("capacity_peak", total_s * 1e6,
@@ -104,6 +146,8 @@ def run() -> None:
         "recompiles": ladder.recompiles,
         "rung_schedule": ladder.rungs,
         "us_per_step_per_rung": per_rung,
+        "final_rung_us_per_step": per_rung[-1]["us_per_step"],
+        "step_budget_s": budget_s or None,
         "bytes_per_agent": {
             "float32": _bytes_per_agent(DtypePolicy()),
             "lean": _bytes_per_agent(lean),
@@ -116,3 +160,7 @@ def run() -> None:
         raise RuntimeError(
             f"capacity ladder stopped at {peak} live agents "
             f"(< target {target}) after {len(steps)} steps")
+    if budget_s > 0 and per_rung[-1]["us_per_step"] > budget_s * 1e6:
+        raise RuntimeError(
+            f"final-rung step time {per_rung[-1]['us_per_step'] / 1e6:.2f}s "
+            f"exceeds CAPACITY_STEP_BUDGET_S={budget_s}")

@@ -24,8 +24,9 @@ ADHESION = ((0.30, 0.06), (0.06, 0.30))     # same-type >> cross-type
 def _same_type_fraction(sim, st) -> float:
     pool = st.pool
     spec = sim.spec
-    gs = G.build(spec, pool, jnp.asarray(sim.config.domain_lo, jnp.float32),
-                 jnp.asarray(sim.config.interaction_radius, jnp.float32))
+    gs = G.make_builder(spec, method="sorted")(
+        pool, jnp.asarray(sim.config.domain_lo, jnp.float32),
+        jnp.asarray(sim.config.interaction_radius, jnp.float32)).grid
     channels = {k: v for k, v in pool.channels().items()
                 if not k.startswith("extra.")}
     r = sim.config.interaction_radius

@@ -70,15 +70,18 @@ def run() -> None:
     # --- build times ---
     # resident build = key sort + permuting every channel + index tables
     # (what the engine pays per step; the search then needs no channel copy)
-    build_u = jax.jit(lambda p: G.build_resident(spec, p, origin, r))
+    mk_u = G.make_builder(spec, method="resident")
+    build_u = jax.jit(lambda p: mk_u(p, origin, r))
     us_build_u = time_fn(build_u, pool)
     emit("fig11_build_uniform_grid", us_build_u,
          f"n={N} (resident: includes channel permutation)")
-    build_s = jax.jit(lambda p: G.build_scatter_grid(spec, p, origin, r))
+    mk_s = G.make_builder(spec, method="scatter")
+    build_s = jax.jit(lambda p: mk_s(p, origin, r))
     us_build_s = time_fn(build_s, pool)
     emit("fig11_build_scatter_grid", us_build_s,
          f"vs_uniform={us_build_s / us_build_u:.2f}x")
-    build_h = jax.jit(lambda p: G.build_hash_grid(spec, p, origin, r))
+    mk_h = G.make_builder(spec, method="hash")
+    build_h = jax.jit(lambda p: mk_h(p, origin, r))
     us_build_h = time_fn(build_h, pool)
     emit("fig11_build_hash_grid", us_build_h,
          f"vs_uniform={us_build_h / us_build_u:.2f}x")
@@ -87,7 +90,8 @@ def run() -> None:
                            "hash_grid": us_build_h}
 
     # --- search (force sweep) times ---
-    rpool, gs, order = build_u(pool)
+    ures = build_u(pool)
+    rpool, gs, order = ures.pool, ures.grid, ures.order
     max_run = int(gs.max_run_count)
     assert max_run <= spec.run_capacity, \
         f"run overflow: {max_run} > {spec.run_capacity} — raise MAX_PER_RUN"
@@ -102,7 +106,7 @@ def run() -> None:
          f"n={N} (run-streaming, peak width R={spec.run_capacity} "
          f"vs 9R={9 * spec.run_capacity})")
 
-    sg = build_s(pool)
+    sg = build_s(pool).grid
 
     def env_search(cand_of_grid):
         # g must be the traced jit argument — a closed-over grid would be a
@@ -120,7 +124,7 @@ def run() -> None:
         lambda g, qp: G.scatter_grid_candidates(spec, g, qp))), sg)
     emit("fig11_search_scatter_grid", us_s, f"vs_uniform={us_s / us_u:.2f}x")
 
-    hg = build_h(pool)
+    hg = build_h(pool).grid
     # 'before': the wide (Q, 27·K_hash) candidate matrix (pre-PR-3 pathology)
     us_h_wide = time_fn(jax.jit(env_search(
         lambda g, qp: G.hash_grid_candidates(spec, g, qp))), hg)

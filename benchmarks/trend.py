@@ -45,11 +45,15 @@ import os
 import sys
 from typing import Dict, List
 
-# Files under the gate (BENCH_capacity.json is excluded: its rung schedule —
-# and therefore which steps pay recompiles — is scenario-dependent, so
-# step-time comparisons across runs are not apples-to-apples).
+# Files under the gate. BENCH_capacity.json joins with a key filter: its
+# whole-step times depend on where rungs/recompiles land in the growth
+# schedule (not apples-to-apples across runs), but the per-rung ``build_us``
+# entries are standalone jitted-build timings at a fixed capacity — those
+# gate the O(N) counting-sort build path.
 GATED_FILES = ("BENCH_neighbor.json", "BENCH_scaling.json",
-               "BENCH_statics.json", "BENCH_distributed.json")
+               "BENCH_statics.json", "BENCH_distributed.json",
+               "BENCH_capacity.json")
+_FILE_KEY_FILTER = {"BENCH_capacity.json": lambda path: "build_us" in path}
 
 _TIMING_SUFFIXES = ("_us", "us_per_step", "ms_per_step")
 _TIMING_PARENTS = ("search_us", "build_us", "us_per_step")
@@ -106,9 +110,12 @@ def compare(baseline_dir: str, fresh_dir: str, threshold: float,
             base = _flatten(json.load(f))
         with open(fpath) as f:
             fresh = _flatten(json.load(f))
+        key_filter = _FILE_KEY_FILTER.get(fname)
         file_rows = []
         for path, bval in sorted(base.items()):
             if not _is_timing(path) or path not in fresh:
+                continue
+            if key_filter is not None and not key_filter(path):
                 continue
             fval = fresh[path]
             base_us = bval * (1000.0 if "ms_per_step" in path else 1.0)

@@ -7,7 +7,8 @@ from .distributed import (DistConfig, DistributedCapacityLadder,
 from .engine import (CapacityLadder, EngineConfig, EngineState, LadderConfig,
                      Simulation, StepContext, make_iteration_core)
 from .forces import ForceParams
-from .grid import GridSpec
+from .grid import (BuildResult, GridBuilderDeprecationWarning, GridSpec,
+                   RebuildPolicy, counting_sort_order, make_builder)
 from .stats import StepStats
 
 __all__ = ["AgentPool", "DtypePolicy", "make_pool", "pool_from_channels",
@@ -15,4 +16,6 @@ __all__ = ["AgentPool", "DtypePolicy", "make_pool", "pool_from_channels",
            "Simulation", "StepContext", "make_iteration_core",
            "CapacityLadder", "LadderConfig", "ForceParams", "GridSpec",
            "StepStats", "DistConfig", "DistributedSimulation",
-           "DistributedCapacityLadder", "DistState"]
+           "DistributedCapacityLadder", "DistState", "BuildResult",
+           "GridBuilderDeprecationWarning", "RebuildPolicy",
+           "counting_sort_order", "make_builder"]

@@ -83,9 +83,12 @@ class DistConfig:
 
     @property
     def halo_width(self) -> float:
-        """Ghost band thickness: r, or 2·r under detect_static (statics.py)."""
+        """Ghost band thickness: r, or 2·r under detect_static (statics.py);
+        plus the rebuild policy's cell slack so the band stays a conservative
+        superset when every_k widens the grid cells (grid.RebuildPolicy)."""
         return self.engine.interaction_radius * (
-            2.0 if self.engine.detect_static else 1.0)
+            2.0 if self.engine.detect_static else 1.0
+        ) + self.engine.rebuild.cell_slack
 
     @property
     def total_capacity(self) -> int:
@@ -105,6 +108,10 @@ class DistState:
     boundaries: jnp.ndarray         # (n_shards + 1,) slab edges (replicated)
     iteration: jnp.ndarray          # () int32
     stats: StepStats                # per-shard (n_shards,) counters
+    env: Optional[grid_mod.RebuildState] = None
+                                    # per-shard cached grid build (RebuildPolicy
+                                    # every_k): every leaf carries a leading
+                                    # (n_shards,) axis; None under every_step
 
 
 def quantile_boundaries(x: jnp.ndarray, alive: jnp.ndarray, n_shards: int,
@@ -291,10 +298,12 @@ def make_distributed_step(dcfg: DistConfig, mesh, behaviors: Sequence[Behavior]
                                pvary_axes=(axis,), diff_ops=diff_ops)
     template = _channel_template(dcfg, behaviors)
     names = list(template.channels().keys())
+    use_cache = cfg.rebuild.mode == "every_k"
 
     def step_shard(channels: Dict[str, jnp.ndarray], conc: jnp.ndarray,
                    rng: jax.Array, boundaries: jnp.ndarray,
-                   iteration: jnp.ndarray):
+                   iteration: jnp.ndarray,
+                   env: Optional[grid_mod.RebuildState]):
         i = jax.lax.axis_index(axis)
         my_lo = boundaries[i]
         my_hi = boundaries[i + 1]
@@ -327,7 +336,17 @@ def make_distributed_step(dcfg: DistConfig, mesh, behaviors: Sequence[Behavior]
         pool = pool_from_channels(full)
 
         # ---- the shared Algorithm-1 iteration (engine.make_iteration_core) --
-        pool, conc, rng, stats = core(pool, conc, rng, iteration)
+        n_ghosts = jnp.zeros((), jnp.int32)
+        if use_cache:
+            # a cached slab build is only valid over the layout it was built
+            # on — which had every ghost slot dead (a build that saw live
+            # ghosts marks itself dirty below, because next step's band holds
+            # different agents). Live ghosts arriving NOW therefore force a
+            # rebuild: the stale tables think their slots are empty.
+            n_ghosts = (jnp.sum(ghosts_l["alive"].astype(jnp.int32))
+                        + jnp.sum(ghosts_r["alive"].astype(jnp.int32)))
+            env = dataclasses.replace(env, dirty=env.dirty | (n_ghosts > 0))
+        pool, conc, rng, stats, env = core(pool, conc, rng, iteration, env)
         ch = pool.channels()
         owned = ch["extra." + OWNED].astype(bool)
         alive2 = ch["alive"] & owned
@@ -357,12 +376,25 @@ def make_distributed_step(dcfg: DistConfig, mesh, behaviors: Sequence[Behavior]
         ch["alive"] = alive2 & ~go_l & ~go_r       # drop ghosts + leavers
         pool = compaction.compact(pool_from_channels(ch))
         ovf_in = jnp.zeros((), jnp.int32)
+        n_arrive = jnp.zeros((), jnp.int32)
         for arr in (arrivals_l, arrivals_r):
             valid = arr["alive"]
             ovf_in += compaction.birth_overflow(pool, valid)
+            n_arrive += jnp.sum(valid.astype(jnp.int32))
             # commit_births preserves every shipped channel (born_iter, owned,
             # behavior extras) — agents born this step migrate intact
             pool = compaction.commit_births(pool, arr, valid, iteration)
+
+        if use_cache:
+            # distribution events that reorder the slab on top of the core's
+            # own deaths/births: live ghosts this step (their slots churn),
+            # leavers (the end-of-step compact permutes), and arrivals
+            # (append through slots the tables call dead). Any of them → the
+            # cached tables no longer describe the next step's layout.
+            n_leave = jnp.sum((go_l | go_r).astype(jnp.int32))
+            env = dataclasses.replace(
+                env, dirty=(env.dirty | (n_ghosts > 0) | (n_leave > 0)
+                            | (n_arrive > 0)))
 
         n_final = pool.n_live
         ovf_cap = jnp.maximum(n_final - c_local, 0)     # clipped on repack
@@ -394,26 +426,45 @@ def make_distributed_step(dcfg: DistConfig, mesh, behaviors: Sequence[Behavior]
             thin_slab=thin.astype(jnp.int32),
             in_flight=in_flight.astype(jnp.int32))
         stats = jax.tree_util.tree_map(lambda v: v.reshape(1), stats)
-        return out_ch, conc, rng.reshape(1, -1), boundaries, stats
+        return out_ch, conc, rng.reshape(1, -1), boundaries, stats, env
 
     ch_specs = {k: P(axis) for k in names}
-    in_specs = (ch_specs, P(axis), P(axis), P(), P())
+    # the env cache shards like the pool: every RebuildState leaf gains a
+    # leading (n_shards,) axis (None under every_step — an empty pytree, so
+    # the spec position is None too)
+    env_specs = None
+    if use_cache:
+        env_specs = jax.tree_util.tree_map(
+            lambda _: P(axis),
+            grid_mod.initial_rebuild_state(
+                cfg.grid_spec, dcfg.total_capacity,
+                jnp.asarray(cfg.domain_lo, jnp.float32),
+                jnp.asarray(cfg.cell_size, jnp.float32)))
+    in_specs = (ch_specs, P(axis), P(axis), P(), P(), env_specs)
     out_specs = (ch_specs, P(axis), P(axis), P(),
-                 StepStats(**{f: P(axis) for f in StepStats.FIELDS}))
+                 StepStats(**{f: P(axis) for f in StepStats.FIELDS}),
+                 env_specs)
 
-    def _shard_body(channels, conc, rng, boundaries, iteration):
-        return step_shard(channels, conc, rng.reshape(-1), boundaries,
-                          iteration)
+    def _shard_body(channels, conc, rng, boundaries, iteration, env):
+        # per-shard env leaves arrive with a leading axis of 1; the core works
+        # on unsharded shapes, so squeeze in and restore on the way out
+        env_in = (None if env is None
+                  else jax.tree_util.tree_map(lambda a: a[0], env))
+        out_ch, conc2, rng2, boundaries2, stats, env_out = step_shard(
+            channels, conc, rng.reshape(-1), boundaries, iteration, env_in)
+        if env_out is not None:
+            env_out = jax.tree_util.tree_map(lambda a: a[None], env_out)
+        return out_ch, conc2, rng2, boundaries2, stats, env_out
 
     sharded = _shard_map(_shard_body, mesh, in_specs, out_specs)
 
     def step(state: DistState) -> DistState:
-        ch, conc, rng, boundaries, stats = sharded(
+        ch, conc, rng, boundaries, stats, env = sharded(
             state.channels, state.conc, state.rng, state.boundaries,
-            state.iteration)
+            state.iteration, state.env)
         return DistState(channels=ch, conc=conc, rng=rng,
                          boundaries=boundaries,
-                         iteration=state.iteration + 1, stats=stats)
+                         iteration=state.iteration + 1, stats=stats, env=env)
 
     return jax.jit(step)
 
@@ -480,10 +531,20 @@ class DistributedSimulation:
         rng = jax.vmap(lambda s: jax.random.fold_in(jax.random.PRNGKey(seed),
                                                     s))(
             jnp.arange(dcfg.n_shards, dtype=jnp.uint32))
+        env = None
+        if cfg.rebuild.mode == "every_k":
+            # one empty-dirty cache per shard, stacked on a leading axis
+            env0 = grid_mod.initial_rebuild_state(
+                cfg.grid_spec, dcfg.total_capacity,
+                jnp.asarray(cfg.domain_lo, jnp.float32),
+                jnp.asarray(cfg.cell_size, jnp.float32))
+            env = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (dcfg.n_shards,)
+                                           + a.shape).copy(), env0)
         return DistState(channels=channels, conc=conc, rng=rng,
                          boundaries=boundaries,
                          iteration=jnp.zeros((), jnp.int32),
-                         stats=StepStats.zeros((dcfg.n_shards,)))
+                         stats=StepStats.zeros((dcfg.n_shards,)), env=env)
 
     # -- public API ----------------------------------------------------------
     def step(self, state: DistState) -> DistState:
@@ -681,7 +742,20 @@ class DistributedCapacityLadder(LadderDriverBase):
     def _grow(self, new_d: DistConfig, prev: DistState,
               iteration: int) -> DistState:
         old_local = self.dcfg.local_capacity
+        old_total = self.dcfg.total_capacity
         self._rebuild(new_d, iteration)
         if new_d.local_capacity != old_local:
             prev = self._restage(prev, old_local, new_d.local_capacity)
+        if prev.env is not None and new_d.total_capacity != old_total:
+            # the cached grid spans the in-step pool (owned + ghost bands);
+            # grow it alongside. grow_grid_state's dead-key/iota padding is
+            # exactly what a pre-sized build over the wider pool would have
+            # produced (live slots form a prefix whenever the cache is
+            # clean), so the rewound trajectory stays bit-identical — no
+            # dirty-forcing needed, which would instead reshuffle the skip
+            # schedule
+            prev = dataclasses.replace(
+                prev, env=dataclasses.replace(
+                    prev.env, grid=grid_mod.grow_grid_state(
+                        prev.env.grid, new_d.total_capacity)))
         return prev

@@ -72,14 +72,48 @@ class EngineConfig:
     force: force_mod.ForceParams = dataclasses.field(default_factory=force_mod.ForceParams)
     diffusion: Optional[diff_mod.DiffusionSpec] = None
     diffusion_substeps: int = 1
+    rebuild: grid_mod.RebuildPolicy = dataclasses.field(
+        default_factory=grid_mod.RebuildPolicy)
+                                           # when the grid build runs
+                                           # (every_step | every_k with a
+                                           # displacement bound; grid.py)
+    sort_impl: str = "auto"                # key-sort realization of the grid
+                                           # build (grid.SORT_IMPLS): O(N)
+                                           # counting sort on host/xla,
+                                           # argsort as the parity oracle
     dtypes: DtypePolicy = dataclasses.field(default_factory=DtypePolicy)
                                            # channel storage dtypes (§4.3:
                                            # narrower aux channels → more
                                            # agents per byte per rung)
 
+    def __post_init__(self):
+        if self.sort_impl not in grid_mod.SORT_IMPLS:
+            raise ValueError(f"sort_impl must be one of {grid_mod.SORT_IMPLS},"
+                             f" got {self.sort_impl!r}")
+        if self.rebuild.mode == "every_k":
+            if self.environment != "uniform_grid":
+                raise ValueError(
+                    f"rebuild.mode='every_k' requires "
+                    f"environment='uniform_grid' (the cached resident tables "
+                    f"are what a skipped step reuses), got "
+                    f"environment={self.environment!r}")
+            if self.detect_static:
+                raise ValueError(
+                    "rebuild.mode='every_k' is incompatible with "
+                    "detect_static=True: box-granular disturbance "
+                    "aggregation (statics.py) reads fresh per-step tables; "
+                    "set rebuild=RebuildPolicy() or detect_static=False")
+
+    @property
+    def cell_size(self) -> float:
+        """Grid box edge: the interaction radius, widened by the rebuild
+        policy's displacement bound so stale-table stencils still cover
+        every in-radius pair (grid.RebuildPolicy coverage argument)."""
+        return self.interaction_radius + self.rebuild.cell_slack
+
     @property
     def grid_spec(self) -> grid_mod.GridSpec:
-        dims = tuple(max(1, int(math.ceil((hi - lo) / self.interaction_radius)))
+        dims = tuple(max(1, int(math.ceil((hi - lo) / self.cell_size)))
                      for lo, hi in zip(self.domain_lo, self.domain_hi))
         return grid_mod.GridSpec(dims=dims, max_per_box=self.max_per_box,
                                  max_per_run=self.max_per_run,
@@ -94,6 +128,10 @@ class EngineState:
     rng: jax.Array
     iteration: jnp.ndarray               # () int32
     stats: StepStats                     # per-iteration counters (stats.py)
+    env: Optional[grid_mod.RebuildState] = None
+                                         # cached grid build carried across
+                                         # steps (RebuildPolicy every_k);
+                                         # None under every_step
 
 
 @dataclasses.dataclass
@@ -118,23 +156,33 @@ class StepContext:
 
 # -- environment dispatch (module-level: shared by both engines) -------------
 
-def build_env(cfg: EngineConfig, spec: grid_mod.GridSpec, pool: AgentPool,
-              origin: jnp.ndarray, box_size: jnp.ndarray):
-    """Build the iteration's environment.
+_ENV_METHOD = {  # EngineConfig.environment → grid.make_builder method
+    "uniform_grid": "resident",
+    "brute_force": "resident",   # resident build kept for statics bookkeeping
+    "scatter_grid": "scatter",
+    "hash_grid": "hash",
+}
 
-    Resident environments (uniform_grid, and brute_force — which keeps
-    the grid for statics bookkeeping) return a *permuted pool* alongside
-    the grid state: the pool itself is the key-sorted layout
-    (grid.build_resident). Scatter/hash return the pool unchanged.
+
+def build_env(cfg: EngineConfig, spec: grid_mod.GridSpec, pool: AgentPool,
+              origin: jnp.ndarray, box_size: jnp.ndarray
+              ) -> grid_mod.BuildResult:
+    """Build the iteration's environment via the unified builder factory.
+
+    Resident environments (uniform_grid, and brute_force — which keeps the
+    grid for statics bookkeeping) come back with a *permuted pool*: the pool
+    itself is the key-sorted layout. Scatter/hash leave the pool unchanged.
+    The engine consumes the BuildResult overflow surface only for the
+    environments whose queries it makes exact through the ladder
+    (uniform/hash); the scatter baseline's per-box truncation is deliberate
+    'standard implementation' behavior, surfaced in the result but not
+    flagged in StepStats.
     """
-    if cfg.environment in ("uniform_grid", "brute_force"):
-        pool, genv, _ = grid_mod.build_resident(spec, pool, origin, box_size)
-        return pool, genv
-    if cfg.environment == "scatter_grid":
-        return pool, grid_mod.build_scatter_grid(spec, pool, origin, box_size)
-    if cfg.environment == "hash_grid":
-        return pool, grid_mod.build_hash_grid(spec, pool, origin, box_size)
-    raise ValueError(cfg.environment)
+    if cfg.environment not in _ENV_METHOD:
+        raise ValueError(cfg.environment)
+    builder = grid_mod.make_builder(spec, method=_ENV_METHOD[cfg.environment],
+                                    sort_impl=cfg.sort_impl)
+    return builder(pool, origin, box_size)
 
 
 def make_neighbor_apply(cfg: EngineConfig, spec: grid_mod.GridSpec, grid_env,
@@ -217,9 +265,11 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
                         diff_ops: Optional[diff_mod.DiffusionOps] = None):
     """Build the pure Algorithm-1 iteration body both engines share.
 
-    Returns ``core(pool, conc, rng, iteration) -> (pool, conc, rng,
-    StepStats)``: resident build → run-streaming/Pallas forces → behaviors →
-    effects merge → death compaction + birth commit → statics bookkeeping →
+    Returns ``core(pool, conc, rng, iteration, env) -> (pool, conc, rng,
+    StepStats, env)``: resident build (or cached-build reuse under
+    RebuildPolicy every_k — ``env`` carries the grid.RebuildState, None
+    under every_step) → run-streaming/Pallas forces → behaviors → effects
+    merge → death compaction + birth commit → statics bookkeeping →
     diffusion step — exactly the paper's iteration, over whatever pool view
     the caller hands in.
 
@@ -246,7 +296,7 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
     origin = jnp.asarray(cfg.domain_lo, jnp.float32)
     dlo = jnp.asarray(cfg.domain_lo, jnp.float32)
     dhi = jnp.asarray(cfg.domain_hi, jnp.float32)
-    box_size = jnp.asarray(cfg.interaction_radius, jnp.float32)
+    box_size = jnp.asarray(cfg.cell_size, jnp.float32)   # radius + rebuild slack
     adhesion = (jnp.asarray(cfg.adhesion, jnp.float32)
                 if cfg.adhesion is not None else None)
     force_pair = force_mod.make_force_pair_fn(cfg.force, adhesion)
@@ -264,8 +314,10 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
         order = jnp.argsort(keys).astype(jnp.int32)
         return compaction.apply_permutation(pool, order)
 
+    use_cache = cfg.rebuild.mode == "every_k"
+
     def core(pool: AgentPool, conc: jnp.ndarray, rng: jax.Array,
-             it: jnp.ndarray):
+             it: jnp.ndarray, env: Optional[grid_mod.RebuildState] = None):
         rng, k_force, *bkeys = jax.random.split(rng, 2 + len(behaviors))
         stats = StepStats.zeros()
 
@@ -276,7 +328,32 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
                                                           "hash_grid"):
             pool = jax.lax.cond(it % cfg.sort_frequency == 0,
                                 sort_pool, lambda p: p, pool)
-        pool, grid_env = build_env(cfg, spec, pool, origin, box_size)
+        rebuilt = jnp.ones((), jnp.int32)
+        if not use_cache:
+            res = build_env(cfg, spec, pool, origin, box_size)
+            pool, grid_env = res.pool, res.grid
+        else:
+            # every_k (uniform_grid only, enforced by EngineConfig): rebuild
+            # when the cache is dirty (structural change last step), the k
+            # budget is spent, or accumulated displacement exceeds the bound
+            # the widened cells were sized for — otherwise skip the
+            # permutation + table build outright and query the stale tables
+            # (grid.RebuildPolicy coverage argument).
+            do_build = (env.dirty | (env.steps_since >= cfg.rebuild.k)
+                        | (env.disp_accum > cfg.rebuild.displacement_bound))
+
+            def _fresh(pool, env):
+                res = build_env(cfg, spec, pool, origin, box_size)
+                return res.pool, grid_mod.RebuildState(
+                    grid=res.grid,
+                    steps_since=jnp.zeros((), jnp.int32),
+                    disp_accum=jnp.zeros((), jnp.float32),
+                    dirty=jnp.zeros((), bool))
+
+            pool, env = jax.lax.cond(do_build, _fresh,
+                                     lambda pool, env: (pool, env), pool, env)
+            grid_env = env.grid
+            rebuilt = do_build.astype(jnp.int32)
         box_overflow = stats.box_overflow
         box_demand = stats.box_demand
         if cfg.environment == "uniform_grid":
@@ -391,6 +468,12 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
         grew = pool.diameter > dia0 + 1e-12
         pool = dataclasses.replace(pool, moved=moved & pool.alive,
                                    grew=grew & pool.alive)
+        if use_cache:
+            # budget spent this step: the max per-agent per-axis |Δposition|
+            # (forces + behaviors) — the per-axis bound is what the widened
+            # 3×3×3 stencil coverage argument consumes (grid.RebuildPolicy)
+            step_disp = jnp.max(jnp.where(pool.alive[:, None],
+                                          jnp.abs(move_d), 0.0))
 
         # ---------------- post standalone ops: commit ----------------
         # ghosts are the neighbor shard's to kill — only owned deaths commit
@@ -417,6 +500,18 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
             births += jnp.sum(valid.astype(jnp.int32))
             pool = compaction.commit_births(pool, q, valid, it)
 
+        if use_cache:
+            # deaths ran the compaction permutation and births appended live
+            # tail slots — either way the cached tables no longer describe
+            # the pool, so the next step must rebuild (never-stale-dead
+            # invariant: stale tables only ever index the layout they were
+            # built over, with every indexed slot still live)
+            env = grid_mod.RebuildState(
+                grid=env.grid,
+                steps_since=env.steps_since + 1,
+                disp_accum=env.disp_accum + step_disp,
+                dirty=(deaths > 0) | (births > 0))
+
         n_live_end = jnp.sum(owned_of(pool).astype(jnp.int32))
         stats = dataclasses.replace(
             stats, n_live=n_live_end,
@@ -425,8 +520,9 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
             box_demand=box_demand,
             # slots needed to have committed every staged agent (§4.3
             # provenance: the capacity rung target)
-            capacity_demand=n_live_end + birth_overflow)
-        return pool, conc, rng, stats
+            capacity_demand=n_live_end + birth_overflow,
+            rebuilds=rebuilt, rebuild_skips=1 - rebuilt)
+        return pool, conc, rng, stats, env
 
     return core
 
@@ -477,19 +573,27 @@ class Simulation:
                           policy=self.config.dtypes)
         dspec = self.config.diffusion
         conc = jnp.zeros(dspec.dims, jnp.float32) if dspec else jnp.zeros((1, 1, 1))
+        env = None
+        if self.config.rebuild.mode == "every_k":
+            env = grid_mod.initial_rebuild_state(
+                self.spec, self.config.capacity,
+                jnp.asarray(self.config.domain_lo, jnp.float32),
+                jnp.asarray(self.config.cell_size, jnp.float32))
         return EngineState(pool=pool, conc=conc, rng=jax.random.PRNGKey(seed),
                            iteration=jnp.zeros((), jnp.int32),
-                           stats=StepStats.zeros())
+                           stats=StepStats.zeros(), env=env)
 
     # -- the iteration -------------------------------------------------------
     def _build_step(self):
         core = make_iteration_core(self.config, self.behaviors)
 
         def step(state: EngineState) -> EngineState:
-            pool, conc, rng, stats = core(state.pool, state.conc, state.rng,
-                                          state.iteration)
+            pool, conc, rng, stats, env = core(state.pool, state.conc,
+                                               state.rng, state.iteration,
+                                               state.env)
             return EngineState(pool=pool, conc=conc, rng=rng,
-                               iteration=state.iteration + 1, stats=stats)
+                               iteration=state.iteration + 1, stats=stats,
+                               env=env)
 
         return step
 
@@ -696,6 +800,15 @@ class CapacityLadder(LadderDriverBase):
         self.config = new_cfg
         self._sim = Simulation(new_cfg, self.behaviors)
         if new_cfg.capacity != prev.pool.capacity:
+            env = prev.env
+            if env is not None:
+                # the rewound step re-runs with this cache: growing it the
+                # way a pre-sized build would have laid it out keeps the
+                # grown trajectory bit-identical (grid.grow_grid_state)
+                env = dataclasses.replace(
+                    env, grid=grid_mod.grow_grid_state(env.grid,
+                                                       new_cfg.capacity))
             prev = dataclasses.replace(
-                prev, pool=compaction.grow_pool(prev.pool, new_cfg.capacity))
+                prev, pool=compaction.grow_pool(prev.pool, new_cfg.capacity),
+                env=env)
         return prev

@@ -40,7 +40,9 @@ Alternative environments (paper Fig 11 comparison, DESIGN.md §10.5):
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+import inspect
+import warnings
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -108,6 +110,262 @@ class GridState:
 _DEAD_KEY = morton.DEAD_KEY
 
 
+# ---------------------------------------------------------------------------
+# O(N) counting-sort permutation (DESIGN.md §2) — the grid build's key sort
+# ---------------------------------------------------------------------------
+#
+# Box keys live in [0, table_size] (the sentinel table_size stands in for
+# DEAD_KEY), so a comparison sort is overkill: a counting sort — histogram the
+# keys into the exact-size table, exclusive-scan the histogram into per-key
+# offsets, scatter each slot to offset[key] + rank-within-key — produces the
+# same stable permutation in O(N + table_size) work. Ties break by slot id,
+# which makes the result *bit-exact* with jnp.argsort (stable): a stable sort
+# permutation is uniquely determined by its keys, so every downstream
+# guarantee that was stated over argsort (ladder-rewind bit-exactness,
+# distributed parity) carries over unchanged.
+#
+# Two realizations, selected by ``impl``:
+#   * "xla" — an in-graph LSD radix cascade: each pass histograms one
+#     _DIGIT_BITS-wide digit per 1024-slot block (rank-within-digit via the
+#     block-sorted segment boundaries), exclusive-scans block histograms into
+#     global offsets, and applies the pass with ONE length-N scatter. Valid
+#     under jit, lax.cond, and shard_map; portable to accelerators.
+#   * "host" — jax.pure_callback into numpy's stable integer argsort (an LSD
+#     radix cascade on these dtypes, ~3.7× faster than jnp.argsort at 16M
+#     keys). OPT-IN ONLY: on jaxlib 0.4.37's CPU runtime, converting a
+#     *computed* callback operand to numpy deadlocks once the copy leaves
+#     the inline path (≥ ~32k elements — np.asarray/dlpack/memoryview all
+#     block the same way), so the engine must never select it implicitly.
+# "auto" picks "xla" everywhere; "argsort" keeps the comparison sort (oracle
+# for the parity tests — measured on-par with "xla" on a CPU host, where
+# XLA's variadic sort and the radix cascade are both ~3× slower than
+# numpy's radix; the per-step build win comes from RebuildPolicy skipping,
+# not the sort constant).
+
+SORT_IMPLS = ("auto", "host", "xla", "argsort")
+
+_LANE_BITS = 10
+_SORT_BLOCK = 1 << _LANE_BITS        # slots per radix block (one sort row)
+_DIGIT_BITS = 11                     # digit width per counting-sort pass
+
+
+def _np_stable_argsort(keys: np.ndarray) -> np.ndarray:
+    # pure_callback hands us a jax.Array view, not an ndarray; materialize it
+    # BEFORE sorting or np.argsort's method dispatch re-enters jnp.argsort on
+    # the callback thread and deadlocks the runtime once the sort is large
+    # enough to leave the inline execution path
+    return np.argsort(np.asarray(keys), kind="stable").astype(np.int32)
+
+
+# jax ≥ 0.5 replaces pure_callback's ``vectorized`` kwarg with ``vmap_method``
+_CALLBACK_KW = (
+    {"vmap_method": "sequential"}
+    if "vmap_method" in inspect.signature(jax.pure_callback).parameters
+    else {"vectorized": False})
+
+
+def _counting_sort_host(keys: jnp.ndarray) -> jnp.ndarray:
+    return jax.pure_callback(
+        _np_stable_argsort,
+        jax.ShapeDtypeStruct(keys.shape, jnp.int32), keys, **_CALLBACK_KW)
+
+
+def _radix_pass(vals: jnp.ndarray, order: jnp.ndarray, shift: int
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One stable counting-sort pass on digit ``(vals >> shift) & (D-1)``.
+
+    vals/order are block-padded to a multiple of _SORT_BLOCK. Packing
+    (digit << _LANE_BITS) | lane and value-sorting each block row yields the
+    per-block stable digit order without an argsort/take_along_axis pair;
+    rank-within-digit falls out of the sorted block's segment boundaries
+    (one searchsorted per block — the "segment cumsum" of the counting
+    sort), and the cross-block exclusive scan of the per-block histograms
+    turns local ranks into global destinations. The pass is applied with a
+    single length-N scatter of the inverse permutation.
+    """
+    n = vals.shape[0]
+    nb = n // _SORT_BLOCK
+    d = 1 << _DIGIT_BITS
+    lane = jnp.arange(_SORT_BLOCK, dtype=jnp.uint32)
+    digits = ((vals >> shift) & jnp.uint32(d - 1)).reshape(nb, _SORT_BLOCK)
+    packed = jnp.sort((digits << _LANE_BITS) | lane[None, :], axis=1)
+    d_sorted = (packed >> _LANE_BITS).astype(jnp.int32)           # (nb, B)
+    lane_src = (packed & jnp.uint32(_SORT_BLOCK - 1)).astype(jnp.int32)
+
+    ids = jnp.arange(d + 1, dtype=jnp.int32)
+    bounds = jax.vmap(lambda row: jnp.searchsorted(row, ids))(d_sorted)
+    counts_b = bounds[:, 1:] - bounds[:, :-1]                     # (nb, D)
+    off_d = jnp.concatenate([jnp.zeros((1,), counts_b.dtype),
+                             jnp.cumsum(counts_b.sum(axis=0))[:-1]])
+    cross = jnp.cumsum(counts_b, axis=0) - counts_b               # excl. scan
+
+    rows = jnp.arange(nb, dtype=jnp.int32)[:, None]
+    j = jnp.arange(_SORT_BLOCK, dtype=jnp.int32)[None, :]
+    local = j - bounds[rows, d_sorted]                            # rank in digit
+    dst = (off_d[d_sorted] + cross[rows, d_sorted] + local).reshape(-1)
+    src = (rows * _SORT_BLOCK + lane_src).reshape(-1)
+    inv = jnp.zeros((n,), jnp.int32).at[dst].set(
+        src, unique_indices=True, mode="promise_in_bounds")
+    return vals[inv], order[inv]
+
+
+def _counting_sort_xla(keys: jnp.ndarray, table_size: int) -> jnp.ndarray:
+    c = keys.shape[0]
+    nb = -(-c // _SORT_BLOCK)
+    kp = jnp.pad(keys, (0, nb * _SORT_BLOCK - c), constant_values=_DEAD_KEY)
+    # dead (and pad) keys → the sentinel table_size: the key domain becomes
+    # [0, table_size], so bit_length(table_size) digits cover every pass. The
+    # remap is monotone, and pad slots tie-break after every real slot, so
+    # order[:c] is exactly the stable permutation of the original keys.
+    ki = jnp.where(kp == _DEAD_KEY, jnp.uint32(table_size), kp)
+    order = jnp.arange(nb * _SORT_BLOCK, dtype=jnp.int32)
+    for shift in range(0, max(1, int(table_size).bit_length()), _DIGIT_BITS):
+        ki, order = _radix_pass(ki, order, shift)
+    return order[:c]
+
+
+def counting_sort_order(keys: jnp.ndarray, table_size: int, *,
+                        impl: str = "auto") -> jnp.ndarray:
+    """Stable sort permutation of box keys — bit-exact with ``jnp.argsort``.
+
+    keys: (C,) uint32 in [0, table_size] ∪ {morton.DEAD_KEY}. Returns (C,)
+    int32 slot ids in ascending (key, slot) order — the unique stable
+    permutation, whichever ``impl`` computes it (see SORT_IMPLS above).
+    """
+    if impl == "auto":
+        impl = "xla"          # "host" is opt-in only (deadlock note above)
+    if impl == "argsort":
+        return jnp.argsort(keys).astype(jnp.int32)
+    if impl == "host":
+        return _counting_sort_host(keys)
+    if impl == "xla":
+        return _counting_sort_xla(keys, table_size)
+    raise ValueError(f"sort_impl must be one of {SORT_IMPLS}, got {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# Rebuild policy (DESIGN.md §4) — when the per-step build may be skipped
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RebuildPolicy:
+    """When the environment build runs (static; part of the jit closure).
+
+    mode="every_step" (default): rebuild every iteration — the exact paper
+    Algorithm-1 schedule, byte-identical to the engine before this knob
+    existed.
+
+    mode="every_k": reuse the previous build for up to ``k - 1`` further
+    steps, as long as the accumulated per-agent displacement stays within
+    ``displacement_bound``. Correctness (DESIGN.md §4.4): grid cells widen to
+    ``interaction_radius + displacement_bound``, so for any current-position
+    pair within the interaction radius r, the neighbor's *stale* cell (its
+    cell at build time) is within one cell of the query's current cell —
+    per axis |x_now(q) − x_build(n)| ≤ |x_now(q) − x_now(n)| +
+    |x_now(n) − x_build(n)| ≤ r + bound = cell — hence inside the 3×3×3
+    stencil. Stale candidates are a superset; pair forces read *current*
+    channel values, so extra candidates beyond r contribute exactly zero.
+    Any structural change (death compaction, birth commit, migration,
+    arriving ghosts) marks the cached build dirty and forces a rebuild on
+    the next step, so stale tables never index a reordered pool.
+    """
+    mode: str = "every_step"          # "every_step" | "every_k"
+    k: int = 1                        # max steps served by one build
+    displacement_bound: float = 0.0   # accumulated-displacement budget
+
+    def __post_init__(self):
+        if self.mode not in ("every_step", "every_k"):
+            raise ValueError(
+                f"rebuild.mode must be 'every_step' or 'every_k', "
+                f"got {self.mode!r}")
+        if not isinstance(self.k, int) or self.k < 1:
+            raise ValueError(f"rebuild.k must be an int ≥ 1, got {self.k!r}")
+        if self.displacement_bound < 0:
+            raise ValueError(f"rebuild.displacement_bound must be ≥ 0, "
+                             f"got {self.displacement_bound!r}")
+        if self.mode == "every_step" and (self.k != 1
+                                          or self.displacement_bound != 0.0):
+            raise ValueError(
+                "rebuild.k and rebuild.displacement_bound only apply under "
+                "rebuild.mode='every_k' (every_step rebuilds unconditionally)")
+
+    @property
+    def cell_slack(self) -> float:
+        """Extra grid-cell width the stale-build coverage argument needs."""
+        return float(self.displacement_bound) if self.mode == "every_k" else 0.0
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RebuildState:
+    """Carried environment cache for RebuildPolicy(mode='every_k').
+
+    grid:        the last build's GridState (tables index the pool layout as
+                 of that build; the skip invariants above keep it valid)
+    steps_since: () int32 — steps served by ``grid`` so far
+    disp_accum:  () float32 — accumulated max per-agent per-axis |Δposition|
+                 since the build (the displacement-bound budget spent)
+    dirty:       () bool — a structural change invalidated ``grid``
+    """
+    grid: GridState
+    steps_since: jnp.ndarray
+    disp_accum: jnp.ndarray
+    dirty: jnp.ndarray
+
+
+def initial_rebuild_state(spec: GridSpec, capacity: int, origin, box_size
+                          ) -> RebuildState:
+    """Pre-first-step cache: empty tables, dirty so step 0 always builds."""
+    ident = jnp.arange(capacity, dtype=jnp.int32)
+    cdt = table_count_dtype(capacity)    # max_* follow counts' dtype (§4.3)
+    grid = GridState(
+        origin=jnp.asarray(origin, jnp.float32),
+        box_size=jnp.asarray(box_size, jnp.float32),
+        keys=jnp.full((capacity,), _DEAD_KEY, jnp.uint32),
+        order=ident, rank=ident,
+        starts=jnp.zeros((spec.table_size,), jnp.int32),
+        counts=jnp.zeros((spec.table_size,), cdt),
+        max_count=jnp.zeros((), cdt),
+        max_run_count=jnp.zeros((), cdt))
+    return RebuildState(grid=grid,
+                        steps_since=jnp.zeros((), jnp.int32),
+                        disp_accum=jnp.zeros((), jnp.float32),
+                        dirty=jnp.ones((), bool))
+
+
+def grow_grid_state(grid: GridState, new_capacity: int) -> GridState:
+    """Grow a cached *resident* GridState to a larger pool capacity.
+
+    Used by the capacity-ladder rewind (host side): the pre-step state being
+    re-run at the bigger rung carries this cache, and a pre-sized run at the
+    new capacity would have produced exactly these arrays — dead-key padding
+    keeps ``keys`` sorted, the identity order/rank extend with iota, and the
+    dense tables are capacity-independent (counts only re-cast when the
+    capacity crosses the int16 table dtype threshold). That is what keeps
+    grown trajectories bit-identical to pre-sized ones under every_k.
+    Supports a leading shard axis (distributed ladder: arrays (S, C...)).
+    """
+    old = grid.keys.shape[-1]
+    if new_capacity == old:
+        return grid
+    if new_capacity < old:
+        raise ValueError(f"grow_grid_state: {new_capacity} < {old}")
+    pad = new_capacity - old
+    lead = grid.keys.shape[:-1]
+    ident_pad = jnp.broadcast_to(
+        jnp.arange(old, new_capacity, dtype=jnp.int32), lead + (pad,))
+    pad_widths = [(0, 0)] * len(lead) + [(0, pad)]
+    cdt = table_count_dtype(new_capacity)
+    return dataclasses.replace(
+        grid,
+        keys=jnp.pad(grid.keys, pad_widths, constant_values=_DEAD_KEY),
+        order=jnp.concatenate([grid.order, ident_pad], axis=-1),
+        rank=jnp.concatenate([grid.rank, ident_pad], axis=-1),
+        counts=grid.counts.astype(cdt),
+        max_count=grid.max_count.astype(cdt),
+        max_run_count=grid.max_run_count.astype(cdt))
+
+
 def _pcast_varying(v: jnp.ndarray, axes: Tuple[str, ...]) -> jnp.ndarray:
     """jax.lax.pcast(..., to="varying") with a no-op fallback for jax < 0.6
     (older shard_map has no varying-axis tracking to satisfy)."""
@@ -154,19 +412,20 @@ def _index_tables(spec: GridSpec, sorted_keys: jnp.ndarray):
     return starts, counts, jnp.max(counts), jnp.max(runs)
 
 
-def build(spec: GridSpec, pool: AgentPool, origin: jnp.ndarray,
-          box_size: jnp.ndarray) -> GridState:
+def _build_sorted_impl(spec: GridSpec, pool: AgentPool, origin: jnp.ndarray,
+                       box_size: jnp.ndarray, sort_impl: str = "auto"
+                       ) -> GridState:
     """Build the grid index over the pool *as laid out* (non-resident).
 
-    O(#agents) parallel work + one parallel sort. Queries against this state
-    gather from a key-sorted channel copy (``sort_channels``); the engine's
-    hot path uses :func:`build_resident` instead, which makes that copy the
-    pool itself. Kept for callers that must preserve slot order — the
-    distributed engine (ghost concatenation) and the Fig-11 baselines.
+    O(#agents) counting sort + O(#boxes) vector table derivation. Queries
+    against this state gather from a key-sorted channel copy
+    (``sort_channels``); the engine's hot path uses the resident build
+    instead, which makes that copy the pool itself. Kept for callers that
+    must preserve slot order (the Fig-11 baselines).
     """
     keys = morton.grid_sort_keys(pool.position, pool.alive, origin, box_size,
                                  spec.dims)
-    order = jnp.argsort(keys).astype(jnp.int32)              # stable radix-ish sort
+    order = counting_sort_order(keys, spec.table_size, impl=sort_impl)
     sorted_keys = keys[order]
     rank = jnp.zeros_like(order).at[order].set(
         jnp.arange(order.shape[0], dtype=jnp.int32))
@@ -176,9 +435,9 @@ def build(spec: GridSpec, pool: AgentPool, origin: jnp.ndarray,
                      counts=counts, max_count=max_count, max_run_count=max_run)
 
 
-def build_resident(spec: GridSpec, pool: AgentPool, origin: jnp.ndarray,
-                   box_size: jnp.ndarray
-                   ) -> Tuple[AgentPool, GridState, jnp.ndarray]:
+def _build_resident_impl(spec: GridSpec, pool: AgentPool, origin: jnp.ndarray,
+                         box_size: jnp.ndarray, sort_impl: str = "auto"
+                         ) -> Tuple[AgentPool, GridState, jnp.ndarray]:
     """Permute the pool into grid-key order and index it **in place**.
 
     The one permutation (DESIGN.md §3.2) composes three reorderings the
@@ -196,7 +455,7 @@ def build_resident(spec: GridSpec, pool: AgentPool, origin: jnp.ndarray,
     """
     keys = morton.grid_sort_keys(pool.position, pool.alive, origin, box_size,
                                  spec.dims)
-    order = jnp.argsort(keys).astype(jnp.int32)
+    order = counting_sort_order(keys, spec.table_size, impl=sort_impl)
     pool = compaction.apply_permutation(pool, order)
     sorted_keys = keys[order]
     starts, counts, max_count, max_run = _index_tables(spec, sorted_keys)
@@ -533,14 +792,14 @@ class ScatterGridState:
     counts: jnp.ndarray        # (M,)
 
 
-def build_scatter_grid(spec: GridSpec, pool: AgentPool, origin, box_size
-                       ) -> ScatterGridState:
+def _build_scatter_impl(spec: GridSpec, pool: AgentPool, origin, box_size,
+                        sort_impl: str = "auto") -> ScatterGridState:
     m, k = spec.table_size, spec.max_per_box
     keys = morton.linear_keys(pool.position, origin, box_size, spec.dims)
     keys = jnp.where(pool.alive, keys, m)  # park dead at row m (dropped)
     # slot-within-box via sort (the CPU version uses sequential insertion;
     # the data-parallel equivalent needs a sort or atomics — we sort).
-    order = jnp.argsort(keys)
+    order = counting_sort_order(keys, m, impl=sort_impl)
     sorted_keys = keys[order]
     first = jnp.searchsorted(sorted_keys, sorted_keys, side="left")
     slot_in_box = jnp.arange(keys.shape[0]) - first                  # rank within box
@@ -607,8 +866,9 @@ def _hash_cell(cell: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
     return h % jnp.uint32(n_buckets)
 
 
-def build_hash_grid(spec: GridSpec, pool: AgentPool, origin, box_size,
-                    n_buckets: int = 1 << 14) -> HashGridState:
+def _build_hash_impl(spec: GridSpec, pool: AgentPool, origin, box_size,
+                     n_buckets: int = 1 << 14, sort_impl: str = "auto"
+                     ) -> HashGridState:
     cell = morton.cell_of(pool.position, origin, box_size, spec.dims)
     keys = _hash_cell(cell, n_buckets)
     keys = jnp.where(pool.alive, keys, jnp.uint32(n_buckets))
@@ -616,7 +876,7 @@ def build_hash_grid(spec: GridSpec, pool: AgentPool, origin, box_size,
                           morton.linear_encode3(cell[..., 0], cell[..., 1],
                                                 cell[..., 2], spec.dims),
                           morton.DEAD_KEY)
-    order = jnp.argsort(keys).astype(jnp.int32)
+    order = counting_sort_order(keys, n_buckets, impl=sort_impl)
     sorted_keys = keys[order]
     bucket_ids = jnp.arange(n_buckets, dtype=jnp.uint32)
     starts = jnp.searchsorted(sorted_keys, bucket_ids, side="left").astype(jnp.int32)
@@ -675,3 +935,149 @@ def hash_grid_candidates(spec: GridSpec, g: HashGridState, query_pos,
               for j in range(27)]
     return (jnp.concatenate([ids for ids, _ in probes], axis=1),
             jnp.concatenate([valid for _, valid in probes], axis=1))
+
+
+# ---------------------------------------------------------------------------
+# Unified builder factory — ONE entry point over the grid-build zoo
+# ---------------------------------------------------------------------------
+
+BUILD_METHODS = ("resident", "sorted", "scatter", "hash")
+
+
+class BuildResult(NamedTuple):
+    """Uniform result of every grid build (whatever the method).
+
+    pool:     the pool the tables index — permuted into grid-key order by
+              the resident method, returned unchanged by the others
+    grid:     GridState ('resident'/'sorted'), ScatterGridState, or
+              HashGridState
+    order:    (C,) int32 old→new gather permutation *applied to the pool*
+              (identity for the non-permuting methods) — callers tracking
+              external per-slot state re-map with it
+    overflow: () int32 — agents beyond the method's fixed gather/table
+              capacity this build: run_capacity excess for the uniform grid,
+              per-box truncation for the scatter table (which the legacy
+              entry point dropped silently), probe-width excess for the hash
+              grid. 0 ⇔ queries against this build are exact.
+    demand:   () int32 — the observed peak occupancy behind ``overflow``
+              (max 3-box z-run / max box / max bucket): the which-capacity
+              provenance the capacity ladder sizes the next rung from.
+    """
+    pool: AgentPool
+    grid: Any
+    order: jnp.ndarray
+    overflow: jnp.ndarray
+    demand: jnp.ndarray
+
+
+def make_builder(spec: GridSpec, *, method: str = "resident",
+                 sort_impl: str = "auto", n_buckets: int = 1 << 14
+                 ) -> Callable[[AgentPool, jnp.ndarray, jnp.ndarray],
+                               BuildResult]:
+    """The one grid-builder entry point (replaces the build_* zoo).
+
+    Returns ``build_fn(pool, origin, box_size) -> BuildResult`` for the
+    chosen method, with a common overflow/demand surface (§4.2 never-silent
+    contract) regardless of which underlying structure is built:
+
+      * "resident" — counting-sort permutation applied to the pool itself;
+        grid order IS memory order (the engine hot path).
+      * "sorted"   — same tables over the pool as laid out (slot order
+        preserved; queries gather through ``sort_channels``).
+      * "scatter"  — dense (boxes × K) member table via scatter (the
+        paper's 'standard implementation' baseline).
+      * "hash"     — fixed-bucket spatial hash over ``n_buckets`` buckets.
+
+    sort_impl selects the key-sort realization (SORT_IMPLS): the O(N)
+    counting sort on its "xla" (in-graph, the "auto" default) and "host"
+    (opt-in callback — see the deadlock note above) paths, "argsort" as
+    the comparison-sort oracle.
+    """
+    if method not in BUILD_METHODS:
+        raise ValueError(
+            f"method must be one of {BUILD_METHODS}, got {method!r}")
+    if sort_impl not in SORT_IMPLS:
+        raise ValueError(
+            f"sort_impl must be one of {SORT_IMPLS}, got {sort_impl!r}")
+
+    if method in ("resident", "sorted"):
+        def build_fn(pool: AgentPool, origin, box_size) -> BuildResult:
+            if method == "resident":
+                pool, grid, order = _build_resident_impl(
+                    spec, pool, origin, box_size, sort_impl)
+            else:
+                grid = _build_sorted_impl(spec, pool, origin, box_size,
+                                          sort_impl)
+                order = jnp.arange(pool.capacity, dtype=jnp.int32)
+            demand = grid.max_run_count.astype(jnp.int32)
+            return BuildResult(pool, grid, order,
+                               jnp.maximum(demand - spec.run_capacity, 0),
+                               demand)
+    elif method == "scatter":
+        def build_fn(pool: AgentPool, origin, box_size) -> BuildResult:
+            grid = _build_scatter_impl(spec, pool, origin, box_size,
+                                       sort_impl)
+            demand = jnp.max(grid.counts).astype(jnp.int32)
+            return BuildResult(pool, grid,
+                               jnp.arange(pool.capacity, dtype=jnp.int32),
+                               jnp.maximum(demand - spec.max_per_box, 0),
+                               demand)
+    else:
+        def build_fn(pool: AgentPool, origin, box_size) -> BuildResult:
+            grid = _build_hash_impl(spec, pool, origin, box_size, n_buckets,
+                                    sort_impl)
+            demand = grid.max_bucket_count.astype(jnp.int32)
+            return BuildResult(pool, grid,
+                               jnp.arange(pool.capacity, dtype=jnp.int32),
+                               jnp.maximum(
+                                   demand - HASH_K_MULT * spec.max_per_box,
+                                   0),
+                               demand)
+    return build_fn
+
+
+# -- one-release deprecation shims over the legacy direct entry points -------
+
+class GridBuilderDeprecationWarning(DeprecationWarning):
+    """A legacy direct grid-build entry point was called (use make_builder).
+
+    Its own category so CI can promote exactly these to errors
+    (``-W error::repro.core.grid.GridBuilderDeprecationWarning``) without
+    entangling unrelated DeprecationWarnings from dependencies.
+    """
+
+
+def _builder_deprecated(name: str, repl: str) -> None:
+    warnings.warn(
+        f"grid.{name} is deprecated and will be removed next release; use "
+        f"grid.make_builder(spec, method={repl!r}) instead",
+        GridBuilderDeprecationWarning, stacklevel=3)
+
+
+def build(spec: GridSpec, pool: AgentPool, origin: jnp.ndarray,
+          box_size: jnp.ndarray) -> GridState:
+    """Deprecated: ``make_builder(spec, method='sorted')(...).grid``."""
+    _builder_deprecated("build", "sorted")
+    return _build_sorted_impl(spec, pool, origin, box_size)
+
+
+def build_resident(spec: GridSpec, pool: AgentPool, origin: jnp.ndarray,
+                   box_size: jnp.ndarray
+                   ) -> Tuple[AgentPool, GridState, jnp.ndarray]:
+    """Deprecated: ``make_builder(spec, method='resident')`` → BuildResult."""
+    _builder_deprecated("build_resident", "resident")
+    return _build_resident_impl(spec, pool, origin, box_size)
+
+
+def build_scatter_grid(spec: GridSpec, pool: AgentPool, origin, box_size
+                       ) -> ScatterGridState:
+    """Deprecated: ``make_builder(spec, method='scatter')(...).grid``."""
+    _builder_deprecated("build_scatter_grid", "scatter")
+    return _build_scatter_impl(spec, pool, origin, box_size)
+
+
+def build_hash_grid(spec: GridSpec, pool: AgentPool, origin, box_size,
+                    n_buckets: int = 1 << 14) -> HashGridState:
+    """Deprecated: ``make_builder(spec, method='hash')(...).grid``."""
+    _builder_deprecated("build_hash_grid", "hash")
+    return _build_hash_impl(spec, pool, origin, box_size, n_buckets)

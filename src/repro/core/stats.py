@@ -54,6 +54,10 @@ class StepStats:
     capacity_demand:  slots the pool would have needed this step to commit
                       every staged agent (live + dropped); the ladder's
                       ``capacity`` / ``local_capacity`` rung target
+    rebuilds:         1 if this step rebuilt its environment (grid build ran)
+    rebuild_skips:    1 if this step reused a cached build instead
+                      (RebuildPolicy mode='every_k'; grid.py). The two split
+                      every step, so their running sums audit the skip rate
     """
 
     n_live: jnp.ndarray
@@ -68,10 +72,13 @@ class StepStats:
     thin_slab: jnp.ndarray
     box_demand: jnp.ndarray
     capacity_demand: jnp.ndarray
+    rebuilds: jnp.ndarray
+    rebuild_skips: jnp.ndarray
 
     FIELDS = ("n_live", "n_active", "births", "deaths", "box_overflow",
               "birth_overflow", "halo_overflow", "migrate_overflow",
-              "in_flight", "thin_slab", "box_demand", "capacity_demand")
+              "in_flight", "thin_slab", "box_demand", "capacity_demand",
+              "rebuilds", "rebuild_skips")
 
     @classmethod
     def zeros(cls, shape: tuple = ()) -> "StepStats":

@@ -190,7 +190,7 @@ def collision_force(position: jnp.ndarray, diameter: jnp.ndarray,
     """
     c = position.shape[0]
     keys = morton.grid_sort_keys(position, alive, origin, box_size, dims)
-    order = jnp.argsort(keys).astype(jnp.int32)
+    order = grid.counting_sort_order(keys, morton.linear_size(dims))
     sorted_keys = keys[order]
 
     starts, counts = grid.box_tables(sorted_keys, morton.linear_size(dims))

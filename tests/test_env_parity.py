@@ -1,7 +1,7 @@
 """Cross-environment force parity: every neighbor environment must agree.
 
 One randomized agent cloud, six force paths: uniform grid (wide candidate
-matrix), the resident run-streaming loop (grid.build_resident +
+matrix), the resident run-streaming loop (grid.make_builder('resident') +
 grid.resident_apply — the engine's hot path), uniform grid via the Pallas K1
 kernel (interpret mode), scatter-table grid, hash grid (streamed probes), and
 the exact O(N²) brute-force oracle. All must agree within tolerance —
@@ -39,13 +39,15 @@ def _forces_all_envs(pool, spec, radius, channels, pair):
     r = jnp.asarray(radius)
     out = {}
 
-    gs = G.build(spec, pool, origin, r)
-    assert int(gs.max_run_count) <= spec.run_capacity
+    sres = G.make_builder(spec, method="sorted")(pool, origin, r)
+    gs = sres.grid
+    assert int(sres.overflow) == 0
     out["uniform"] = G.neighbor_apply(spec, gs, channels, all_idx, n_q,
                                       pair, OUT_SPECS)
     # resident run-streaming path (the engine's hot path): permutes the pool
     # into grid order; map the forces back to slot order for comparison
-    rpool, rgs, order = G.build_resident(spec, pool, origin, r)
+    rres = G.make_builder(spec, method="resident")(pool, origin, r)
+    rpool, rgs, order = rres.pool, rres.grid, rres.order
     rch = {k: v for k, v in rpool.channels().items()
            if not k.startswith("extra.")}
     res = G.resident_apply(spec, rgs, rch, rpool.alive, pair, OUT_SPECS,
@@ -54,8 +56,8 @@ def _forces_all_envs(pool, spec, radius, channels, pair):
         name: jnp.zeros_like(val).at[order].set(val)
         for name, val in res.items()}
 
-    sg = G.build_scatter_grid(spec, pool, origin, r)
-    hg = G.build_hash_grid(spec, pool, origin, r)
+    sg = G.make_builder(spec, method="scatter")(pool, origin, r).grid
+    hg = G.make_builder(spec, method="hash")(pool, origin, r).grid
 
     def cf(q_pos, q_slot):
         ids, valid = G.scatter_grid_candidates(spec, sg, q_pos)
@@ -124,7 +126,8 @@ def test_hash_bucket_collision_no_double_count():
     channels = {k: v for k, v in pool.channels().items()
                 if not k.startswith("extra.")}
     pair = make_force_pair_fn(ForceParams())
-    hg = G.build_hash_grid(spec, pool, jnp.zeros(3), jnp.asarray(radius))
+    hg = G.make_builder(spec, method="hash")(pool, jnp.zeros(3),
+                                              jnp.asarray(radius)).grid
     assert int(hg.keys[0]) != int(hg.keys[1])   # distinct buckets for agents
 
     def hash_phase(q_pos, q_slot, j):
@@ -167,7 +170,8 @@ def test_pallas_collision_matches_xla_grid(rng, dims, domain):
     assert not bool(ovf)
 
     spec = G.GridSpec(dims=dims, max_per_box=c, query_chunk=128)
-    gs = G.build(spec, pool, jnp.zeros(3), jnp.asarray(box))
+    gs = G.make_builder(spec, method="sorted")(pool, jnp.zeros(3),
+                                                jnp.asarray(box)).grid
     channels = {k: v for k, v in pool.channels().items()
                 if not k.startswith("extra.")}
     pair = make_force_pair_fn(ForceParams())

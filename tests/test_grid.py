@@ -35,7 +35,8 @@ def _count_pair_fn(q, nbr, valid, q_slot):
 def test_uniform_grid_matches_brute_force(rng, n, c, chunk):
     pos, pool = _mk(rng, n, c)
     spec = G.GridSpec(dims=(10, 10, 10), max_per_box=32, query_chunk=chunk)
-    gs = G.build(spec, pool, jnp.zeros(3), jnp.asarray(RADIUS))
+    gs = G.make_builder(spec, method="sorted")(pool, jnp.zeros(3),
+                                               jnp.asarray(RADIUS)).grid
     channels = {k: v for k, v in pool.channels().items()
                 if not k.startswith("extra.")}
     out = G.neighbor_apply(spec, gs, channels,
@@ -52,7 +53,8 @@ def test_uniform_grid_property(n, seed):
     rng = np.random.default_rng(seed)
     pos, pool = _mk(rng, n, max(n, 8))
     spec = G.GridSpec(dims=(10, 10, 10), max_per_box=max(n, 8), query_chunk=32)
-    gs = G.build(spec, pool, jnp.zeros(3), jnp.asarray(RADIUS))
+    gs = G.make_builder(spec, method="sorted")(pool, jnp.zeros(3),
+                                               jnp.asarray(RADIUS)).grid
     channels = {k: v for k, v in pool.channels().items()
                 if not k.startswith("extra.")}
     out = G.neighbor_apply(spec, gs, channels,
@@ -67,7 +69,8 @@ def test_overflow_flag(rng):
     pos = rng.uniform(0.0, 1.0, (100, 3)).astype(np.float32)
     pool = agents.make_pool(128, position=jnp.asarray(pos))
     spec = G.GridSpec(dims=(8, 8, 8), max_per_box=8)
-    gs = G.build(spec, pool, jnp.zeros(3), jnp.asarray(2.0))
+    gs = G.make_builder(spec, method="sorted")(pool, jnp.zeros(3),
+                                               jnp.asarray(2.0)).grid
     assert int(gs.max_count) == 100
 
 
@@ -76,7 +79,8 @@ def test_dead_agents_excluded(rng):
     alive = pool.alive.at[10:20].set(False)
     pool = dataclasses.replace(pool, alive=alive)
     spec = G.GridSpec(dims=(10, 10, 10), max_per_box=64, query_chunk=32)
-    gs = G.build(spec, pool, jnp.zeros(3), jnp.asarray(RADIUS))
+    gs = G.make_builder(spec, method="sorted")(pool, jnp.zeros(3),
+                                               jnp.asarray(RADIUS)).grid
     channels = {k: v for k, v in pool.channels().items()
                 if not k.startswith("extra.")}
     out = G.neighbor_apply(spec, gs, channels,
@@ -95,7 +99,8 @@ def test_scatter_and_hash_grids_match(rng):
     bf = _brute_counts(pos, RADIUS)
     d2 = ((pos[:, None, :] - pos[None, :, :]) ** 2).sum(-1)
 
-    sg = G.build_scatter_grid(spec, pool, jnp.zeros(3), jnp.asarray(RADIUS))
+    sg = G.make_builder(spec, method="scatter")(pool, jnp.zeros(3),
+                                                jnp.asarray(RADIUS)).grid
     ids, valid = G.scatter_grid_candidates(spec, sg, jnp.asarray(pos))
     for name, (idn, vl) in {"scatter": (np.asarray(ids), np.asarray(valid))}.items():
         cnt = np.zeros(150, int)
@@ -105,7 +110,8 @@ def test_scatter_and_hash_grids_match(rng):
             cnt[i] = (d2[i][js] <= RADIUS ** 2).sum()
         np.testing.assert_array_equal(cnt, bf, err_msg=name)
 
-    hg = G.build_hash_grid(spec, pool, jnp.zeros(3), jnp.asarray(RADIUS))
+    hg = G.make_builder(spec, method="hash")(pool, jnp.zeros(3),
+                                             jnp.asarray(RADIUS)).grid
     ids, valid = G.hash_grid_candidates(spec, hg, jnp.asarray(pos))
     idn, vl = np.asarray(ids), np.asarray(valid)
     cnt = np.zeros(150, int)

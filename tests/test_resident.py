@@ -34,8 +34,9 @@ def _resident_setup(rng, n, c, dims, box, chunk):
                             diameter=jnp.asarray(dia))
     spec = G.GridSpec(dims=dims, max_per_box=c, max_per_run=c,
                       query_chunk=chunk)
-    rpool, grid, order = G.build_resident(spec, pool, jnp.zeros(3),
-                                          jnp.asarray(box))
+    res = G.make_builder(spec, method="resident")(pool, jnp.zeros(3),
+                                                   jnp.asarray(box))
+    rpool, grid, order = res.pool, res.grid, res.order
     ch = {k: v for k, v in rpool.channels().items()
           if not k.startswith("extra.")}
     return pool, rpool, spec, grid, order, ch
@@ -113,8 +114,9 @@ def test_box_granular_statics_wake(rng):
     pool = agents.make_pool(n, position=jnp.asarray(xs, jnp.float32),
                             diameter=jnp.full((n,), 0.5))
     spec = G.GridSpec(dims=(g, g, g), max_per_box=n)
-    rpool, grid, order = G.build_resident(spec, pool, jnp.zeros(3),
-                                          jnp.asarray(2.0))
+    res = G.make_builder(spec, method="resident")(pool, jnp.zeros(3),
+                                                   jnp.asarray(2.0))
+    rpool, grid, order = res.pool, res.grid, res.order
     # quiescent except one agent (in resident order, pick the slot in the
     # box at cell (2,2,2))
     moved = jnp.zeros((n,), bool)
