@@ -1,68 +1,182 @@
-"""Paper Fig 5 (left): operation runtime breakdown.
+"""Per-phase step breakdown: fused vs unfused neighbor sweep (+ paper Fig 5).
 
-The paper reports agent ops at 76.3% (median), grid rebuild ~18%, sorting
-0.18–6.33%, setup/teardown ≤ 2.66%. We time the engine's phases separately
-(each jitted standalone) on the clustering workload and report shares.
+After PR 6 amortized the grid build, steady-state step cost at the top rungs
+is the neighbor sweeps: forces, each neighbor-using behavior, and statics
+each streamed the pool once per phase. The fused sweep
+(grid.resident_apply_fused, DESIGN.md §3.2) gathers each block's 9-run
+candidate set once — pruned to the union of the registered kernels' declared
+channel footprints — and evaluates every kernel against that single stream.
+
+This benchmark times each phase standalone (jitted, compile excluded,
+median µs) on a forces + SIR-infection workload (two registered kernels):
+
+  build_us               resident grid build (permutation + tables)
+  gather_us              candidate streaming alone: a reduce-only kernel
+                         with the union footprint (the memory floor any
+                         sweep pays at least once)
+  force_us               sequential single-kernel force sweep
+  behavior_us            sequential single-kernel infection sweep
+  statics_us             box-granular static-flag update (no sweep — the
+                         PR 3 design; kept pre-sweep because the flags gate
+                         the force query mask, see DESIGN.md §3.2)
+  integrate_us           displacement + clamp + write-back
+  commit_us              death-compaction permutation
+  fused_neighbor_us      ONE resident_apply_fused over both kernels
+  unfused_neighbor_us    force_us + behavior_us (the sequential schedule)
+
+derived.fusion_speedup = unfused_neighbor_us / fused_neighbor_us — the
+acceptance bar is >= 1.5x at >= 1M agents on the dev container. Records
+``BENCH_breakdown.json``; benchmarks/trend.py gates every per-size phase key
+(they are fixed-shape standalone timings — schedule-independent, unlike the
+capacity ladder's whole-step times).
+
+Env: ``BREAKDOWN_SIZES`` (comma list, default "65536,1048576" — the small
+size exists so CI's reduced run compares identity-keyed against the same
+committed record).
 """
 
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import EngineConfig, ForceParams, Simulation
-from repro.core import compaction, grid as G
-from repro.core.forces import make_force_pair_fn
+from repro.core import compaction, engine as engine_mod, forces as force_mod
+from repro.core import grid as G, statics as statics_mod
+from repro.core.behaviors import Infection, INFECTED
 
-from .common import emit, random_positions, time_fn
-
-N = 20_000
+from .common import emit, random_positions, time_fn, write_bench_json
 
 
-def run() -> None:
+def _gather_pair_fn(reads):
+    """Reduce-only kernel: touches every byte of the pruned stream, computes
+    nothing else (sums survive DCE; a no-op output would let XLA drop the
+    gathers entirely)."""
+
+    def pair_fn(q, nbr, valid, q_slot):
+        acc = jnp.zeros(valid.shape[0], jnp.float32)
+        for ch in reads:
+            x = nbr[ch].astype(jnp.float32)
+            m = valid if x.ndim == 2 else valid[..., None]
+            acc += jnp.sum(jnp.where(m, x, 0.0),
+                           axis=tuple(range(1, x.ndim)))
+        return {"g": acc}
+
+    return pair_fn
+
+
+def _one_size(n: int) -> dict:
     rng = np.random.default_rng(4)
-    side = 110.0
-    cfg = EngineConfig(capacity=N, domain_lo=(0, 0, 0), domain_hi=(side,) * 3,
+    # ~4 live agents per box at every size (domain scales with n)
+    side = float(np.ceil(4.0 * (n / 4.0) ** (1.0 / 3.0)))
+    cfg = EngineConfig(capacity=n, domain_lo=(0, 0, 0), domain_hi=(side,) * 3,
                        interaction_radius=4.0, dt=0.05, max_per_box=32,
                        query_chunk=4096,
                        force=ForceParams(max_displacement=0.5))
-    sim = Simulation(cfg, [])
-    pos = random_positions(rng, N, 2.0, side - 2.0)
-    st = sim.init_state(pos, diameter=np.full(N, 3.0, np.float32))
-    st = sim.step(st)
-    pool = st.pool
+    infection = Infection(radius=4.0, beta=0.3, recovery_time=40)
+    sim = Simulation(cfg, [infection])
+    pos = random_positions(rng, n, 2.0, side - 2.0)
+    types = np.zeros(n, np.int32)
+    types[: max(n // 100, 1)] = INFECTED
+    st = sim.init_state(pos, diameter=np.full(n, 3.0, np.float32),
+                        agent_type=types,
+                        extra_init={"infect_timer": np.full(n, 40, np.int32)})
     spec = sim.spec
     origin = jnp.zeros(3)
-    r = jnp.asarray(cfg.interaction_radius)
+    box = jnp.asarray(cfg.cell_size)
 
-    # resident build = grid index + the §4.2 sort + dead compaction in one
-    # permutation, so the paper's separate 'sorting' phase has no standalone
-    # cost on this engine; we report it folded into the build share.
+    # --- build (the resident permutation subsumes the paper's sorting) ---
     build_fn = G.make_builder(spec, method="resident")
-    build = jax.jit(lambda p: build_fn(p, origin, r))
-    us_build = time_fn(build, pool)
-    bres = build(pool)
+    build = jax.jit(lambda p: build_fn(p, origin, box))
+    us_build = time_fn(build, st.pool)
+    bres = build(st.pool)
     rpool, gs = bres.pool, bres.grid
-
-    channels = {k: v for k, v in rpool.channels().items()
-                if not k.startswith("extra.")}
-    pair = make_force_pair_fn(cfg.force)
+    channels = rpool.channels()
     alive = rpool.alive
-    forces = jax.jit(lambda g, ch: G.resident_apply(
-        spec, g, ch, alive, pair,
-        {"force": ((3,), jnp.float32), "force_nnz": ((), jnp.int32)}))
-    us_forces = time_fn(forces, gs, channels)
 
-    us_commit = time_fn(jax.jit(compaction.compact), pool)
+    # --- the two registered kernels (what make_iteration_core registers) ---
+    force_k, infect_k = engine_mod.registered_kernels(cfg, [infection])
+    reads = G.fused_reads([force_k, infect_k])
 
-    total = us_build + us_forces + us_commit
-    emit("fig5_breakdown_grid_build", us_build,
-         f"share={us_build / total:.1%} (paper median 18.0%; includes the "
-         f"resident reorder that subsumes sorting)")
-    emit("fig5_breakdown_agent_ops", us_forces,
-         f"share={us_forces / total:.1%} (paper median 76.3%)")
-    emit("fig5_breakdown_sorting", 0.0,
-         "folded into grid build (resident layout; paper 0.18-6.33%)")
-    emit("fig5_breakdown_commit", us_commit,
-         f"share={us_commit / total:.1%} (paper <=2.66%)")
+    # sequential per-phase sweeps (EngineConfig.fused_sweep=False schedule)
+    force_seq = jax.jit(lambda g, ch, m: G.resident_apply(
+        spec, g, ch, m, force_k.pair_fn, force_k.out_specs, cfg.query_chunk))
+    behav_seq = jax.jit(lambda g, ch, m: G.resident_apply(
+        spec, g, ch, m, infect_k.pair_fn, infect_k.out_specs,
+        cfg.query_chunk))
+    seq_channels = {k: v for k, v in channels.items()
+                    if not k.startswith("extra.")}
+    us_force = time_fn(force_seq, gs, seq_channels, alive)
+    us_behav = time_fn(behav_seq, gs, seq_channels, alive)
+
+    # fused: ONE candidate stream for both kernels, pruned to `reads`
+    fused = jax.jit(lambda g, ch, m: G.resident_apply_fused(
+        spec, g, ch, [force_k, infect_k], m, cfg.query_chunk))
+    us_fused = time_fn(fused, gs, channels, alive)
+
+    # gather floor: same stream, reduce-only kernel
+    gather_k = G.PairKernel("gather", _gather_pair_fn(reads),
+                            {"g": ((), jnp.float32)}, reads=reads)
+    gather = jax.jit(lambda g, ch, m: G.resident_apply_fused(
+        spec, g, ch, [gather_k], m, cfg.query_chunk))
+    us_gather = time_fn(gather, gs, channels, alive)
+
+    # statics flags (box-granular, pre-sweep) + integration + commit
+    us_statics = time_fn(
+        jax.jit(lambda p, g: statics_mod.update_static_flags(
+            p, spec, g, jnp.ones((), jnp.int32))), rpool, gs)
+    force_out = fused(gs, channels, alive)["force"]["force"]
+    dlo = jnp.asarray(cfg.domain_lo, jnp.float32)
+    dhi = jnp.asarray(cfg.domain_hi, jnp.float32)
+    integrate = jax.jit(lambda p, f, m: jnp.where(
+        m[:, None],
+        jnp.clip(p + force_mod.displacement(f, cfg.force, cfg.dt), dlo, dhi),
+        p))
+    us_integrate = time_fn(integrate, rpool.position, force_out, alive)
+    us_commit = time_fn(jax.jit(compaction.compact), rpool)
+
+    us_unfused = us_force + us_behav
+    speedup = us_unfused / max(us_fused, 1e-9)
+    emit(f"breakdown_n{n}_fused_neighbor", us_fused,
+         f"vs unfused {us_unfused:.0f}us -> {speedup:.2f}x "
+         f"(footprint {len(reads)}/{len(seq_channels)} channels)")
+    emit(f"breakdown_n{n}_build", us_build, "")
+
+    # paper Fig 5 shares (agent ops vs build vs commit), for continuity
+    total = us_build + us_fused + us_integrate + us_commit
+    emit(f"breakdown_n{n}_fig5_shares", total,
+         f"agent_ops={(us_fused + us_integrate) / total:.1%} "
+         f"(paper 76.3%) build={us_build / total:.1%} (paper 18%) "
+         f"commit={us_commit / total:.1%} (paper <=2.66%)")
+
+    return {
+        "n_agents": n,
+        "build_us": us_build,
+        "gather_us": us_gather,
+        "force_us": us_force,
+        "behavior_us": us_behav,
+        "statics_us": us_statics,
+        "integrate_us": us_integrate,
+        "commit_us": us_commit,
+        "fused_neighbor_us": us_fused,
+        "unfused_neighbor_us": us_unfused,
+        "fusion_speedup": speedup,
+        "channels_streamed_fused": len(reads),
+        "channels_streamed_unfused": len(seq_channels),
+        "footprint": list(reads),
+    }
+
+
+def run() -> None:
+    sizes = [int(s) for s in os.environ.get(
+        "BREAKDOWN_SIZES", "65536,1048576").split(",") if s]
+    records = [_one_size(n) for n in sizes]
+    write_bench_json("BENCH_breakdown.json", {
+        "records": records,
+        "kernels": ["force", "infection"],
+        "note": "standalone jitted phase timings (compile excluded); "
+                "fusion_speedup = unfused_neighbor_us / fused_neighbor_us",
+    })

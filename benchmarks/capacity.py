@@ -14,10 +14,13 @@ the paper-scale 10M mark, ≥2 capacity rungs beyond the previous 4.19M
 record). The pool starts at the seed size; every rung (pool capacity,
 max_per_run) is chosen by the ladder from the overflow provenance in
 StepStats. Records ``BENCH_capacity.json``: peak live count, the rung
-schedule, recompile count, and **per rung** the whole-step µs plus a
-standalone build-time split (the O(N) counting-sort resident build timed on
-its own, compile excluded) — the build keys are what benchmarks/trend.py
-gates, since the whole-step schedule depends on where rungs/recompiles land.
+schedule, recompile count, and **per rung** the whole-step µs plus
+standalone phase buckets timed on their own (compile excluded): ``build_us``
+(the O(N) counting-sort resident build), ``neighbor_us`` (the fused sweep
+over the step's registered kernels), ``commit_us`` (death compaction), and
+a ``behavior_other_us`` residual. The standalone keys are what
+benchmarks/trend.py gates, since the whole-step schedule depends on where
+rungs/recompiles land.
 
 Env overrides (CI smoke): ``CAPACITY_TARGET``, ``CAPACITY_SEED_AGENTS``,
 ``CAPACITY_MAX_STEPS``; ``CAPACITY_STEP_BUDGET_S`` (>0 fails the run when
@@ -36,7 +39,7 @@ import numpy as np
 
 from repro.core import (CapacityLadder, DtypePolicy, EngineConfig, LadderConfig,
                         make_pool)
-from repro.core import grid as grid_mod
+from repro.core import compaction, engine as engine_mod, grid as grid_mod
 from repro.core.behaviors import GrowDivide, RandomWalk
 
 from .common import emit, write_bench_json
@@ -59,13 +62,41 @@ def _measure_build_us(cfg: EngineConfig, pool) -> float:
     box = jnp.asarray(cfg.cell_size, jnp.float32)
     build = jax.jit(lambda p: grid_mod.make_builder(
         spec, method="resident", sort_impl=cfg.sort_impl)(p, origin, box))
-    jax.block_until_ready(build(pool))           # compile
+    return _time_warm(build, pool)
+
+
+def _time_warm(fn, *args) -> float:
+    jax.block_until_ready(fn(*args))             # compile
     ts = []
     for _ in range(3):
         t0 = time.perf_counter()
-        jax.block_until_ready(build(pool))
+        jax.block_until_ready(fn(*args))
         ts.append((time.perf_counter() - t0) * 1e6)
     return float(np.median(ts))
+
+
+def _measure_phases_us(cfg: EngineConfig, behaviors, pool) -> dict:
+    """Standalone jit-warm phase buckets at this rung (DESIGN.md §3.2):
+    ``neighbor_us`` the fused sweep over the step's registered kernels (0.0
+    when no kernels register — this growth scenario runs forces-off with
+    sweep-free behaviors), ``commit_us`` the death-compaction permutation.
+    Together with ``build_us`` these split ``step_other_us`` into buckets
+    that stay comparable across PRs regardless of the rung schedule."""
+    spec = cfg.grid_spec
+    origin = jnp.asarray(cfg.domain_lo, jnp.float32)
+    box = jnp.asarray(cfg.cell_size, jnp.float32)
+    kernels = engine_mod.registered_kernels(cfg, behaviors)
+    neighbor_us = 0.0
+    if kernels:
+        res = jax.jit(lambda p: grid_mod.make_builder(
+            spec, method="resident", sort_impl=cfg.sort_impl)(
+                p, origin, box))(pool)
+        channels = res.pool.channels()
+        sweep = jax.jit(lambda ch, m: grid_mod.resident_apply_fused(
+            spec, res.grid, ch, kernels, m, cfg.query_chunk))
+        neighbor_us = _time_warm(sweep, channels, res.pool.alive)
+    commit_us = _time_warm(jax.jit(compaction.compact), pool)
+    return {"neighbor_us": neighbor_us, "commit_us": commit_us}
 
 
 def run() -> None:
@@ -90,6 +121,7 @@ def run() -> None:
 
     steps = []
     build_us_by_cap = {}
+    phases_by_cap = {}
     peak = n_seed
     t_total0 = time.perf_counter()
     for i in range(max_steps):
@@ -103,6 +135,8 @@ def run() -> None:
         if ladder.config.capacity not in build_us_by_cap:
             build_us_by_cap[ladder.config.capacity] = _measure_build_us(
                 ladder.config, state.pool)
+            phases_by_cap[ladder.config.capacity] = _measure_phases_us(
+                ladder.config, behaviors, state.pool)
         if n_live >= target:
             break
     total_s = time.perf_counter() - t_total0
@@ -110,11 +144,16 @@ def run() -> None:
     # right after the grow, on a half-empty pool)
     build_us_by_cap[ladder.config.capacity] = _measure_build_us(
         ladder.config, state.pool)
+    phases_by_cap[ladder.config.capacity] = _measure_phases_us(
+        ladder.config, behaviors, state.pool)
 
     # µs/step per rung: median over the steps run at each capacity, skipping
     # each rung's first step (it pays that rung's compile); build_us is the
-    # standalone resident-build time at that rung, step_other_us the
-    # remainder (behaviors + compaction + queries)
+    # standalone resident-build time at that rung, and step_other_us —
+    # everything but the build — is split into the standalone phase buckets
+    # (neighbor_us: the fused sweep over registered kernels, commit_us: the
+    # death compaction) plus a behavior_other_us residual (behaviors +
+    # integration + bookkeeping), so the rungs stay comparable across PRs
     per_rung = []
     for cap in sorted({s["capacity"] for s in steps}):
         at = [s["us"] for s in steps if s["capacity"] == cap]
@@ -122,13 +161,22 @@ def run() -> None:
         n_at = max(s["n_live"] for s in steps if s["capacity"] == cap)
         step_us = float(np.median(warm))
         build_us = build_us_by_cap[cap]
+        phases = phases_by_cap[cap]
+        other_us = max(step_us - build_us, 0.0)
         per_rung.append({"capacity": cap, "steps": len(at),
                          "max_n_live": n_at,
                          "us_per_step": step_us,
                          "build_us": build_us,
-                         "step_other_us": max(step_us - build_us, 0.0)})
+                         "neighbor_us": phases["neighbor_us"],
+                         "commit_us": phases["commit_us"],
+                         "behavior_other_us": max(
+                             other_us - phases["neighbor_us"]
+                             - phases["commit_us"], 0.0),
+                         "step_other_us": other_us})
         emit(f"capacity_rung_c{cap}", step_us, f"n_live<={n_at}")
         emit(f"capacity_build_c{cap}", build_us, f"n_live<={n_at}")
+        emit(f"capacity_commit_c{cap}", phases["commit_us"],
+             f"n_live<={n_at}")
 
     reached = peak >= target
     emit("capacity_peak", total_s * 1e6,

@@ -47,13 +47,18 @@ from typing import Dict, List
 
 # Files under the gate. BENCH_capacity.json joins with a key filter: its
 # whole-step times depend on where rungs/recompiles land in the growth
-# schedule (not apples-to-apples across runs), but the per-rung ``build_us``
-# entries are standalone jitted-build timings at a fixed capacity — those
-# gate the O(N) counting-sort build path.
+# schedule (not apples-to-apples across runs), but the per-rung standalone
+# phase timings (``build_us`` — the O(N) counting-sort build — plus the
+# ``neighbor_us``/``commit_us`` buckets split out of step_other_us) are
+# jit-warm measurements at a fixed capacity, comparable across PRs.
+# BENCH_breakdown.json needs no filter: every ``*_us`` leaf is a standalone
+# fixed-shape phase timing keyed by n_agents — this is where a fused-sweep
+# regression (fused_neighbor_us) fails the gate.
 GATED_FILES = ("BENCH_neighbor.json", "BENCH_scaling.json",
                "BENCH_statics.json", "BENCH_distributed.json",
-               "BENCH_capacity.json")
-_FILE_KEY_FILTER = {"BENCH_capacity.json": lambda path: "build_us" in path}
+               "BENCH_capacity.json", "BENCH_breakdown.json")
+_FILE_KEY_FILTER = {"BENCH_capacity.json": lambda path: any(
+    k in path for k in ("build_us", "neighbor_us", "commit_us"))}
 
 _TIMING_SUFFIXES = ("_us", "us_per_step", "ms_per_step")
 _TIMING_PARENTS = ("search_us", "build_us", "us_per_step")

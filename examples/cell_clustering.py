@@ -23,17 +23,28 @@ def mean_pairwise(p, k=512):
     return d[np.triu_indices(len(q), 1)].mean()
 
 
-def main():
-    rng = np.random.default_rng(4)
-    n = int(os.environ.get("EXAMPLE_N", 4_000))        # CI smoke caps size
-    epochs = int(os.environ.get("EXAMPLE_EPOCHS", 6))
-    side = 64.0
-    cfg = EngineConfig(
-        capacity=n, domain_lo=(0, 0, 0), domain_hi=(side,) * 3,
+N_AGENTS = int(os.environ.get("EXAMPLE_N", 4_000))     # CI smoke caps size
+SIDE = 64.0
+
+
+def make_config() -> EngineConfig:
+    return EngineConfig(
+        capacity=N_AGENTS, domain_lo=(0, 0, 0), domain_hi=(SIDE,) * 3,
         interaction_radius=3.0, use_forces=False, query_chunk=4096,
         diffusion=DiffusionSpec(dims=(32, 32, 32), coefficient=0.5,
                                 decay=0.01, voxel=2.0))
-    sim = Simulation(cfg, [Secretion(rate=2.0), Chemotaxis(speed=0.35)])
+
+
+def behaviors():
+    return [Secretion(rate=2.0), Chemotaxis(speed=0.35)]
+
+
+def main():
+    rng = np.random.default_rng(4)
+    n = N_AGENTS
+    epochs = int(os.environ.get("EXAMPLE_EPOCHS", 6))
+    side = SIDE
+    sim = Simulation(make_config(), behaviors())
     pos = rng.uniform(4, side - 4, (n, 3)).astype(np.float32)
     state = sim.init_state(pos, diameter=np.full(n, 1.0, np.float32))
     p0 = np.asarray(state.pool.position[:n])

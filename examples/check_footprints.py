@@ -1,0 +1,66 @@
+"""Assert each example's realized neighbor-sweep channel footprint.
+
+The fused sweep (DESIGN.md §3.2) streams only the union of the registered
+kernels' declared channel reads. This script pins down, per example, exactly
+which channels that union contains — so a behavior silently growing its
+footprint (and the per-step memory traffic of *every* example that uses it)
+fails CI instead of landing unnoticed. It also runs
+``engine.check_kernel_footprints`` on each example: every registered kernel
+is traced in isolation with ONLY its declared channels, catching reads that
+today ride along on another kernel's union contribution.
+
+    PYTHONPATH=src python examples/check_footprints.py
+"""
+
+import importlib
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from repro.core import engine as engine_mod
+from repro.core.forces import FORCE_READS
+
+# module name -> expected realized footprint (order = first-appearance order
+# of fused_reads: force kernel first when forces are on, then behaviors in
+# registration order). An empty tuple means the example runs no neighbor
+# sweep at all (no forces, no neighbor-using behaviors).
+EXPECTED = {
+    # forces only: GrowDivide/NeuriteGrowth register no neighbor kernels
+    "quickstart": FORCE_READS,
+    "oncology": FORCE_READS,
+    "neuroscience": FORCE_READS,
+    # SIR: Infection's kernel, and *no* diameter — infection never streams
+    # mechanical channels
+    "epidemiology": ("position", "alive", "agent_type"),
+    # diffusion-driven: Secretion/Chemotaxis read the substrate, not
+    # neighbors — the step runs zero neighbor sweeps
+    "cell_clustering": (),
+}
+
+
+def main() -> int:
+    failed = []
+    for name, expected in EXPECTED.items():
+        mod = importlib.import_module(name)
+        cfg, behaviors = mod.make_config(), mod.behaviors()
+        got = engine_mod.realized_footprint(cfg, behaviors)
+        status = "ok"
+        if got != tuple(expected):
+            status = f"MISMATCH (expected {tuple(expected)})"
+            failed.append(name)
+        print(f"{name:18s} footprint={got} {status}")
+        try:
+            engine_mod.check_kernel_footprints(cfg, behaviors)
+        except Exception as e:          # noqa: BLE001 - report and fail
+            print(f"{name:18s} footprint check FAILED: {e}")
+            failed.append(name)
+    if failed:
+        print(f"FAILED: {sorted(set(failed))}", file=sys.stderr)
+        return 1
+    print("OK: all example footprints match their pinned channel sets")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

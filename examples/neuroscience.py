@@ -16,17 +16,24 @@ from repro.core import EngineConfig, ForceParams, Simulation
 from repro.core.behaviors import NeuriteGrowth, GROWTH_CONE
 
 
+def make_config() -> EngineConfig:
+    return EngineConfig(capacity=16384, domain_lo=(0, 0, 0),
+                        domain_hi=(120, 120, 120), interaction_radius=4.0,
+                        dt=0.5, detect_static=True, sort_frequency=20,
+                        max_per_box=64,
+                        force=ForceParams(max_displacement=0.2, move_eps=1e-4))
+
+
+def behaviors():
+    return [NeuriteGrowth(speed=0.8, noise=0.2,
+                          bifurcation_prob=0.01,
+                          segment_every=2.0)]
+
+
 def main():
     rng = np.random.default_rng(2)
     n_cones = 64
-    cfg = EngineConfig(capacity=16384, domain_lo=(0, 0, 0),
-                       domain_hi=(120, 120, 120), interaction_radius=4.0,
-                       dt=0.5, detect_static=True, sort_frequency=20,
-                       max_per_box=64,
-                       force=ForceParams(max_displacement=0.2, move_eps=1e-4))
-    sim = Simulation(cfg, [NeuriteGrowth(speed=0.8, noise=0.2,
-                                         bifurcation_prob=0.01,
-                                         segment_every=2.0)])
+    sim = Simulation(make_config(), behaviors())
     pos = rng.uniform(55, 65, (n_cones, 3)).astype(np.float32)
     d0 = rng.standard_normal((n_cones, 3)).astype(np.float32)
     d0 /= np.linalg.norm(d0, axis=1, keepdims=True)

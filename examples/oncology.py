@@ -20,17 +20,27 @@ from repro.core import CapacityLadder, EngineConfig, ForceParams
 from repro.core.behaviors import GrowDivide, RandomDeath, RandomWalk
 
 
+N_SEED = 256
+
+
+def make_config() -> EngineConfig:
+    return EngineConfig(capacity=N_SEED,         # seed-sized: the ladder grows it
+                        domain_lo=(0, 0, 0),
+                        domain_hi=(160, 160, 160), interaction_radius=14.0,
+                        dt=0.2, sort_frequency=10, max_per_box=160,
+                        force=ForceParams(max_displacement=1.0))
+
+
+def behaviors():
+    return [GrowDivide(rate=0.7, threshold_diameter=12.0),
+            RandomWalk(sigma=0.1),
+            RandomDeath(rate=0.012)]
+
+
 def main():
     rng = np.random.default_rng(3)
-    n_seed = 256
-    cfg = EngineConfig(capacity=n_seed,          # seed-sized: the ladder grows it
-                       domain_lo=(0, 0, 0),
-                       domain_hi=(160, 160, 160), interaction_radius=14.0,
-                       dt=0.2, sort_frequency=10, max_per_box=160,
-                       force=ForceParams(max_displacement=1.0))
-    ladder = CapacityLadder(cfg, [GrowDivide(rate=0.7, threshold_diameter=12.0),
-                                  RandomWalk(sigma=0.1),
-                                  RandomDeath(rate=0.012)])
+    n_seed = N_SEED
+    ladder = CapacityLadder(make_config(), behaviors())
     pos = rng.uniform(55, 105, (n_seed, 3)).astype(np.float32)
     state = ladder.init_state(pos, diameter=np.full(n_seed, 9.0, np.float32))
     print(f"{'iter':>5} {'n_live':>7} {'births':>7} {'deaths':>7} {'capacity':>9}")

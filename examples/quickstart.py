@@ -14,9 +14,8 @@ from repro.core import EngineConfig, ForceParams, Simulation
 from repro.core.behaviors import GrowDivide
 
 
-def main():
-    rng = np.random.default_rng(0)
-    cfg = EngineConfig(
+def make_config() -> EngineConfig:
+    return EngineConfig(
         capacity=32768,
         domain_lo=(0, 0, 0), domain_hi=(120, 120, 120),
         interaction_radius=14.0,
@@ -25,7 +24,15 @@ def main():
         max_per_box=64,
         force=ForceParams(max_displacement=1.0),
     )
-    sim = Simulation(cfg, [GrowDivide(rate=1.0, threshold_diameter=12.0)])
+
+
+def behaviors():
+    return [GrowDivide(rate=1.0, threshold_diameter=12.0)]
+
+
+def main():
+    rng = np.random.default_rng(0)
+    sim = Simulation(make_config(), behaviors())
     pos = rng.uniform(50, 70, (128, 3)).astype(np.float32)
     state = sim.init_state(pos, diameter=np.full(128, 8.0, np.float32))
 

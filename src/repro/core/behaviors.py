@@ -40,6 +40,7 @@ import jax.numpy as jnp
 
 from . import rand
 from .agents import AgentPool
+from .grid import PairKernel
 
 
 @dataclasses.dataclass
@@ -53,13 +54,29 @@ class BehaviorEffects:
 
 
 class Behavior:
-    """Base class. Subclasses override extra_specs() and __call__()."""
+    """Base class. Subclasses override extra_specs() and __call__().
+
+    Neighbor-using behaviors additionally override :meth:`neighbor_kernels`
+    to declare their pair kernels with an explicit channel footprint
+    (grid.PairKernel). The engine registers every declared kernel into ONE
+    fused sweep per step (together with the collision force) and hands the
+    results back through ``ctx.neighbor_results[kernel.name]`` — the 9 z-runs
+    are gathered once per block for all of them, pruned to the union of
+    declared footprints (DESIGN.md §3.2). ``__call__`` should consume
+    ``ctx.neighbor_results`` when its kernel name is present and fall back to
+    ``ctx.neighbor_apply`` otherwise (sequential path: non-uniform-grid
+    environments, or ``EngineConfig.fused_sweep=False``).
+    """
 
     name: str = "behavior"
 
     def extra_specs(self) -> Dict[str, tuple]:
         """Channels this behavior needs: name → (shape_suffix, dtype, fill)."""
         return {}
+
+    def neighbor_kernels(self) -> Tuple[PairKernel, ...]:
+        """Pair kernels to register into the step's fused neighbor sweep."""
+        return ()
 
     def __call__(self, ctx, pool: AgentPool, rng: jax.Array) -> BehaviorEffects:
         raise NotImplementedError
@@ -149,7 +166,7 @@ class Infection(Behavior):
     def extra_specs(self):
         return {"infect_timer": ((), jnp.int32, 0)}
 
-    def __call__(self, ctx, pool: AgentPool, rng: jax.Array) -> BehaviorEffects:
+    def _pair_fn(self):
         r = self.radius
 
         def pair_fn(q, nbr, valid, q_slot):
@@ -157,9 +174,22 @@ class Infection(Behavior):
             dist2 = jnp.sum(d * d, axis=-1)
             exposed = valid & nbr["alive"] & (nbr["agent_type"] == INFECTED) \
                 & (dist2 <= r * r)
+            # OR encoded as an additive count across the 9 streamed runs;
+            # the consumer thresholds it (resident_apply output contract)
             return {"exposed": jnp.any(exposed, axis=-1).astype(jnp.int32)}
 
-        res = ctx.neighbor_apply(pair_fn, {"exposed": ((), jnp.int32)})
+        return pair_fn
+
+    def neighbor_kernels(self):
+        return (PairKernel(name=self.name, pair_fn=self._pair_fn(),
+                           out_specs={"exposed": ((), jnp.int32)},
+                           reads=("position", "alive", "agent_type")),)
+
+    def __call__(self, ctx, pool: AgentPool, rng: jax.Array) -> BehaviorEffects:
+        res = ctx.neighbor_results.get(self.name)
+        if res is None:   # sequential path: its own sweep over the same
+            res = ctx.neighbor_apply(self._pair_fn(),   # pre-force snapshot
+                                     {"exposed": ((), jnp.int32)})
         exposed = res["exposed"] > 0
         u = rand.uniform_rows(rng, pool.capacity)
         newly = ctx.owned & (pool.agent_type == SUSCEPTIBLE) & exposed \

@@ -55,6 +55,15 @@ class EngineConfig:
     interaction_radius: float
     dt: float = 1.0
     use_forces: bool = True
+    fused_sweep: bool = True               # evaluate forces + every declared
+                                           # behavior kernel against ONE
+                                           # pruned candidate stream per
+                                           # block (grid.resident_apply_fused;
+                                           # uniform_grid only — other
+                                           # environments run the sequential
+                                           # per-phase sweeps). False keeps
+                                           # the sequential path (parity
+                                           # tests, breakdown benchmark).
     detect_static: bool = False            # paper detect_static_agents
     sort_frequency: int = 0                # paper Fig 12 (0 = never sort).
                                            # Resident environments
@@ -152,6 +161,11 @@ class StepContext:
     neighbor_apply: Callable                 # (pair_fn, out_specs) -> dict
     substance_gradient: Callable             # positions -> (N, 3)
     substance_value: Callable                # positions -> (N,)
+    neighbor_results: Dict[str, Dict[str, jnp.ndarray]] = dataclasses.field(
+        default_factory=dict)                # fused-sweep outputs, keyed by
+                                             # PairKernel.name (empty on the
+                                             # sequential path — behaviors
+                                             # fall back to neighbor_apply)
 
 
 # -- environment dispatch (module-level: shared by both engines) -------------
@@ -257,6 +271,73 @@ def make_neighbor_apply(cfg: EngineConfig, spec: grid_mod.GridSpec, grid_env,
     return apply
 
 
+# -- fused-sweep introspection (CI examples-smoke; DESIGN.md §3.2) -----------
+
+def registered_kernels(cfg: EngineConfig, behaviors: Sequence[Behavior]
+                       ) -> List[grid_mod.PairKernel]:
+    """The static PairKernel descriptors make_iteration_core registers
+    (masks unresolved — they are per-step values)."""
+    kernels: List[grid_mod.PairKernel] = []
+    if cfg.use_forces:
+        adhesion = (jnp.asarray(cfg.adhesion, jnp.float32)
+                    if cfg.adhesion is not None else None)
+        kernels.append(grid_mod.PairKernel(
+            "force", force_mod.make_force_pair_fn(cfg.force, adhesion),
+            force_mod.FORCE_OUT_SPECS, reads=force_mod.FORCE_READS))
+    for b in behaviors:
+        kernels.extend(b.neighbor_kernels())
+    return kernels
+
+
+def realized_footprint(cfg: EngineConfig, behaviors: Sequence[Behavior]
+                       ) -> Tuple[str, ...]:
+    """Union of channels the step's fused sweep will actually stream."""
+    return grid_mod.fused_reads(registered_kernels(cfg, behaviors))
+
+
+def check_kernel_footprints(cfg: EngineConfig, behaviors: Sequence[Behavior],
+                            block: int = 4, width: int = 8
+                            ) -> Tuple[str, ...]:
+    """Trace every registered kernel against ONLY its declared footprint.
+
+    In a real fused sweep an undeclared read can be masked by another
+    kernel's declaration landing the channel in the gathered union; tracing
+    each pair_fn in isolation (jax.eval_shape — no FLOPs) makes it a loud
+    KeyError regardless. Also validates declared reads and outputs against
+    the pool layout. Returns the realized footprint. CI's examples-smoke job
+    runs this for every example (examples/check_footprints.py)."""
+    pool = stage_pool(max(block, 1), behaviors,
+                      jnp.zeros((1, 3), jnp.float32), policy=cfg.dtypes)
+    channels = pool.channels()
+    for k in registered_kernels(cfg, behaviors):
+        missing = [ch for ch in k.reads if ch not in channels]
+        if missing:
+            raise KeyError(
+                f"kernel {k.name!r} declares channels the pool does not "
+                f"have: {missing} (pool has {sorted(channels)})")
+        # the sweep always slices position for run_bounds, declared or not
+        q_names = dict.fromkeys(("position",) + tuple(k.reads))
+        q = {ch: jax.ShapeDtypeStruct((block,) + channels[ch].shape[1:],
+                                      channels[ch].dtype) for ch in q_names}
+        nbr = {ch: jax.ShapeDtypeStruct(
+            (block, width) + channels[ch].shape[1:], channels[ch].dtype)
+            for ch in k.reads}
+        valid = jax.ShapeDtypeStruct((block, width), jnp.bool_)
+        rows = jax.ShapeDtypeStruct((block,), jnp.int32)
+        try:
+            out = jax.eval_shape(k.pair_fn, q, nbr, valid, rows)
+        except KeyError as e:
+            raise KeyError(
+                f"kernel {k.name!r} reads channel {e} it did not declare — "
+                f"add it to PairKernel.reads (declared: {k.reads})") from None
+        undeclared_out = sorted(set(out) - set(k.out_specs))
+        if undeclared_out:
+            raise KeyError(
+                f"kernel {k.name!r} returns outputs {undeclared_out} "
+                f"missing from its out_specs {sorted(k.out_specs)}")
+    return realized_footprint(cfg, behaviors)
+
+
 # -- the iteration core ------------------------------------------------------
 
 def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
@@ -292,6 +373,20 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
                          "environment (the kernel consumes its resident "
                          "grid tables)")
     behaviors = list(behaviors)
+    # fused sweep registry (DESIGN.md §3.2): every behavior-declared pair
+    # kernel joins the force kernel in ONE resident sweep per step; names key
+    # the ctx.neighbor_results handoff, so they must be unique ("force" is
+    # the engine's own kernel)
+    behavior_kernels = []
+    for b in behaviors:
+        behavior_kernels.extend(b.neighbor_kernels())
+    knames = [k.name for k in behavior_kernels]
+    if len(set(knames)) != len(knames) or "force" in knames:
+        raise ValueError(
+            f"behavior neighbor_kernels() names must be unique and must not "
+            f"shadow the engine's 'force' kernel, got {knames} — give each "
+            f"behavior instance a distinct .name")
+    fused = cfg.fused_sweep and cfg.environment == "uniform_grid"
     spec = cfg.grid_spec
     origin = jnp.asarray(cfg.domain_lo, jnp.float32)
     dlo = jnp.asarray(cfg.domain_lo, jnp.float32)
@@ -395,14 +490,57 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
         pos0 = pool.position
         dia0 = pool.diameter
 
-        # ---------------- agent ops: forces ----------------
+        # ---------------- agent ops: fused neighbor sweep ----------------
+        # Forces and every behavior-declared pair kernel evaluate against ONE
+        # candidate stream per block, pruned to the union of their declared
+        # channel footprints (grid.resident_apply_fused). Fusing is a pure
+        # scheduling change: the sequential path's behavior sweeps read the
+        # same pre-force channel snapshot (the nbr_apply closure captures
+        # ``channels`` before integration), so per-kernel results are
+        # bit-exact vs the per-phase sweeps (tests/test_fused.py).
         active = None
         if cfg.use_forces:
             if cfg.detect_static:
                 active = owned_alive & ~pool.static
             else:
                 active = owned_alive
-            if cfg.force_impl == "pallas":
+        nbr_results: Dict[str, Dict[str, jnp.ndarray]] = {}
+        if fused:
+            kernels = []
+            if cfg.use_forces:
+                kernels.append(grid_mod.PairKernel(
+                    "force", force_pair, force_mod.FORCE_OUT_SPECS,
+                    reads=force_mod.FORCE_READS, query_mask=active))
+            kernels.extend(behavior_kernels)
+            if kernels:
+                # extra.* channels join the gatherable set here — a kernel
+                # that declares them streams them; nothing else does
+                channels_full = pool.channels()
+                if cfg.use_forces and cfg.force_impl == "pallas":
+                    # K1 stays a single in-kernel pass for the force; the
+                    # remaining kernels share one pruned XLA sweep over the
+                    # same grid tables (kernels/ops.fused_resident_sweep)
+                    from ..kernels import ops as kops
+                    nbr_results, ovf = kops.fused_resident_sweep(
+                        spec, grid_env, channels_full, kernels,
+                        default_mask=owned_alive, origin=origin,
+                        box_size=box_size, k_rep=cfg.force.k_rep,
+                        adhesion=cfg.adhesion,
+                        adhesion_band=cfg.force.adhesion_band,
+                        chunk=cfg.query_chunk, pvary_axes=pvary_axes)
+                    box_overflow = jnp.maximum(box_overflow,
+                                               ovf.astype(jnp.int32))
+                else:
+                    nbr_results = grid_mod.resident_apply_fused(
+                        spec, grid_env, channels_full, kernels,
+                        default_mask=owned_alive, chunk=cfg.query_chunk,
+                        pvary_axes=pvary_axes)
+
+        # ---------------- agent ops: forces ----------------
+        if cfg.use_forces:
+            if "force" in nbr_results:
+                res = nbr_results["force"]
+            elif cfg.force_impl == "pallas":
                 # K1 over the resident layout: the kernel consumes the
                 # step's grid tables directly (no sort/unsort) and skips
                 # fully-static row blocks (kernels/ops.py)
@@ -420,9 +558,7 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
                                            ovf.astype(jnp.int32))
                 res = {"force": f, "force_nnz": nnz}
             else:
-                res = nbr_apply(force_pair,
-                                {"force": ((3,), jnp.float32),
-                                 "force_nnz": ((), jnp.int32)},
+                res = nbr_apply(force_pair, force_mod.FORCE_OUT_SPECS,
                                 query_mask=active)
             dx = force_mod.displacement(res["force"], cfg.force, cfg.dt)
             new_pos = jnp.clip(pool.position + dx, dlo, dhi)
@@ -436,6 +572,7 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
         ctx = StepContext(
             config=cfg, dt=cfg.dt, domain_lo=dlo, domain_hi=dhi,
             iteration=it, owned=owned_alive, neighbor_apply=nbr_apply,
+            neighbor_results=nbr_results,
             substance_gradient=(
                 (lambda p: diff_ops.gradient(conc, p))
                 if cfg.diffusion else (lambda p: jnp.zeros_like(p))),

@@ -72,6 +72,14 @@ def pair_force(q_pos: jnp.ndarray, q_dia: jnp.ndarray, q_type: jnp.ndarray,
     return force
 
 
+# Channel footprint of the force pair kernel (grid.PairKernel.reads): the
+# fused sweep prunes its single gather to the union of registered footprints,
+# so a forces-only run streams exactly these four channels and nothing else.
+FORCE_READS = ("position", "diameter", "agent_type", "alive")
+FORCE_OUT_SPECS = {"force": ((3,), jnp.float32),
+                   "force_nnz": ((), jnp.int32)}
+
+
 def make_force_pair_fn(params: ForceParams, adhesion: jnp.ndarray | None = None):
     """pair_fn for grid.neighbor_apply computing (force, nnz count) per agent."""
 

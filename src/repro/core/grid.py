@@ -42,7 +42,7 @@ from __future__ import annotations
 import dataclasses
 import inspect
 import warnings
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -676,6 +676,155 @@ def resident_apply(spec: GridSpec,
             val = jnp.where(qmask.reshape((b,) + (1,) * (val.ndim - 1)), val, 0)
             new_outs[name] = jax.lax.dynamic_update_slice_in_dim(
                 outs[name], val, sl, axis=0)
+        return new_outs
+
+    return jax.lax.fori_loop(0, n_blk, body, outs)
+
+
+@dataclasses.dataclass(frozen=True)
+class PairKernel:
+    """One pair kernel registered into a fused resident sweep (DESIGN.md §3.2).
+
+    name:      unique registry key; the fused sweep returns its outputs under
+               ``results[name]``.
+    pair_fn:   ``(q, nbr, valid, q_slot) -> dict`` with the same contract as
+               :func:`resident_apply` — outputs must be additive across
+               candidate-axis splits.
+    out_specs: output name → (shape_suffix, dtype), per kernel.
+    reads:     the channel *footprint* — every pool channel the pair_fn reads
+               on either the query or the neighbor side (``extra.*`` names
+               included). The sweep gathers exactly the union of all
+               registered footprints, so an undeclared read fails loudly at
+               trace time (KeyError) instead of silently streaming the whole
+               SoA.
+    query_mask: per-kernel query rows (None → the sweep's default mask).
+               Outputs are zero outside the kernel's own mask even when a
+               block was visited for another kernel's sake.
+    """
+    name: str
+    pair_fn: Callable
+    out_specs: Dict[str, Tuple[Tuple[int, ...], Any]]
+    reads: Tuple[str, ...]
+    query_mask: Optional[jnp.ndarray] = None
+
+
+def fused_reads(kernels: Sequence["PairKernel"]) -> Tuple[str, ...]:
+    """Union of the kernels' channel footprints, first-appearance order."""
+    seen, order = set(), []
+    for k in kernels:
+        for ch in k.reads:
+            if ch not in seen:
+                seen.add(ch)
+                order.append(ch)
+    return tuple(order)
+
+
+def resident_apply_fused(spec: GridSpec,
+                         grid: GridState,
+                         channels: Dict[str, jnp.ndarray],
+                         kernels: Sequence[PairKernel],
+                         default_mask: jnp.ndarray,
+                         chunk: Optional[int] = None,
+                         pvary_axes: Tuple[str, ...] = (),
+                         ) -> Dict[str, Dict[str, jnp.ndarray]]:
+    """Multi-kernel :func:`resident_apply`: ONE candidate stream per block.
+
+    The single-kernel loop re-gathers the 9 z-runs once per phase (forces,
+    each neighbor behavior, ...). Here every registered :class:`PairKernel`
+    is evaluated against the *same* per-run gather, and that gather is pruned
+    to the union of the declared footprints — an SIR run never streams
+    ``diameter``, a forces-only run never streams infection timers. Peak
+    per-block candidate memory drops from ``phases × B×R×|channels|`` streams
+    to ``1 × B×R×|union reads|``, and the pass count over the pool from one
+    per phase to one total.
+
+    Parity vs sequential single-kernel sweeps (tests/test_fused.py):
+
+      * The block list is driven by the OR of the kernels' query masks. A
+        block visited by both paths sees the identical slice offset, run
+        bounds, gather and run accumulation order, so each kernel's outputs
+        on its own mask rows are **bit-exact** vs its sequential sweep.
+      * A block visited only for another kernel's sake writes zeros for this
+        kernel (its mask slice is all-False there) — identical to the
+        sequential path never visiting it.
+
+    Returns ``{kernel.name: {out_name: (C, ...) array}}``.
+    """
+    if not kernels:
+        return {}
+    names = [k.name for k in kernels]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate PairKernel names: {names} — give each "
+                         f"registered kernel (behavior) a unique name")
+    reads = fused_reads(kernels)
+    missing = [ch for ch in reads if ch not in channels]
+    if missing:
+        raise KeyError(f"PairKernel footprint names channels not in the pool: "
+                       f"{missing} (have {sorted(channels)})")
+    c = channels["position"].shape[0]
+    b = min(chunk if chunk is not None else spec.query_chunk, c)
+    r_cap = spec.run_capacity
+    masks = [k.query_mask if k.query_mask is not None else default_mask
+             for k in kernels]
+    union_mask = masks[0]
+    for m in masks[1:]:
+        union_mask = union_mask | m
+    blk_idx, n_blk = compaction.active_block_list(union_mask, b)
+    gather_ch = {ch: channels[ch] for ch in reads}      # the pruned stream
+    q_src = dict(gather_ch)
+    q_src.setdefault("position", channels["position"])  # run_bounds needs it
+    lane = jnp.arange(r_cap, dtype=jnp.int32)
+
+    outs = {k.name: {name: jnp.zeros((c, *sfx), dt)
+                     for name, (sfx, dt) in k.out_specs.items()}
+            for k in kernels}
+    if pvary_axes:   # under shard_map: mark the carry varying on those axes
+        outs = {kn: {n: _pcast_varying(v, pvary_axes) for n, v in o.items()}
+                for kn, o in outs.items()}
+
+    def body(i, outs):
+        # clamp the window so a trailing partial block stays in range; overlap
+        # rows recompute identical values (pure per-row function of channels)
+        sl = jnp.minimum(blk_idx[i] * b, c - b)
+        rows = sl + jnp.arange(b, dtype=jnp.int32)                       # (B,)
+        q = {ch: jax.lax.dynamic_slice_in_dim(v, sl, b, axis=0)
+             for ch, v in q_src.items()}
+        kmasks = [jax.lax.dynamic_slice_in_dim(m, sl, b, axis=0)
+                  for m in masks]
+        s, n = run_bounds(spec, grid, q["position"])                     # (B,9)
+        n = jnp.minimum(n, r_cap)
+
+        def run(j, accs):
+            pos = s[:, j, None] + lane                                   # (B,R)
+            valid = lane[None, :] < n[:, j, None]
+            valid &= pos != rows[:, None]          # resident: position == slot
+            pos = jnp.where(valid, pos, 0)
+            nbr = {ch: v[pos] for ch, v in gather_ch.items()}  # ONE gather
+            new = {}
+            for k in kernels:
+                res = k.pair_fn(q, nbr, valid, rows)
+                acc = accs[k.name]
+                new[k.name] = {
+                    name: acc[name] + res[name].astype(acc[name].dtype)
+                    if name in res else acc[name] for name in acc}
+            return new
+
+        acc0 = {k.name: {name: jnp.zeros((b, *sfx), dt)
+                         for name, (sfx, dt) in k.out_specs.items()}
+                for k in kernels}
+        if pvary_axes:   # inner carry must match the varying results it sums
+            acc0 = {kn: {n_: _pcast_varying(v, pvary_axes)
+                         for n_, v in o.items()} for kn, o in acc0.items()}
+        accs = jax.lax.fori_loop(0, 9, run, acc0)
+        new_outs = {}
+        for k, km in zip(kernels, kmasks):
+            ko = {}
+            for name, val in accs[k.name].items():
+                val = jnp.where(
+                    km.reshape((b,) + (1,) * (val.ndim - 1)), val, 0)
+                ko[name] = jax.lax.dynamic_update_slice_in_dim(
+                    outs[k.name][name], val, sl, axis=0)
+            new_outs[k.name] = ko
         return new_outs
 
     return jax.lax.fori_loop(0, n_blk, body, outs)

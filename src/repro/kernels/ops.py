@@ -170,6 +170,53 @@ def collision_force_resident(position: jnp.ndarray, diameter: jnp.ndarray,
     return force, nnz, ovf
 
 
+def fused_resident_sweep(spec, grid_env, channels, kernels, default_mask,
+                         *, origin: jnp.ndarray, box_size: jnp.ndarray,
+                         k_rep: float = 2.0,
+                         adhesion: Optional[Tuple[Tuple[float, ...], ...]] = None,
+                         adhesion_band: float = 0.4,
+                         chunk: Optional[int] = None,
+                         pvary_axes: Tuple[str, ...] = (),
+                         maxb: int = 64,
+                         interpret: Optional[bool] = None):
+    """Pallas-backed realization of the fused kernel-list sweep.
+
+    Accepts the same ``grid.PairKernel`` registry as
+    ``grid.resident_apply_fused``. The kernel named ``"force"`` runs in the
+    K1 windowed Pallas kernel — already a single in-kernel pass over the
+    resident tables with its (position, diameter, agent_type, alive)
+    footprint packed into the (8, N) lane layout, so fusion for it means
+    staying inside the kernel. Every other registered kernel shares ONE
+    pruned XLA resident sweep over the same tables (arbitrary pair_fns don't
+    lower into K1's fixed row layout). The force kernel's ``pair_fn`` is not
+    invoked — K1 computes the same functional form (parity vs the XLA pair
+    path is covered by tests/test_resident.py).
+
+    Returns ``(results, ovf)``: results keyed like resident_apply_fused,
+    ovf the K1 column-map overflow flag (zeros(()) when no force kernel).
+    """
+    results = {}
+    ovf = jnp.zeros((), jnp.int32)
+    force_kernels = [k for k in kernels if k.name == "force"]
+    rest = [k for k in kernels if k.name != "force"]
+    if force_kernels:
+        fk = force_kernels[0]
+        active = fk.query_mask if fk.query_mask is not None else default_mask
+        f, nnz, k_ovf = collision_force_resident(
+            channels["position"], channels["diameter"],
+            channels["agent_type"], channels["alive"], active,
+            grid_env.starts, grid_env.counts, origin, box_size,
+            dims=spec.dims, k_rep=k_rep, adhesion=adhesion,
+            adhesion_band=adhesion_band, maxb=maxb, interpret=interpret)
+        results["force"] = {"force": f, "force_nnz": nnz}
+        ovf = k_ovf
+    if rest:
+        results.update(grid.resident_apply_fused(
+            spec, grid_env, channels, rest, default_mask, chunk,
+            pvary_axes=pvary_axes))
+    return results, ovf
+
+
 @functools.partial(jax.jit, static_argnames=(
     "dims", "k_rep", "adhesion", "adhesion_band", "maxb", "interpret"))
 def collision_force(position: jnp.ndarray, diameter: jnp.ndarray,

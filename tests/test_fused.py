@@ -1,0 +1,320 @@
+"""Fused single-gather neighbor sweep (DESIGN.md §3.2) — parity + footprint.
+
+The fused sweep (grid.resident_apply_fused) evaluates the force kernel and
+every behavior-declared pair kernel against ONE candidate stream per block,
+pruned to the union of their declared channel footprints. Contracts tested:
+
+  * forces are BIT-EXACT vs the sequential per-phase path (the union block
+    list visits a superset of blocks, but common blocks see identical slice
+    offsets, gathers and run accumulation order; extra blocks write zeros
+    under the force kernel's own mask);
+  * SIR behaviors + statics match the sequential path (bit-exact on one
+    device — the documented float-summation tolerance budget only pays when
+    comparing across backends, e.g. the Pallas force kernel);
+  * channel pruning never drops a declared channel, including behavior
+    extras (``extra.*`` timers), and an UNdeclared read fails loudly at
+    trace time instead of silently streaming the whole SoA;
+  * the distributed engine inherits fusion through the shared core
+    (4-shard subprocess, fused vs sequential bit-parity).
+"""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import EngineConfig, Simulation, engine, grid
+from repro.core.behaviors import (Behavior, BehaviorEffects, Infection,
+                                  RandomWalk, INFECTED, SUSCEPTIBLE)
+from repro.core.forces import FORCE_READS
+
+
+SIDE = 48.0
+
+
+def _cluster(n, rng, side=SIDE):
+    return rng.uniform(2, side - 2, (n, 3)).astype(np.float32)
+
+
+def _cfg(n, **kw):
+    base = dict(capacity=n, domain_lo=(0, 0, 0), domain_hi=(SIDE,) * 3,
+                interaction_radius=3.0, max_per_box=32, query_chunk=256)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _sir_state(sim, n, rng, recovery=12):
+    pos = _cluster(n, rng)
+    types = np.zeros(n, np.int32)
+    types[: n // 20] = INFECTED
+    return sim.init_state(pos, diameter=np.full(n, 2.5, np.float32),
+                          agent_type=types,
+                          extra_init={"infect_timer":
+                                      np.full(n, recovery, np.int32)})
+
+
+# ---------------------------------------------------------------------------
+# forces: fused vs sequential is bit-exact
+# ---------------------------------------------------------------------------
+
+def test_forces_bit_exact_fused_vs_sequential():
+    n, rng = 1500, np.random.default_rng(0)
+    pos = _cluster(n, rng)
+    states = {}
+    for fused in (True, False):
+        sim = Simulation(_cfg(n, fused_sweep=fused))
+        st = sim.init_state(pos, diameter=np.full(n, 2.5, np.float32))
+        st = sim.run(st, 6, check_overflow=True)
+        states[fused] = st
+    a, b = states[True], states[False]
+    assert np.array_equal(np.asarray(a.pool.position),
+                          np.asarray(b.pool.position))
+    assert np.array_equal(np.asarray(a.pool.force_nnz),
+                          np.asarray(b.pool.force_nnz))
+    assert int(a.stats["n_live"]) == int(b.stats["n_live"]) == n
+
+
+def test_fused_is_the_default():
+    assert EngineConfig(capacity=8, domain_lo=(0, 0, 0),
+                        domain_hi=(8, 8, 8),
+                        interaction_radius=2.0).fused_sweep is True
+
+
+# ---------------------------------------------------------------------------
+# SIR behaviors + statics: fused vs sequential
+# ---------------------------------------------------------------------------
+
+def test_sir_statics_fused_vs_sequential():
+    """Forces + Infection + detect_static: one fused sweep vs three-phase
+    sequential. Single-device runs share accumulation order, so parity is
+    bit-exact (the float-summation tolerance is budgeted for cross-backend
+    comparisons only)."""
+    n, rng = 1200, np.random.default_rng(1)
+    states = {}
+    for fused in (True, False):
+        sim = Simulation(_cfg(n, fused_sweep=fused, detect_static=True),
+                         [Infection(radius=3.0, beta=0.4, recovery_time=8)])
+        st = _sir_state(sim, n, np.random.default_rng(1), recovery=8)
+        st = sim.run(st, 10, check_overflow=True)
+        states[fused] = st
+    a, b = states[True], states[False]
+    for ch in ("position", "agent_type", "static", "force_nnz"):
+        assert np.array_equal(np.asarray(getattr(a.pool, ch)),
+                              np.asarray(getattr(b.pool, ch))), ch
+    assert np.array_equal(np.asarray(a.pool.extra["infect_timer"]),
+                          np.asarray(b.pool.extra["infect_timer"]))
+    assert int(a.stats["n_active"]) == int(b.stats["n_active"])
+    t = np.asarray(a.pool.agent_type)[np.asarray(a.pool.alive)]
+    assert (t != SUSCEPTIBLE).sum() > n // 20, "epidemic should spread"
+
+
+def test_pallas_fused_vs_xla_fused():
+    """force_impl='pallas' under the fused registry: K1 computes the force
+    in-kernel, the behavior kernels share one pruned XLA sweep. Parity vs
+    the all-XLA fused sweep is within float-order tolerance (different
+    backend, different summation schedule)."""
+    n, rng = 900, np.random.default_rng(2)
+    states = {}
+    for impl in ("pallas", "xla"):
+        sim = Simulation(_cfg(n, force_impl=impl),
+                         [Infection(radius=3.0, beta=0.4, recovery_time=8)])
+        st = _sir_state(sim, n, np.random.default_rng(2), recovery=8)
+        st = sim.run(st, 4, check_overflow=True)
+        states[impl] = st
+    a, b = states["pallas"], states["xla"]
+    np.testing.assert_allclose(np.asarray(a.pool.position),
+                               np.asarray(b.pool.position),
+                               rtol=1e-5, atol=1e-4)
+    assert np.array_equal(np.asarray(a.pool.agent_type),
+                          np.asarray(b.pool.agent_type))
+
+
+# ---------------------------------------------------------------------------
+# footprint pruning
+# ---------------------------------------------------------------------------
+
+def test_realized_footprint_is_spec_driven():
+    cfg = _cfg(64)
+    # forces-only: exactly the force footprint, never infection timers
+    assert engine.realized_footprint(cfg, []) == FORCE_READS
+    # SIR-only: never streams diameter
+    fp = engine.realized_footprint(
+        dataclasses.replace(cfg, use_forces=False),
+        [RandomWalk(), Infection()])
+    assert "diameter" not in fp
+    assert set(fp) == {"position", "alive", "agent_type"}
+
+
+class TimerCount(Behavior):
+    """Counts in-radius neighbors whose extra.timer exceeds a threshold —
+    exercises an ``extra.*`` channel in a declared footprint."""
+
+    name = "timer_count"
+
+    def __init__(self, radius=3.0, thr=5):
+        self.radius, self.thr = radius, thr
+
+    def extra_specs(self):
+        return {"timer": ((), jnp.int32, 0), "tcount": ((), jnp.int32, 0)}
+
+    def neighbor_kernels(self):
+        r, thr = self.radius, self.thr
+
+        def pair_fn(q, nbr, valid, q_slot):
+            d = nbr["position"] - q["position"][:, None, :]
+            hit = valid & nbr["alive"] \
+                & (jnp.sum(d * d, -1) <= r * r) \
+                & (nbr["extra.timer"] > thr)
+            return {"cnt": jnp.sum(hit, -1).astype(jnp.int32)}
+
+        return (grid.PairKernel(
+            name=self.name, pair_fn=pair_fn,
+            out_specs={"cnt": ((), jnp.int32)},
+            reads=("position", "alive", "extra.timer")),)
+
+    def __call__(self, ctx, pool, rng):
+        res = ctx.neighbor_results[self.name]   # fused path only (uniform)
+        return BehaviorEffects(set_channels={"extra.tcount": res["cnt"]})
+
+
+def test_extra_channel_footprint_gathers_and_matches_oracle():
+    n, rng = 400, np.random.default_rng(3)
+    pos = _cluster(n, rng)
+    timers = rng.integers(0, 12, n).astype(np.int32)
+    uid = np.arange(n, dtype=np.int32)
+    beh = TimerCount(radius=3.0, thr=5)
+    cfg = _cfg(n, use_forces=False)
+    assert "extra.timer" in engine.realized_footprint(cfg, [beh])
+    sim = Simulation(cfg, [beh])
+    st = sim.init_state(pos, diameter=np.full(n, 1.0, np.float32),
+                        agent_type=uid, extra_init={"timer": timers})
+    st = sim.step(st)
+    # O(N^2) oracle keyed by the uid channel (the resident build permutes)
+    d2 = ((pos[:, None] - pos[None]) ** 2).sum(-1)
+    hit = (d2 <= 9.0) & (timers[None] > 5)
+    np.fill_diagonal(hit, False)
+    ref = hit.sum(1).astype(np.int32)
+    got_uid = np.asarray(st.pool.agent_type)
+    got = np.asarray(st.pool.extra["tcount"])
+    alive = np.asarray(st.pool.alive)
+    assert np.array_equal(got[alive], ref[got_uid[alive]])
+
+
+class UndeclaredRead(Behavior):
+    """pair_fn reads nbr['diameter'] but declares only position/alive."""
+
+    name = "undeclared"
+
+    def neighbor_kernels(self):
+        def pair_fn(q, nbr, valid, q_slot):
+            near = valid & (nbr["diameter"] > 0)
+            return {"n": jnp.sum(near, -1).astype(jnp.int32)}
+
+        return (grid.PairKernel(name=self.name, pair_fn=pair_fn,
+                                out_specs={"n": ((), jnp.int32)},
+                                reads=("position", "alive")),)
+
+    def __call__(self, ctx, pool, rng):
+        return BehaviorEffects()
+
+
+def test_undeclared_read_fails_loud_at_trace_time():
+    n = 64
+    cfg = _cfg(n, use_forces=False)   # nothing else declares 'diameter'
+    sim = Simulation(cfg, [UndeclaredRead()])
+    st = sim.init_state(np.zeros((8, 3), np.float32))
+    with pytest.raises(KeyError):
+        sim.step(st)
+
+
+def test_check_kernel_footprints_catches_masked_underdeclaration():
+    # with forces ON the fused union DOES contain 'diameter', so the sweep
+    # itself would not catch the lie — the isolated per-kernel trace must
+    cfg = _cfg(64, use_forces=True)
+    with pytest.raises(KeyError, match="undeclared"):
+        engine.check_kernel_footprints(cfg, [UndeclaredRead()])
+    # and the catalogue behaviors pass
+    engine.check_kernel_footprints(cfg, [RandomWalk(), Infection()])
+
+
+def test_duplicate_kernel_names_rejected():
+    cfg = _cfg(64, use_forces=False)
+    with pytest.raises(ValueError, match="unique"):
+        Simulation(cfg, [Infection(), Infection()])
+
+
+# ---------------------------------------------------------------------------
+# distributed: the shared core inherits fusion (4-shard subprocess)
+# ---------------------------------------------------------------------------
+
+_DIST_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import dataclasses
+    import json
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import distributed, engine
+    from repro.core.behaviors import Infection, INFECTED
+
+    SIDE, n = 64.0, 1024
+    rng = np.random.default_rng(7)
+    pos = rng.uniform(2, SIDE - 2, (n, 3)).astype(np.float32)
+    dia = np.full(n, 2.5, np.float32)
+    types = np.zeros(n, np.int32)
+    types[:32] = INFECTED
+
+    out = {}
+    for fused in (True, False):
+        cfg = engine.EngineConfig(
+            capacity=n, domain_lo=(0., 0., 0.), domain_hi=(SIDE,) * 3,
+            interaction_radius=3.0, use_forces=True, max_per_box=32,
+            fused_sweep=fused)
+        dcfg = distributed.DistConfig(engine=cfg, n_shards=4,
+                                      local_capacity=2 * n // 4,
+                                      halo_capacity=256,
+                                      migrate_capacity=256)
+        sim = distributed.DistributedSimulation(
+            dcfg, [Infection(radius=3.0, beta=0.4, recovery_time=8)])
+        st = sim.init_state(jnp.asarray(pos), jnp.asarray(dia),
+                            jnp.asarray(types),
+                            extra_init={"infect_timer":
+                                        np.full(n, 8, np.int32)})
+        for _ in range(8):
+            st = sim.step(st)
+        ch = sim.gather_channels(st)
+        a = ch["alive"]
+        o = np.lexsort(ch["position"][a].T)
+        out[fused] = (ch["position"][a][o], ch["agent_type"][a][o])
+
+    dp = float(np.abs(out[True][0] - out[False][0]).max())
+    dt = int(np.abs(out[True][1].astype(np.int64)
+                    - out[False][1].astype(np.int64)).max())
+    print("RESULT " + json.dumps({
+        "n_true": int(out[True][0].shape[0]),
+        "n_false": int(out[False][0].shape[0]),
+        "max_dpos": dp, "max_dtype": dt}))
+""")
+
+
+def test_fused_4shard_parity_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", _DIST_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT ")][-1]
+    res = json.loads(line[len("RESULT "):])
+    assert res["n_true"] == res["n_false"]
+    # same slabs, same per-shard accumulation order: fused vs sequential is
+    # bit-exact shard-by-shard, so the gathered trajectories agree exactly
+    assert res["max_dpos"] == 0.0, res
+    assert res["max_dtype"] == 0, res
