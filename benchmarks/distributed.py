@@ -42,9 +42,7 @@ N_STEPS = int(os.environ.get("DIST_BENCH_STEPS", 3))
 def _flags(state) -> int:
     """All never-silent flags of one step (stats are per-step, not
     cumulative — every step must be inspected)."""
-    return sum(int(np.asarray(state.stats[f]).sum())
-               for f in ("halo_overflow", "migrate_overflow", "box_overflow",
-                         "birth_overflow", "in_flight", "thin_slab"))
+    return sum(state.stats.flags().values())
 
 
 def _step_time(dsim, state, n_steps: int) -> tuple:

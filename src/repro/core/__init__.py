@@ -1,21 +1,29 @@
 """repro.core — the paper's simulation engine (BioDynaMo optimizations O1-O6)."""
 
 from .agents import AgentPool, DtypePolicy, make_pool, pool_from_channels
-from .compaction import grow_channels, grow_pool
+from .compaction import grow_channels, grow_pool, repack_slabs
 from .distributed import (DistConfig, DistributedCapacityLadder,
                           DistributedSimulation, DistState)
-from .engine import (CapacityLadder, EngineConfig, EngineState, LadderConfig,
-                     Simulation, StepContext, make_iteration_core)
+from .engine import (CapacityExhausted, CapacityLadder, EngineConfig,
+                     EngineState, LadderConfig, Simulation, StepContext,
+                     make_iteration_core)
 from .forces import ForceParams
 from .grid import (BuildResult, GridBuilderDeprecationWarning, GridSpec,
                    RebuildPolicy, counting_sort_order, make_builder)
+from .health import HealthConfig, HealthFault
+from .simcheck import (DegradationPolicy, RunReport, SimCheckpointer,
+                       SupervisedRunner, restore_dist_state, restore_state,
+                       save_dist_state, save_state)
 from .stats import StepStats
 
 __all__ = ["AgentPool", "DtypePolicy", "make_pool", "pool_from_channels",
-           "grow_channels", "grow_pool", "EngineConfig", "EngineState",
-           "Simulation", "StepContext", "make_iteration_core",
-           "CapacityLadder", "LadderConfig", "ForceParams", "GridSpec",
-           "StepStats", "DistConfig", "DistributedSimulation",
-           "DistributedCapacityLadder", "DistState", "BuildResult",
-           "GridBuilderDeprecationWarning", "RebuildPolicy",
-           "counting_sort_order", "make_builder"]
+           "grow_channels", "grow_pool", "repack_slabs", "EngineConfig",
+           "EngineState", "Simulation", "StepContext", "make_iteration_core",
+           "CapacityExhausted", "CapacityLadder", "LadderConfig",
+           "ForceParams", "GridSpec", "StepStats", "DistConfig",
+           "DistributedSimulation", "DistributedCapacityLadder", "DistState",
+           "BuildResult", "GridBuilderDeprecationWarning", "RebuildPolicy",
+           "counting_sort_order", "make_builder", "HealthConfig",
+           "HealthFault", "DegradationPolicy", "RunReport", "SimCheckpointer",
+           "SupervisedRunner", "restore_dist_state", "restore_state",
+           "save_dist_state", "save_state"]

@@ -26,6 +26,7 @@ from typing import Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .agents import AgentPool
 
@@ -167,6 +168,30 @@ def grow_pool(pool: AgentPool, new_capacity: int,
     """Re-stage a pool into a larger fixed-shape pool (capacity-ladder rung)."""
     return pool.with_channels(grow_channels(pool.channels(), new_capacity,
                                             donate))
+
+
+def repack_slabs(channels: Dict[str, jnp.ndarray], n_shards: int,
+                 old_local: int, new_local: int) -> Dict[str, jnp.ndarray]:
+    """Host-side re-pack of sharded slab channels into a new local width.
+
+    Channels are global ``(n_shards·old_local, ...)`` arrays with shard i's
+    agents in slice ``[i·old_local, i·old_local + n_i)``. Each shard's slab is
+    preserved verbatim and padded with zero (dead) tail slots — the
+    distributed analog of :func:`grow_channels`. Shared by the distributed
+    capacity ladder's rung restage and checkpoint restore onto a run whose
+    ``local_capacity`` rung differs (core/simcheck.py).
+    """
+    if new_local < old_local:
+        raise ValueError(f"cannot shrink slabs {old_local} -> {new_local}")
+    out = {}
+    for k, v in channels.items():
+        a = np.asarray(v).reshape((n_shards, old_local) + v.shape[1:])
+        pad = np.zeros((n_shards, new_local - old_local) + v.shape[1:],
+                       a.dtype)
+        out[k] = jnp.asarray(
+            np.concatenate([a, pad], axis=1).reshape(
+                (n_shards * new_local,) + v.shape[1:]))
+    return out
 
 
 def active_index_list(active: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:

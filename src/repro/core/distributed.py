@@ -50,8 +50,9 @@ from jax.sharding import PartitionSpec as P
 from . import compaction, diffusion as diff_mod, grid as grid_mod
 from .agents import AgentPool, make_pool, pool_from_channels
 from .behaviors import Behavior
-from .engine import (EngineConfig, LadderConfig, LadderDriverBase, next_rung,
-                     make_iteration_core, stage_pool)
+from .engine import (CapacityExhausted, EngineConfig, LadderConfig,
+                     LadderDriverBase, next_rung, make_iteration_core,
+                     stage_pool)
 from .stats import StepStats
 
 OWNED = "owned"          # bool extra channel: local agent (True) vs ghost
@@ -152,10 +153,12 @@ def partition_global(pool_channels: Dict[str, jnp.ndarray],
                      0, dcfg.n_shards - 1)
     out = {}
     c = dcfg.local_capacity
-    # rank within shard via stable sort by (shard, index)
+    # rank within shard via stable sort by (shard, index); dead rows sort
+    # (and stay) at key n_shards so live rows need NOT form a prefix —
+    # checkpoint restore re-partitions global buffers with dead gaps
     order = jnp.argsort(jnp.where(alive, shard, dcfg.n_shards),
                         stable=True)
-    sorted_shard = shard[order]
+    sorted_shard = jnp.where(alive[order], shard[order], dcfg.n_shards)
     first = jnp.searchsorted(sorted_shard, jnp.arange(dcfg.n_shards))
     rank_in_shard = jnp.arange(x.shape[0]) - first[jnp.clip(sorted_shard, 0,
                                                             dcfg.n_shards - 1)]
@@ -557,43 +560,49 @@ class DistributedSimulation:
         for i in range(n_iterations):
             state = self._step_fn(state)
             if check_overflow:
-                s = state.stats
-                if int(jnp.sum(s.halo_overflow)):
-                    raise RuntimeError(
-                        f"iteration {i}: halo overflow (ghost band exceeded "
-                        f"halo_capacity={self.dcfg.halo_capacity}); raise "
-                        f"halo_capacity")
-                if int(jnp.sum(s.thin_slab)):
-                    raise RuntimeError(
-                        f"iteration {i}: an interior slab is thinner than "
-                        f"the {self.dcfg.halo_width:.3g} ghost band (one-hop "
-                        f"ring cannot ship every cross-shard pair); revisit "
-                        f"boundaries / fewer shards")
-                if int(jnp.sum(s.migrate_overflow)):
-                    raise RuntimeError(
-                        f"iteration {i}: migration overflow (ring buffer "
-                        f"migrate_capacity={self.dcfg.migrate_capacity} "
-                        f"exceeded)")
-                if int(jnp.sum(s.in_flight)):
-                    raise RuntimeError(
-                        f"iteration {i}: {int(jnp.sum(s.in_flight))} agents "
-                        f"in flight across >1 slab (a rebalance moved a "
-                        f"boundary further than one slab width; their next "
-                        f"step sees an incomplete neighborhood) — lower "
-                        f"rebalance_frequency or accept the transient by "
-                        f"polling stats.in_flight instead of check_overflow")
-                if int(jnp.sum(s.box_overflow)):
-                    raise RuntimeError(
-                        f"iteration {i}: grid run overflow on a shard; raise "
-                        f"EngineConfig.max_per_run / max_per_box")
-                if int(jnp.sum(s.birth_overflow)):
-                    raise RuntimeError(
-                        f"iteration {i}: local pool overflow on a shard "
-                        f"(staged newborns / migration arrivals / repack "
-                        f"exceeded local_capacity="
-                        f"{self.dcfg.local_capacity}; per-shard demand "
-                        f"{np.asarray(s.capacity_demand).tolist()}); raise "
-                        f"DistConfig.local_capacity")
+                flags = state.stats.flags()   # only nonzero §4.2 flags
+                if flags:
+                    s = state.stats
+                    remediation = {
+                        "halo_overflow": (
+                            f"halo overflow (ghost band exceeded "
+                            f"halo_capacity={self.dcfg.halo_capacity}); "
+                            f"raise halo_capacity"),
+                        "thin_slab": (
+                            f"an interior slab is thinner than the "
+                            f"{self.dcfg.halo_width:.3g} ghost band (one-hop "
+                            f"ring cannot ship every cross-shard pair); "
+                            f"revisit boundaries / fewer shards"),
+                        "migrate_overflow": (
+                            f"migration overflow (ring buffer "
+                            f"migrate_capacity={self.dcfg.migrate_capacity} "
+                            f"exceeded)"),
+                        "in_flight": (
+                            f"{flags.get('in_flight', 0)} agents in flight "
+                            f"across >1 slab (a rebalance moved a boundary "
+                            f"further than one slab width; their next step "
+                            f"sees an incomplete neighborhood) — lower "
+                            f"rebalance_frequency or accept the transient by "
+                            f"polling stats.in_flight instead of "
+                            f"check_overflow"),
+                        "box_overflow": (
+                            "grid run overflow on a shard; raise "
+                            "EngineConfig.max_per_run / max_per_box"),
+                        "birth_overflow": (
+                            f"local pool overflow on a shard (staged "
+                            f"newborns / migration arrivals / repack "
+                            f"exceeded local_capacity="
+                            f"{self.dcfg.local_capacity}; per-shard demand "
+                            f"{np.asarray(s.capacity_demand).tolist()}); "
+                            f"raise DistConfig.local_capacity"),
+                    }
+                    # report in severity order, not dict order
+                    for f in ("halo_overflow", "thin_slab",
+                              "migrate_overflow", "in_flight",
+                              "box_overflow", "birth_overflow"):
+                        if f in flags:
+                            raise RuntimeError(
+                                f"iteration {i}: {remediation[f]}")
         return state
 
     def gather_channels(self, state: DistState) -> Dict[str, np.ndarray]:
@@ -695,10 +704,12 @@ class DistributedCapacityLadder(LadderDriverBase):
                                   lad.growth_factor, lad.round_to)
             if (lad.max_capacity is not None
                     and new_local * d.n_shards > lad.max_capacity):
-                raise RuntimeError(
+                raise CapacityExhausted(
                     f"capacity ladder exhausted: per-shard demand {demand} "
                     f"needs {new_local}×{d.n_shards} slots > "
-                    f"max_capacity={lad.max_capacity}")
+                    f"max_capacity={lad.max_capacity}",
+                    demand=demand, rung=new_local * d.n_shards,
+                    max_capacity=lad.max_capacity)
             changes["local_capacity"] = new_local
         if not changes:
             return None
@@ -727,16 +738,11 @@ class DistributedCapacityLadder(LadderDriverBase):
         """Host-side re-pack of every shard's slab into the new local width.
 
         Each shard's live prefix is preserved verbatim; new tail slots are
-        zero (dead) — the distributed analog of compaction.grow_channels.
+        zero (dead) — the distributed analog of compaction.grow_channels
+        (compaction.repack_slabs, shared with checkpoint restore).
         """
-        n = self.dcfg.n_shards
-        ch = {}
-        for k, v in state.channels.items():
-            a = np.asarray(v).reshape((n, old_local) + v.shape[1:])
-            pad = np.zeros((n, new_local - old_local) + v.shape[1:], a.dtype)
-            ch[k] = jnp.asarray(
-                np.concatenate([a, pad], axis=1).reshape(
-                    (n * new_local,) + v.shape[1:]))
+        ch = compaction.repack_slabs(state.channels, self.dcfg.n_shards,
+                                     old_local, new_local)
         return dataclasses.replace(state, channels=ch)
 
     def _grow(self, new_d: DistConfig, prev: DistState,

@@ -40,7 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from . import compaction, diffusion as diff_mod, forces as force_mod, grid as grid_mod
-from . import morton, statics as statics_mod
+from . import health as health_mod, morton, statics as statics_mod
 from .agents import AgentPool, DtypePolicy, make_pool
 from .behaviors import Behavior, BehaviorEffects
 from .stats import StepStats
@@ -94,6 +94,11 @@ class EngineConfig:
                                            # channel storage dtypes (§4.3:
                                            # narrower aux channels → more
                                            # agents per byte per rung)
+    health: Optional[health_mod.HealthConfig] = dataclasses.field(
+        default_factory=health_mod.HealthConfig)
+                                           # in-graph health watchdog folded
+                                           # into StepStats.health (§7.5);
+                                           # None disables it entirely
 
     def __post_init__(self):
         if self.sort_impl not in grid_mod.SORT_IMPLS:
@@ -537,6 +542,7 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
                         pvary_axes=pvary_axes)
 
         # ---------------- agent ops: forces ----------------
+        force_arr = None                  # kept for the health guard below
         if cfg.use_forces:
             if "force" in nbr_results:
                 res = nbr_results["force"]
@@ -560,6 +566,7 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
             else:
                 res = nbr_apply(force_pair, force_mod.FORCE_OUT_SPECS,
                                 query_mask=active)
+            force_arr = res["force"]
             dx = force_mod.displacement(res["force"], cfg.force, cfg.dt)
             new_pos = jnp.clip(pool.position + dx, dlo, dhi)
             new_pos = jnp.where(active[:, None], new_pos, pool.position)
@@ -612,6 +619,16 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
             step_disp = jnp.max(jnp.where(pool.alive[:, None],
                                           jnp.abs(move_d), 0.0))
 
+        # ---------------- health watchdog (§7.5) ----------------
+        # One fused reduction over channels the step already materialized;
+        # evaluated before the commit phase so slot indices still line up
+        # with force_arr/move_d. Observability only — supervisors act on it.
+        health = stats.health
+        if cfg.health is not None and cfg.health.any_enabled:
+            health = health_mod.step_health(
+                cfg.health, owned_of(pool), pool.position, dlo, dhi,
+                force=force_arr, move_d=move_d)
+
         # ---------------- post standalone ops: commit ----------------
         # ghosts are the neighbor shard's to kill — only owned deaths commit
         death_mask &= owned_of(pool)
@@ -658,7 +675,7 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
             # slots needed to have committed every staged agent (§4.3
             # provenance: the capacity rung target)
             capacity_demand=n_live_end + birth_overflow,
-            rebuilds=rebuilt, rebuild_skips=1 - rebuilt)
+            rebuilds=rebuilt, rebuild_skips=1 - rebuilt, health=health)
         return pool, conc, rng, stats, env
 
     return core
@@ -749,7 +766,8 @@ class Simulation:
         for i in range(n_iterations):
             state = self._step_fn(state)
             if check_overflow:
-                if int(state.stats["box_overflow"]):
+                flags = state.stats.flags()
+                if "box_overflow" in flags:
                     if self.config.environment == "hash_grid":
                         raise RuntimeError(
                             f"iteration {i}: hash bucket overflow (a bucket "
@@ -760,17 +778,53 @@ class Simulation:
                         f"iteration {i}: grid run overflow (a 3-box z-run "
                         f"holds > {self.spec.run_capacity} agents); raise "
                         f"EngineConfig.max_per_run / max_per_box")
-                if int(state.stats["birth_overflow"]):
+                if "birth_overflow" in flags:
                     raise RuntimeError(
                         f"iteration {i}: birth overflow; raise EngineConfig.capacity")
             if callback is not None:
                 callback(i, state)
         return state
 
+    def run_supervised(self, state: EngineState, n_iterations: int,
+                       ckpt_dir: str, **kwargs):
+        """Run under the fault-tolerant supervisor (simcheck, §7.5).
+
+        Convenience wrapper: wraps this config/behaviors in a
+        ``CapacityLadder`` and delegates to ``simcheck.SupervisedRunner`` —
+        checkpoints every ``checkpoint_every`` steps, rolls back to the last
+        checkpoint on a health fault or ladder exhaustion, and retries under
+        the degradation policy. Returns ``(state, RunReport)``.
+        """
+        from . import simcheck
+        runner = simcheck.SupervisedRunner(
+            CapacityLadder(self.config, self.behaviors), ckpt_dir, **kwargs)
+        return runner.run(state, n_iterations)
+
 
 # ---------------------------------------------------------------------------
 # Capacity ladder (DESIGN.md §4.3) — automatic pool growth across rungs
 # ---------------------------------------------------------------------------
+
+class CapacityExhausted(RuntimeError):
+    """The ladder hit ``max_capacity`` — structured, so supervisors recover.
+
+    Unlike a bare RuntimeError, the exception carries the last-good pre-step
+    state and its final ``StepStats`` (attached by ``LadderDriverBase.step``
+    before re-raising), so a supervisor (simcheck.SupervisedRunner) can
+    checkpoint the trajectory and retry under a degradation policy instead of
+    losing the run (§7.5).
+    """
+
+    def __init__(self, message: str, demand: int = 0, rung: int = 0,
+                 max_capacity: Optional[int] = None):
+        super().__init__(message)
+        self.demand = demand
+        self.rung = rung
+        self.max_capacity = max_capacity
+        self.state = None      # last-good pre-step state (driver attaches)
+        self.stats = None      # StepStats of the overflowing execution
+        self.iteration = None  # iteration index the state is rewound to
+
 
 @dataclasses.dataclass(frozen=True)
 class LadderConfig:
@@ -831,7 +885,15 @@ class LadderDriverBase:
         state = self._sim.step(prev)
         grows = 0
         while True:
-            new_cfg = self._diagnose(state.stats)   # host sync on the flags
+            try:
+                new_cfg = self._diagnose(state.stats)  # host sync on flags
+            except CapacityExhausted as e:
+                # annotate with the last-good pre-step state so supervisors
+                # can checkpoint-and-degrade instead of losing the run
+                e.state = prev
+                e.stats = state.stats
+                e.iteration = int(prev.iteration)
+                raise
             if new_cfg is None:
                 return state
             grows += 1
@@ -921,9 +983,11 @@ class CapacityLadder(LadderDriverBase):
             new_cap = next_rung(cfg.capacity, demand, lad.growth_factor,
                                 lad.round_to)
             if lad.max_capacity is not None and new_cap > lad.max_capacity:
-                raise RuntimeError(
+                raise CapacityExhausted(
                     f"capacity ladder exhausted: demand {demand} needs rung "
-                    f"{new_cap} > max_capacity={lad.max_capacity}")
+                    f"{new_cap} > max_capacity={lad.max_capacity}",
+                    demand=demand, rung=new_cap,
+                    max_capacity=lad.max_capacity)
             changes["capacity"] = new_cap
         if not changes:
             return None

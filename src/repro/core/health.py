@@ -1,0 +1,207 @@
+"""Numerical health guards — in-graph watchdog for long runs (DESIGN.md §7.5).
+
+A multi-hour run at paper scale (1.72e9 agents, and the TeraAgent successor's
+half-trillion) cannot afford to discover a NaN at the end: one bad step
+silently poisons every later one. The guard evaluates three predicates
+*inside* the jitted iteration, over channels the step already produced, and
+folds them into one bitmask reduction per step (``StepStats.health``):
+
+  ``NONFINITE``     — a live agent's position (or its computed force) holds
+                      NaN/Inf. Catches diverging force integration, bad
+                      behavior arithmetic, and injected bit corruption.
+  ``ESCAPE``        — a live agent sits outside the domain box (plus
+                      ``domain_tol`` slack). The engine clips force
+                      displacement to the box, so an escape means a behavior
+                      wrote an out-of-domain position.
+  ``DISPLACEMENT``  — an agent moved further in one step (per axis) than
+                      ``max_step_displacement``, the force-stability bound:
+                      forces cap at ``ForceParams.max_displacement``, and
+                      ``RebuildPolicy`` every_k coverage assumes bounded
+                      per-step motion, so exceeding it signals instability.
+
+The flags are *observability*, exactly like the overflow flags: nothing in
+the engine raises on them. Supervisors (simcheck.SupervisedRunner) read
+``StepStats.health`` on the host and roll back / degrade; plain ``run`` calls
+can ignore them.
+
+The module also hosts the test-only **fault injection** hooks: deterministic
+host-side corruption of a state between steps (NaN write, bit flip,
+overflow-flag storm), so every recovery path can be exercised without waiting
+for a real fault. They are ordinary pure functions over the state pytrees —
+nothing in the engine references them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .agents import pool_from_channels
+
+# health bitmask bits (StepStats.health)
+NONFINITE = 1
+ESCAPE = 2
+DISPLACEMENT = 4
+
+_FLAG_NAMES = ((NONFINITE, "nonfinite"), (ESCAPE, "domain_escape"),
+               (DISPLACEMENT, "displacement"))
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Which health predicates the iteration evaluates (jit-static).
+
+    check_finite:           NaN/Inf in live positions and computed forces.
+    check_domain:           live position outside [domain_lo - domain_tol,
+                            domain_hi + domain_tol].
+    domain_tol:             slack beyond the box (behaviors clip to the box
+                            exactly, so 0.0 is already safe; positive values
+                            tolerate deliberate out-of-box behaviors).
+    max_step_displacement:  per-axis per-step displacement bound (None =
+                            predicate off). Sensible setting: a small
+                            multiple of ForceParams.max_displacement plus
+                            the largest behavior step.
+    """
+
+    check_finite: bool = True
+    check_domain: bool = True
+    domain_tol: float = 0.0
+    max_step_displacement: Optional[float] = None
+
+    @property
+    def any_enabled(self) -> bool:
+        return (self.check_finite or self.check_domain
+                or self.max_step_displacement is not None)
+
+
+def step_health(hcfg: HealthConfig, mask: jnp.ndarray, position: jnp.ndarray,
+                domain_lo: jnp.ndarray, domain_hi: jnp.ndarray,
+                force: Optional[jnp.ndarray] = None,
+                move_d: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """() int32 bitmask over the enabled predicates, one fused reduction.
+
+    mask: (C,) bool — rows the caller owns (ghost rows report on their owner
+    shard). Every predicate is evaluated element-wise into one stacked (K, C)
+    array reduced by a single ``jnp.any`` — the per-step cost is one pass
+    over channels the step already materialized.
+    """
+    checks = []                                    # (bit, (C,) bool)
+    if hcfg.check_finite:
+        bad = ~jnp.all(jnp.isfinite(position), axis=-1)
+        if force is not None:
+            bad |= ~jnp.all(jnp.isfinite(force), axis=-1)
+        checks.append((NONFINITE, bad))
+    if hcfg.check_domain:
+        tol = jnp.float32(hcfg.domain_tol)
+        # NaN compares False on both sides — an escaped NaN is the finite
+        # predicate's catch, not a spurious double flag here
+        out = jnp.any((position < domain_lo - tol)
+                      | (position > domain_hi + tol), axis=-1)
+        checks.append((ESCAPE, out))
+    if hcfg.max_step_displacement is not None and move_d is not None:
+        limit = jnp.float32(hcfg.max_step_displacement)
+        over = jnp.max(jnp.abs(move_d), axis=-1) > limit
+        checks.append((DISPLACEMENT, over))
+    if not checks:
+        return jnp.zeros((), jnp.int32)
+    stacked = jnp.stack([c & mask for _, c in checks])          # (K, C)
+    fired = jnp.any(stacked, axis=1)                            # (K,)
+    bits = jnp.asarray([b for b, _ in checks], jnp.int32)
+    return jnp.sum(jnp.where(fired, bits, 0)).astype(jnp.int32)
+
+
+def fault_bits(health) -> int:
+    """Host-side OR over a step's health field (scalar or per-shard vector)."""
+    return int(np.bitwise_or.reduce(np.asarray(health, np.int32).ravel(),
+                                    initial=0))
+
+
+def describe(bits: int) -> Tuple[str, ...]:
+    """Names of the set health bits, e.g. (``'nonfinite'``,)."""
+    return tuple(name for bit, name in _FLAG_NAMES if bits & bit)
+
+
+class HealthFault(RuntimeError):
+    """A health flag fired and the supervisor ran out of remedies.
+
+    Carries the decoded flag names, the structured run report accumulated so
+    far, and (when available) the last healthy state — the caller keeps the
+    trajectory even when the run cannot continue.
+    """
+
+    def __init__(self, message: str, bits: int = 0, state=None, report=None):
+        super().__init__(message)
+        self.bits = bits
+        self.flags = describe(bits)
+        self.state = state
+        self.report = report
+
+
+# ---------------------------------------------------------------------------
+# Fault injection (test-only): deterministic host-side corruption
+# ---------------------------------------------------------------------------
+
+def _state_channels(state):
+    """(channels dict, rebuild(ch) -> state) for EngineState or DistState."""
+    if hasattr(state, "pool"):                     # EngineState
+        def rebuild(ch):
+            return dataclasses.replace(state, pool=pool_from_channels(ch))
+        return state.pool.channels(), rebuild
+    if hasattr(state, "channels"):                 # DistState
+        def rebuild(ch):
+            return dataclasses.replace(state, channels=ch)
+        return dict(state.channels), rebuild
+    raise TypeError(f"not a simulation state: {type(state)!r}")
+
+
+def inject_value(state, channel: str, slot: int, value) -> "state":
+    """Overwrite one row (or one lane of a vector channel) with ``value``.
+
+    ``inject_value(state, "position", 3, np.nan)`` is the canonical NaN
+    injection: deterministic, detected by the NONFINITE guard on the next
+    step. Works on EngineState and DistState alike.
+    """
+    ch, rebuild = _state_channels(state)
+    arr = np.asarray(ch[channel]).copy()
+    arr[slot] = value
+    ch = dict(ch)
+    ch[channel] = jnp.asarray(arr)
+    return rebuild(ch)
+
+
+def flip_bits(state, channel: str, slot: int, mask: int = 0x00400000):
+    """XOR a bitmask into one float32 element — simulated memory corruption.
+
+    The default mask flips a high mantissa bit: large but finite corruption,
+    exercising the domain/displacement guards rather than the NaN path (use
+    ``mask=0x7FC00000`` to forge a quiet NaN).
+    """
+    ch, rebuild = _state_channels(state)
+    arr = np.asarray(ch[channel]).copy()
+    if arr.dtype != np.float32:
+        raise TypeError(f"flip_bits targets float32 channels, "
+                        f"{channel} is {arr.dtype}")
+    flat = arr.reshape(arr.shape[0], -1)
+    bits = flat[slot].view(np.uint32) ^ np.uint32(mask)
+    flat[slot] = bits.view(np.float32)
+    ch = dict(ch)
+    ch[channel] = jnp.asarray(flat.reshape(arr.shape))
+    return rebuild(ch)
+
+
+def storm_flags(state, field: str = "birth_overflow", count: int = 1):
+    """Force a never-silent overflow flag on — an overflow-flag storm.
+
+    Simulates a step whose stats report ``count`` dropped items on ``field``
+    without any real drop, so ladder/supervisor reactions to overflow storms
+    can be tested deterministically (e.g. a ladder diagnosing growth from a
+    flag that never clears).
+    """
+    stats = state.stats
+    cur = getattr(stats, field)
+    stats = dataclasses.replace(stats, **{
+        field: jnp.full_like(cur, count)})
+    return dataclasses.replace(state, stats=stats)

@@ -15,9 +15,11 @@ the same way.
 from __future__ import annotations
 
 import dataclasses
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @jax.tree_util.register_dataclass
@@ -58,6 +60,10 @@ class StepStats:
     rebuild_skips:    1 if this step reused a cached build instead
                       (RebuildPolicy mode='every_k'; grid.py). The two split
                       every step, so their running sums audit the skip rate
+    health:           numerical-health bitmask (health.py: NONFINITE |
+                      ESCAPE | DISPLACEMENT), evaluated in-graph by the
+                      iteration core. Observability only — supervisors
+                      (simcheck.SupervisedRunner) act on it; run() ignores it
     """
 
     n_live: jnp.ndarray
@@ -74,11 +80,16 @@ class StepStats:
     capacity_demand: jnp.ndarray
     rebuilds: jnp.ndarray
     rebuild_skips: jnp.ndarray
+    health: jnp.ndarray
 
     FIELDS = ("n_live", "n_active", "births", "deaths", "box_overflow",
               "birth_overflow", "halo_overflow", "migrate_overflow",
               "in_flight", "thin_slab", "box_demand", "capacity_demand",
-              "rebuilds", "rebuild_skips")
+              "rebuilds", "rebuild_skips", "health")
+
+    # the §4.2 never-silent-loss flags (demands and health are not overflow)
+    OVERFLOW_FIELDS = ("box_overflow", "birth_overflow", "halo_overflow",
+                       "migrate_overflow", "in_flight", "thin_slab")
 
     @classmethod
     def zeros(cls, shape: tuple = ()) -> "StepStats":
@@ -101,7 +112,31 @@ class StepStats:
 
         Demands (box_demand / capacity_demand) are provenance, not flags —
         they are excluded; thin_slab and in_flight are exactness flags and
-        count."""
-        return (jnp.sum(self.box_overflow) + jnp.sum(self.birth_overflow)
-                + jnp.sum(self.halo_overflow) + jnp.sum(self.migrate_overflow)
-                + jnp.sum(self.in_flight) + jnp.sum(self.thin_slab)) > 0
+        count. Traced form (usable in-graph); host code wanting a plain bool
+        uses :meth:`any_overflow`."""
+        total = sum((jnp.sum(getattr(self, f)) for f in self.OVERFLOW_FIELDS),
+                    jnp.zeros((), jnp.int32))
+        return total > 0
+
+    def flags(self) -> Dict[str, int]:
+        """Host-side: the nonzero never-silent flags, ``{field: total}``.
+
+        Sums over shards (per-shard vectors in the distributed engine), so
+        monitoring code never hand-enumerates the overflow fields again:
+        ``if stats.flags(): ...`` / ``sum(stats.flags().values())``.
+        """
+        out = {}
+        for f in self.OVERFLOW_FIELDS:
+            v = int(np.asarray(jnp.sum(getattr(self, f))))
+            if v:
+                out[f] = v
+        return out
+
+    def any_overflow(self) -> bool:
+        """Host-side bool form of :meth:`overflowed`."""
+        return bool(np.asarray(self.overflowed()))
+
+    def health_bits(self) -> int:
+        """Host-side OR of the health bitmask across shards (health.py)."""
+        return int(np.bitwise_or.reduce(
+            np.asarray(self.health, np.int32).ravel(), initial=0))

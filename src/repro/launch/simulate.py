@@ -2,16 +2,24 @@
 
     PYTHONPATH=src python -m repro.launch.simulate --scenario proliferation \
         --agents 10000 --iterations 100 [--force-impl pallas]
+
+Fault-tolerant mode (DESIGN.md §7.5): ``--supervised --ckpt-dir DIR`` runs
+under the checkpointing supervisor — periodic atomic checkpoints, in-graph
+health guards, rollback + degradation on faults, and a structured run report
+printed at the end. ``--resume`` continues a killed run from the latest
+checkpoint in ``--ckpt-dir`` (bit-exact with the uninterrupted run).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
 
-from ..core import EngineConfig, ForceParams, Simulation
+from ..core import (CapacityLadder, EngineConfig, ForceParams, Simulation,
+                    SupervisedRunner, restore_state)
 from ..core.behaviors import (Chemotaxis, GrowDivide, Infection, NeuriteGrowth,
                               RandomDeath, RandomWalk, Secretion,
                               GROWTH_CONE, INFECTED)
@@ -99,9 +107,37 @@ def main() -> None:
     ap.add_argument("--iterations", type=int, default=100)
     ap.add_argument("--force-impl", choices=("xla", "pallas"), default="xla")
     ap.add_argument("--report-every", type=int, default=20)
+    ap.add_argument("--supervised", action="store_true",
+                    help="run under the fault-tolerant supervisor (§7.5)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint directory (required with --supervised)")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in --ckpt-dir")
     args = ap.parse_args()
 
     sim, st = build(args.scenario, args.agents, args.force_impl)
+    if args.supervised or args.resume:
+        if not args.ckpt_dir:
+            raise SystemExit("--supervised/--resume require --ckpt-dir")
+        cfg, behaviors = sim.config, sim.behaviors
+        if args.resume:
+            st, cfg = restore_state(args.ckpt_dir, cfg, behaviors)
+            print(f"resumed from {args.ckpt_dir} at iteration "
+                  f"{int(st.iteration)}")
+        runner = SupervisedRunner(CapacityLadder(cfg, behaviors),
+                                  args.ckpt_dir,
+                                  checkpoint_every=args.checkpoint_every)
+        t0 = time.time()
+        st, report = runner.run(st, args.iterations)
+        dt = time.time() - t0
+        print(f"iter {int(st.iteration):5d}  "
+              f"n_live={int(st.stats['n_live']):8d}  "
+              f"{args.iterations / dt:6.2f} iter/s")
+        print("run report: " + json.dumps(report.to_dict()))
+        print("done")
+        return
+
     t0 = time.time()
     done = 0
     while done < args.iterations:

@@ -40,8 +40,14 @@ def _flatten_with_paths(tree: Any):
     return flat
 
 
-def save(ckpt_dir: str, step: int, tree: Any) -> str:
-    """Synchronous atomic save. Returns the checkpoint path."""
+def save(ckpt_dir: str, step: int, tree: Any,
+         extras: Optional[Dict] = None) -> str:
+    """Synchronous atomic save. Returns the checkpoint path.
+
+    ``extras``: optional JSON-serializable dict stored in the manifest —
+    side-band metadata the arrays alone cannot carry (the simulation
+    checkpoints record rung/degradation knobs here; core/simcheck.py).
+    """
     import ml_dtypes  # ships with jax
 
     flat = _flatten_with_paths(tree)
@@ -61,6 +67,8 @@ def save(ckpt_dir: str, step: int, tree: Any) -> str:
     manifest = {"step": step,
                 "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                            for k, v in host.items()}}
+    if extras is not None:
+        manifest["extras"] = extras
     with open(os.path.join(tmp, _MANIFEST), "w") as f:
         json.dump(manifest, f)
         f.flush()
@@ -89,13 +97,14 @@ class AsyncCheckpointer:
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
 
-    def save_async(self, step: int, tree: Any) -> None:
+    def save_async(self, step: int, tree: Any,
+                   extras: Optional[Dict] = None) -> None:
         self.wait()
         host = jax.tree.map(np.asarray, tree)   # device→host snapshot (blocking
         # only for the copy, not the write)
 
         def _write():
-            save(self.ckpt_dir, step, host)
+            save(self.ckpt_dir, step, host, extras=extras)
             self._gc()
 
         self._thread = threading.Thread(target=_write, daemon=True)
@@ -111,6 +120,12 @@ class AsyncCheckpointer:
         for s in steps[:-self.keep]:
             shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:09d}"),
                           ignore_errors=True)
+        # stale .tmp dirs are crash debris from an interrupted save — never a
+        # live write, since saves on one checkpointer are serialized by wait()
+        for name in os.listdir(self.ckpt_dir):
+            if name.startswith("step_") and name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.ckpt_dir, name),
+                              ignore_errors=True)
 
 
 def list_steps(ckpt_dir: str):
@@ -124,14 +139,19 @@ def list_steps(ckpt_dir: str):
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
-    f = os.path.join(ckpt_dir, "LATEST")
-    if os.path.exists(f):
-        with open(f) as fh:
-            s = int(fh.read().strip())
-        if os.path.isdir(os.path.join(ckpt_dir, f"step_{s:09d}")):
-            return s
+    # Any non-.tmp step dir is complete (atomic rename), and a crash between
+    # the rename and the LATEST update leaves LATEST pointing one save back —
+    # so the directory listing, not LATEST, is authoritative (LATEST stays
+    # on disk as a human-readable hint only).
     steps = list_steps(ckpt_dir)
     return steps[-1] if steps else None
+
+
+def load_manifest(ckpt_dir: str, step: int) -> Dict:
+    """The manifest of one checkpoint (step, leaves, optional extras)."""
+    path = os.path.join(ckpt_dir, f"step_{step:09d}", _MANIFEST)
+    with open(path) as f:
+        return json.load(f)
 
 
 def restore(ckpt_dir: str, step: int, like: Any,
