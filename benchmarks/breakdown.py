@@ -23,16 +23,26 @@ median µs) on a forces + SIR-infection workload (two registered kernels):
   commit_us              death-compaction permutation
   fused_neighbor_us      ONE resident_apply_fused over both kernels
   unfused_neighbor_us    force_us + behavior_us (the sequential schedule)
+  pairlist_build_us      grid.build_pairlist: distance-filter the fused
+                         candidate stream into the packed Verlet table
+                         (paid once per rebuild, amortized under skin reuse)
+  pairlist_neighbor_us   the same fused sweep fed from the pair list
+                         (from_pairlist mode: one width-P gather + 9 masked
+                         segment rounds instead of 9 width-R streamed runs)
 
 derived.fusion_speedup = unfused_neighbor_us / fused_neighbor_us — the
-acceptance bar is >= 1.5x at >= 1M agents on the dev container. Records
+acceptance bar is >= 1.5x at >= 1M agents on the dev container.
+derived.pairlist_speedup = fused_neighbor_us / pairlist_neighbor_us — the
+PR 9 bar, >= 1.5x at >= 1M agents, with ``pairs_per_agent`` (mean listed
+in-range candidates) and ``pruning_ratio`` (listed / streamed candidates)
+recording how much of the stream the filter removes. Records
 ``BENCH_breakdown.json``; benchmarks/trend.py gates every per-size phase key
 (they are fixed-shape standalone timings — schedule-independent, unlike the
 capacity ladder's whole-step times).
 
-Env: ``BREAKDOWN_SIZES`` (comma list, default "65536,1048576" — the small
-size exists so CI's reduced run compares identity-keyed against the same
-committed record).
+Env: ``BREAKDOWN_SIZES`` (comma list, default "65536,262144,1048576" — the
+small size exists so CI's reduced run compares identity-keyed against the
+same committed record).
 """
 
 from __future__ import annotations
@@ -138,11 +148,40 @@ def _one_size(n: int) -> dict:
     us_integrate = time_fn(integrate, rpool.position, force_out, alive)
     us_commit = time_fn(jax.jit(compaction.compact), rpool)
 
+    # --- Verlet pair list: build + the same fused sweep fed from it ---
+    # max_pairs sized to the density (~17 in-range at 4/box within r=4.0);
+    # demand is asserted below so an undersized table can't record a win.
+    max_pairs = 64
+    pl_build = jax.jit(lambda g, p, m: G.build_pairlist(
+        spec, g, p, m, radius=cfg.interaction_radius, max_pairs=max_pairs,
+        chunk=cfg.query_chunk))
+    us_pl_build = time_fn(pl_build, gs, rpool.position, alive)
+    pairs = pl_build(gs, rpool.position, alive)
+    demand = int(pairs.demand)
+    assert demand <= max_pairs, (
+        f"pair table overflowed at n={n}: demand {demand} > {max_pairs}")
+    pl_fused = jax.jit(lambda g, ch, m, pl: G.resident_apply_fused(
+        spec, g, ch, [force_k, infect_k], m, cfg.query_chunk, pairs=pl))
+    us_pl = time_fn(pl_fused, gs, channels, alive, pairs)
+
+    n_live = float(jnp.sum(alive))
+    pairs_per_agent = float(jnp.sum(jnp.where(alive, pairs.count, 0))) / n_live
+    _, run_n = G.run_bounds(spec, gs, rpool.position)
+    run_n = jnp.minimum(run_n, spec.run_capacity)
+    cand = jnp.where(alive, jnp.sum(run_n, axis=-1), 0)
+    cand_per_agent = float(jnp.sum(cand)) / n_live
+    pruning = pairs_per_agent / max(cand_per_agent, 1e-9)
+
     us_unfused = us_force + us_behav
     speedup = us_unfused / max(us_fused, 1e-9)
+    pl_speedup = us_fused / max(us_pl, 1e-9)
     emit(f"breakdown_n{n}_fused_neighbor", us_fused,
          f"vs unfused {us_unfused:.0f}us -> {speedup:.2f}x "
          f"(footprint {len(reads)}/{len(seq_channels)} channels)")
+    emit(f"breakdown_n{n}_pairlist_neighbor", us_pl,
+         f"vs streamed {us_fused:.0f}us -> {pl_speedup:.2f}x "
+         f"({pairs_per_agent:.1f} pairs/agent of {cand_per_agent:.1f} "
+         f"candidates, pruning {pruning:.1%}; build {us_pl_build:.0f}us)")
     emit(f"breakdown_n{n}_build", us_build, "")
 
     # paper Fig 5 shares (agent ops vs build vs commit), for continuity
@@ -163,7 +202,15 @@ def _one_size(n: int) -> dict:
         "commit_us": us_commit,
         "fused_neighbor_us": us_fused,
         "unfused_neighbor_us": us_unfused,
+        "pairlist_build_us": us_pl_build,
+        "pairlist_neighbor_us": us_pl,
         "fusion_speedup": speedup,
+        "pairlist_speedup": pl_speedup,
+        "pairs_per_agent": pairs_per_agent,
+        "candidates_per_agent": cand_per_agent,
+        "pruning_ratio": pruning,
+        "pair_demand": demand,
+        "max_pairs": max_pairs,
         "channels_streamed_fused": len(reads),
         "channels_streamed_unfused": len(seq_channels),
         "footprint": list(reads),
@@ -172,11 +219,12 @@ def _one_size(n: int) -> dict:
 
 def run() -> None:
     sizes = [int(s) for s in os.environ.get(
-        "BREAKDOWN_SIZES", "65536,1048576").split(",") if s]
+        "BREAKDOWN_SIZES", "65536,262144,1048576").split(",") if s]
     records = [_one_size(n) for n in sizes]
     write_bench_json("BENCH_breakdown.json", {
         "records": records,
         "kernels": ["force", "infection"],
         "note": "standalone jitted phase timings (compile excluded); "
-                "fusion_speedup = unfused_neighbor_us / fused_neighbor_us",
+                "fusion_speedup = unfused_neighbor_us / fused_neighbor_us; "
+                "pairlist_speedup = fused_neighbor_us / pairlist_neighbor_us",
     })

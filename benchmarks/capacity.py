@@ -16,9 +16,11 @@ max_per_run) is chosen by the ladder from the overflow provenance in
 StepStats. Records ``BENCH_capacity.json``: peak live count, the rung
 schedule, recompile count, and **per rung** the whole-step µs plus
 standalone phase buckets timed on their own (compile excluded): ``build_us``
-(the O(N) counting-sort resident build), ``neighbor_us`` (the fused sweep
-over the step's registered kernels), ``commit_us`` (death compaction), and
-a ``behavior_other_us`` residual. The standalone keys are what
+(the O(N) counting-sort resident build), the fused sweep over the step's
+registered kernels timed both ways — ``streamed_neighbor_us`` vs
+``pairlist_neighbor_us`` (Verlet pair-list fed, DESIGN.md §3.4), with
+``neighbor_us`` kept as the streamed alias — ``commit_us`` (death
+compaction), and a ``behavior_other_us`` residual. The standalone keys are what
 benchmarks/trend.py gates, since the whole-step schedule depends on where
 rungs/recompiles land.
 
@@ -77,16 +79,20 @@ def _time_warm(fn, *args) -> float:
 
 def _measure_phases_us(cfg: EngineConfig, behaviors, pool) -> dict:
     """Standalone jit-warm phase buckets at this rung (DESIGN.md §3.2):
-    ``neighbor_us`` the fused sweep over the step's registered kernels (0.0
-    when no kernels register — this growth scenario runs forces-off with
-    sweep-free behaviors), ``commit_us`` the death-compaction permutation.
-    Together with ``build_us`` these split ``step_other_us`` into buckets
-    that stay comparable across PRs regardless of the rung schedule."""
+    the fused sweep over the step's registered kernels timed BOTH ways —
+    ``streamed_neighbor_us`` (the 9-run candidate stream) and
+    ``pairlist_neighbor_us`` (the same sweep fed from a Verlet pair list,
+    DESIGN.md §3.4) — both 0.0 when no kernels register (this growth
+    scenario runs forces-off with sweep-free behaviors), and ``commit_us``
+    the death-compaction permutation. Together with ``build_us`` these
+    split ``step_other_us`` into buckets that stay comparable across PRs
+    regardless of the rung schedule. ``neighbor_us`` stays as an alias of
+    the streamed time for continuity with pre-split baselines."""
     spec = cfg.grid_spec
     origin = jnp.asarray(cfg.domain_lo, jnp.float32)
     box = jnp.asarray(cfg.cell_size, jnp.float32)
     kernels = engine_mod.registered_kernels(cfg, behaviors)
-    neighbor_us = 0.0
+    streamed_us = pairlist_us = 0.0
     if kernels:
         res = jax.jit(lambda p: grid_mod.make_builder(
             spec, method="resident", sort_impl=cfg.sort_impl)(
@@ -94,9 +100,25 @@ def _measure_phases_us(cfg: EngineConfig, behaviors, pool) -> dict:
         channels = res.pool.channels()
         sweep = jax.jit(lambda ch, m: grid_mod.resident_apply_fused(
             spec, res.grid, ch, kernels, m, cfg.query_chunk))
-        neighbor_us = _time_warm(sweep, channels, res.pool.alive)
+        streamed_us = _time_warm(sweep, channels, res.pool.alive)
+        # pair table sized from the realized demand (next power of two, so a
+        # rung-boundary remeasure at higher occupancy keeps the same shape)
+        probe = jax.jit(lambda p, m: grid_mod.build_pairlist(
+            spec, res.grid, p, m, radius=cfg.interaction_radius,
+            max_pairs=8, chunk=cfg.query_chunk))(
+                res.pool.position, res.pool.alive)
+        max_pairs = max(8, 1 << int(np.ceil(np.log2(
+            max(int(probe.demand), 1)))))
+        pairs = jax.jit(lambda p, m: grid_mod.build_pairlist(
+            spec, res.grid, p, m, radius=cfg.interaction_radius,
+            max_pairs=max_pairs, chunk=cfg.query_chunk))(
+                res.pool.position, res.pool.alive)
+        pl_sweep = jax.jit(lambda ch, m, pl: grid_mod.resident_apply_fused(
+            spec, res.grid, ch, kernels, m, cfg.query_chunk, pairs=pl))
+        pairlist_us = _time_warm(pl_sweep, channels, res.pool.alive, pairs)
     commit_us = _time_warm(jax.jit(compaction.compact), pool)
-    return {"neighbor_us": neighbor_us, "commit_us": commit_us}
+    return {"neighbor_us": streamed_us, "streamed_neighbor_us": streamed_us,
+            "pairlist_neighbor_us": pairlist_us, "commit_us": commit_us}
 
 
 def run() -> None:
@@ -168,6 +190,10 @@ def run() -> None:
                          "us_per_step": step_us,
                          "build_us": build_us,
                          "neighbor_us": phases["neighbor_us"],
+                         "streamed_neighbor_us": phases[
+                             "streamed_neighbor_us"],
+                         "pairlist_neighbor_us": phases[
+                             "pairlist_neighbor_us"],
                          "commit_us": phases["commit_us"],
                          "behavior_other_us": max(
                              other_us - phases["neighbor_us"]

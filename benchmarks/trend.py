@@ -49,11 +49,14 @@ from typing import Dict, List
 # whole-step times depend on where rungs/recompiles land in the growth
 # schedule (not apples-to-apples across runs), but the per-rung standalone
 # phase timings (``build_us`` — the O(N) counting-sort build — plus the
-# ``neighbor_us``/``commit_us`` buckets split out of step_other_us) are
-# jit-warm measurements at a fixed capacity, comparable across PRs.
-# BENCH_breakdown.json needs no filter: every ``*_us`` leaf is a standalone
-# fixed-shape phase timing keyed by n_agents — this is where a fused-sweep
-# regression (fused_neighbor_us) fails the gate.
+# ``neighbor_us``/``commit_us`` buckets split out of step_other_us; the
+# neighbor bucket is recorded both ``streamed_neighbor_us`` and
+# ``pairlist_neighbor_us``, which the ``neighbor_us`` substring filter
+# admits) are jit-warm measurements at a fixed capacity, comparable across
+# PRs. BENCH_breakdown.json needs no filter: every ``*_us`` leaf is a
+# standalone fixed-shape phase timing keyed by n_agents — this is where a
+# fused-sweep regression (fused_neighbor_us) or a Verlet pair-list
+# regression (pairlist_build_us / pairlist_neighbor_us) fails the gate.
 GATED_FILES = ("BENCH_neighbor.json", "BENCH_scaling.json",
                "BENCH_statics.json", "BENCH_distributed.json",
                "BENCH_capacity.json", "BENCH_breakdown.json")

@@ -38,6 +38,14 @@ EXPECTED = {
     "cell_clustering": (),
 }
 
+# configs with the Verlet pair list enabled (DESIGN.md §3.4): the pair list
+# prunes *candidates*, never channels — the realized footprint must be
+# identical to the same config served by the streamed sweep
+PAIRLIST_VARIANTS = {
+    "cell_clustering": (lambda mod: mod.make_config(pairlist=True),
+                        FORCE_READS),
+}
+
 
 def main() -> int:
     failed = []
@@ -55,6 +63,21 @@ def main() -> int:
         except Exception as e:          # noqa: BLE001 - report and fail
             print(f"{name:18s} footprint check FAILED: {e}")
             failed.append(name)
+        if name in PAIRLIST_VARIANTS:
+            make_cfg, pl_expected = PAIRLIST_VARIANTS[name]
+            pl_cfg = make_cfg(mod)
+            assert pl_cfg.pairlist is not None, name
+            pl_got = engine_mod.realized_footprint(pl_cfg, behaviors)
+            pl_status = "ok"
+            if pl_got != tuple(pl_expected):
+                pl_status = f"MISMATCH (expected {tuple(pl_expected)})"
+                failed.append(name)
+            print(f"{name:18s} [pairlist] footprint={pl_got} {pl_status}")
+            try:
+                engine_mod.check_kernel_footprints(pl_cfg, behaviors)
+            except Exception as e:      # noqa: BLE001 - report and fail
+                print(f"{name:18s} [pairlist] footprint check FAILED: {e}")
+                failed.append(name)
     if failed:
         print(f"FAILED: {sorted(set(failed))}", file=sys.stderr)
         return 1

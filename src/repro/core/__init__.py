@@ -9,7 +9,8 @@ from .engine import (CapacityExhausted, CapacityLadder, EngineConfig,
                      make_iteration_core)
 from .forces import ForceParams
 from .grid import (BuildResult, GridBuilderDeprecationWarning, GridSpec,
-                   RebuildPolicy, counting_sort_order, make_builder)
+                   PairList, PairListConfig, RebuildPolicy,
+                   counting_sort_order, make_builder)
 from .health import HealthConfig, HealthFault
 from .simcheck import (DegradationPolicy, RunReport, SimCheckpointer,
                        SupervisedRunner, restore_dist_state, restore_state,
@@ -22,7 +23,8 @@ __all__ = ["AgentPool", "DtypePolicy", "make_pool", "pool_from_channels",
            "CapacityExhausted", "CapacityLadder", "LadderConfig",
            "ForceParams", "GridSpec", "StepStats", "DistConfig",
            "DistributedSimulation", "DistributedCapacityLadder", "DistState",
-           "BuildResult", "GridBuilderDeprecationWarning", "RebuildPolicy",
+           "BuildResult", "GridBuilderDeprecationWarning", "PairList",
+           "PairListConfig", "RebuildPolicy",
            "counting_sort_order", "make_builder", "HealthConfig",
            "HealthFault", "DegradationPolicy", "RunReport", "SimCheckpointer",
            "SupervisedRunner", "restore_dist_state", "restore_state",

@@ -172,6 +172,11 @@ class Infection(Behavior):
         def pair_fn(q, nbr, valid, q_slot):
             d = nbr["position"] - q["position"][:, None, :]
             dist2 = jnp.sum(d * d, axis=-1)
+            # NOTE the INCLUSIVE dist² ≤ r² test: the pair-list build filter
+            # (grid.build_pairlist) is inclusive at (r+skin)² for exactly
+            # this reason — an equality-distance infected neighbor must
+            # survive the pruning. Out-of-range candidates contribute int 0
+            # to the OR-count, so pruning/stale extras are exact no-ops.
             exposed = valid & nbr["alive"] & (nbr["agent_type"] == INFECTED) \
                 & (dist2 <= r * r)
             # OR encoded as an additive count across the 9 streamed runs;

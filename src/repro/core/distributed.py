@@ -86,10 +86,14 @@ class DistConfig:
     def halo_width(self) -> float:
         """Ghost band thickness: r, or 2·r under detect_static (statics.py);
         plus the rebuild policy's cell slack so the band stays a conservative
-        superset when every_k widens the grid cells (grid.RebuildPolicy)."""
+        superset when every_k widens the grid cells (grid.RebuildPolicy), and
+        plus the pair-list skin so a list built at radius r + skin still sees
+        every cross-shard candidate (grid.PairListConfig)."""
+        skin = (self.engine.pairlist.skin
+                if self.engine.pairlist is not None else 0.0)
         return self.engine.interaction_radius * (
             2.0 if self.engine.detect_static else 1.0
-        ) + self.engine.rebuild.cell_slack
+        ) + self.engine.rebuild.cell_slack + skin
 
     @property
     def total_capacity(self) -> int:
@@ -442,7 +446,8 @@ def make_distributed_step(dcfg: DistConfig, mesh, behaviors: Sequence[Behavior]
             grid_mod.initial_rebuild_state(
                 cfg.grid_spec, dcfg.total_capacity,
                 jnp.asarray(cfg.domain_lo, jnp.float32),
-                jnp.asarray(cfg.cell_size, jnp.float32)))
+                jnp.asarray(cfg.cell_size, jnp.float32),
+                pairlist=cfg.pairlist))
     in_specs = (ch_specs, P(axis), P(axis), P(), P(), env_specs)
     out_specs = (ch_specs, P(axis), P(axis), P(),
                  StepStats(**{f: P(axis) for f in StepStats.FIELDS}),
@@ -540,7 +545,8 @@ class DistributedSimulation:
             env0 = grid_mod.initial_rebuild_state(
                 cfg.grid_spec, dcfg.total_capacity,
                 jnp.asarray(cfg.domain_lo, jnp.float32),
-                jnp.asarray(cfg.cell_size, jnp.float32))
+                jnp.asarray(cfg.cell_size, jnp.float32),
+                pairlist=cfg.pairlist)
             env = jax.tree_util.tree_map(
                 lambda a: jnp.broadcast_to(a[None], (dcfg.n_shards,)
                                            + a.shape).copy(), env0)
@@ -588,6 +594,12 @@ class DistributedSimulation:
                         "box_overflow": (
                             "grid run overflow on a shard; raise "
                             "EngineConfig.max_per_run / max_per_box"),
+                        "pair_overflow": (
+                            f"pair-list overflow on a shard (an agent has "
+                            f"more in-range(+skin) candidates than "
+                            f"max_pairs; per-shard demand "
+                            f"{np.asarray(s.pair_demand).tolist()}); raise "
+                            f"PairListConfig.max_pairs"),
                         "birth_overflow": (
                             f"local pool overflow on a shard (staged "
                             f"newborns / migration arrivals / repack "
@@ -599,7 +611,8 @@ class DistributedSimulation:
                     # report in severity order, not dict order
                     for f in ("halo_overflow", "thin_slab",
                               "migrate_overflow", "in_flight",
-                              "box_overflow", "birth_overflow"):
+                              "box_overflow", "pair_overflow",
+                              "birth_overflow"):
                         if f in flags:
                             raise RuntimeError(
                                 f"iteration {i}: {remediation[f]}")
@@ -676,9 +689,9 @@ class DistributedCapacityLadder(LadderDriverBase):
                 "agents in flight across >1 slab after a rebalance — lower "
                 "rebalance_frequency (not a capacity problem)")
         changes = {}
+        eng = d.engine
         if tot("box_overflow"):
             demand = int(np.asarray(jnp.max(stats["box_demand"])))
-            eng = d.engine
             if eng.environment == "hash_grid":
                 need = -(-demand // grid_mod.HASH_K_MULT)
                 eng = dataclasses.replace(eng, max_per_box=next_rung(
@@ -687,6 +700,14 @@ class DistributedCapacityLadder(LadderDriverBase):
                 cur = eng.grid_spec.run_capacity
                 eng = dataclasses.replace(eng, max_per_run=next_rung(
                     cur, demand, lad.growth_factor))
+        if tot("pair_overflow"):
+            # agreed global rung: one max_pairs for every shard, sized off
+            # the worst per-shard demand
+            demand = int(np.asarray(jnp.max(stats["pair_demand"])))
+            eng = dataclasses.replace(eng, pairlist=dataclasses.replace(
+                eng.pairlist, max_pairs=next_rung(
+                    eng.pairlist.max_pairs, demand, lad.growth_factor)))
+        if eng is not d.engine:
             changes["engine"] = eng
         if tot("halo_overflow"):
             demand = d.halo_capacity + int(np.asarray(
@@ -728,7 +749,11 @@ class DistributedCapacityLadder(LadderDriverBase):
             [(f, getattr(self.dcfg, f), getattr(new_d, f))
              for f in ("local_capacity", "halo_capacity", "migrate_capacity")]
             + [(f, getattr(self.dcfg.engine, f), getattr(new_d.engine, f))
-               for f in ("max_per_box", "max_per_run")])
+               for f in ("max_per_box", "max_per_run")]
+            + ([("max_pairs", self.dcfg.engine.pairlist.max_pairs,
+                 new_d.engine.pairlist.max_pairs)]
+               if (new_d.engine.pairlist is not None
+                   and self.dcfg.engine.pairlist is not None) else []))
         self.dcfg = new_d
         self._sim = DistributedSimulation(new_d, self.behaviors, self._mesh,
                                           self.axis)
@@ -749,9 +774,24 @@ class DistributedCapacityLadder(LadderDriverBase):
               iteration: int) -> DistState:
         old_local = self.dcfg.local_capacity
         old_total = self.dcfg.total_capacity
+        old_pl = self.dcfg.engine.pairlist
         self._rebuild(new_d, iteration)
         if new_d.local_capacity != old_local:
             prev = self._restage(prev, old_local, new_d.local_capacity)
+        new_pl = new_d.engine.pairlist
+        if (prev.env is not None and prev.env.pairs is not None
+                and new_pl is not None and old_pl is not None
+                and (new_d.total_capacity != old_total
+                     or new_pl.max_pairs != old_pl.max_pairs)):
+            # (S, C, P) tables: grow_pairlist pads the trailing axes only —
+            # an overflowed cached list never survives a kept step (the
+            # rewind discards the overflowing step's output), so the zero
+            # padding is exactly what a pre-sized build would hold
+            prev = dataclasses.replace(
+                prev, env=dataclasses.replace(
+                    prev.env, pairs=grid_mod.grow_pairlist(
+                        prev.env.pairs, new_d.total_capacity,
+                        new_pl.max_pairs)))
         if prev.env is not None and new_d.total_capacity != old_total:
             # the cached grid spans the in-step pool (owned + ghost bands);
             # grow it alongside. grow_grid_state's dead-key/iota padding is

@@ -86,6 +86,14 @@ class EngineConfig:
                                            # when the grid build runs
                                            # (every_step | every_k with a
                                            # displacement bound; grid.py)
+    pairlist: Optional[grid_mod.PairListConfig] = None
+                                           # Verlet pair-list stage: at each
+                                           # rebuild, compact the in-range(+
+                                           # skin) candidates into a fixed
+                                           # (C, max_pairs) table and serve
+                                           # the fused sweep from it
+                                           # (grid.build_pairlist; None keeps
+                                           # the streamed 9-run sweep)
     sort_impl: str = "auto"                # key-sort realization of the grid
                                            # build (grid.SORT_IMPLS): O(N)
                                            # counting sort on host/xla,
@@ -117,13 +125,35 @@ class EngineConfig:
                     "detect_static=True: box-granular disturbance "
                     "aggregation (statics.py) reads fresh per-step tables; "
                     "set rebuild=RebuildPolicy() or detect_static=False")
+        if self.pairlist is not None:
+            if self.environment != "uniform_grid" or not self.fused_sweep:
+                raise ValueError(
+                    "pairlist requires environment='uniform_grid' and "
+                    "fused_sweep=True (the pair table prunes the fused "
+                    "resident candidate stream; other environments / the "
+                    "sequential sweeps never consume it)")
+            if self.detect_static:
+                raise ValueError(
+                    "pairlist is incompatible with detect_static=True: the "
+                    "pair table is built over all live rows while static "
+                    "detection re-masks queries per step from fresh tables; "
+                    "disable one of the two")
+            if self.pairlist.skin > 0 and self.rebuild.mode != "every_k":
+                raise ValueError(
+                    "pairlist.skin > 0 only pays off under "
+                    "rebuild.mode='every_k' (the skin exists to let cached "
+                    "lists survive between rebuilds); use skin=0 with "
+                    "every-step rebuilds")
 
     @property
     def cell_size(self) -> float:
-        """Grid box edge: the interaction radius, widened by the rebuild
-        policy's displacement bound so stale-table stencils still cover
-        every in-radius pair (grid.RebuildPolicy coverage argument)."""
-        return self.interaction_radius + self.rebuild.cell_slack
+        """Grid box edge: the interaction radius, widened by the larger of
+        the rebuild policy's displacement bound (stale-table stencils must
+        cover every in-radius pair — grid.RebuildPolicy coverage argument)
+        and the pair-list skin (a fresh build's 3×3×3 stencil must reach
+        every candidate within r + skin for grid.build_pairlist)."""
+        skin = self.pairlist.skin if self.pairlist is not None else 0.0
+        return self.interaction_radius + max(self.rebuild.cell_slack, skin)
 
     @property
     def grid_spec(self) -> grid_mod.GridSpec:
@@ -415,6 +445,16 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
         return compaction.apply_permutation(pool, order)
 
     use_cache = cfg.rebuild.mode == "every_k"
+    pl = cfg.pairlist
+    pair_radius = (cfg.interaction_radius + pl.skin) if pl is not None else 0.0
+
+    def build_pairs(pool: AgentPool, grid_env) -> Optional[grid_mod.PairList]:
+        if pl is None:
+            return None
+        return grid_mod.build_pairlist(
+            spec, grid_env, pool.position, pool.alive,
+            radius=pair_radius, max_pairs=pl.max_pairs,
+            chunk=cfg.query_chunk, pvary_axes=pvary_axes)
 
     def core(pool: AgentPool, conc: jnp.ndarray, rng: jax.Array,
              it: jnp.ndarray, env: Optional[grid_mod.RebuildState] = None):
@@ -429,18 +469,24 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
             pool = jax.lax.cond(it % cfg.sort_frequency == 0,
                                 sort_pool, lambda p: p, pool)
         rebuilt = jnp.ones((), jnp.int32)
+        pairs = None
         if not use_cache:
             res = build_env(cfg, spec, pool, origin, box_size)
             pool, grid_env = res.pool, res.grid
+            pairs = build_pairs(pool, grid_env)
         else:
             # every_k (uniform_grid only, enforced by EngineConfig): rebuild
             # when the cache is dirty (structural change last step), the k
             # budget is spent, or accumulated displacement exceeds the bound
             # the widened cells were sized for — otherwise skip the
             # permutation + table build outright and query the stale tables
-            # (grid.RebuildPolicy coverage argument).
+            # (grid.RebuildPolicy coverage argument). A cached pair list has
+            # its own, euclidean budget: it covers every in-range pair only
+            # while 2·pair_disp ≤ skin (grid.PairListConfig).
             do_build = (env.dirty | (env.steps_since >= cfg.rebuild.k)
                         | (env.disp_accum > cfg.rebuild.displacement_bound))
+            if pl is not None:
+                do_build = do_build | (2.0 * env.pair_disp > pl.skin)
 
             def _fresh(pool, env):
                 res = build_env(cfg, spec, pool, origin, box_size)
@@ -448,11 +494,15 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
                     grid=res.grid,
                     steps_since=jnp.zeros((), jnp.int32),
                     disp_accum=jnp.zeros((), jnp.float32),
-                    dirty=jnp.zeros((), bool))
+                    dirty=jnp.zeros((), bool),
+                    pairs=build_pairs(res.pool, res.grid),
+                    pair_disp=(jnp.zeros((), jnp.float32)
+                               if pl is not None else None))
 
             pool, env = jax.lax.cond(do_build, _fresh,
                                      lambda pool, env: (pool, env), pool, env)
             grid_env = env.grid
+            pairs = env.pairs
             rebuilt = do_build.astype(jnp.int32)
         box_overflow = stats.box_overflow
         box_demand = stats.box_demand
@@ -470,6 +520,15 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
             box_overflow = (
                 grid_env.max_bucket_count
                 > grid_mod.HASH_K_MULT * spec.max_per_box).astype(jnp.int32)
+        pair_overflow = stats.pair_overflow
+        pair_demand = stats.pair_demand
+        if pairs is not None:
+            # same never-silent contract as the run/bucket capacities: a row
+            # demanding more than max_pairs entries truncated its list; the
+            # demand is the which-capacity provenance the ladder sizes the
+            # max_pairs rung from (§4.2/§4.3)
+            pair_demand = pairs.demand
+            pair_overflow = (pairs.demand > pl.max_pairs).astype(jnp.int32)
 
         if cfg.diffusion is not None:
             sub_dt = cfg.dt / cfg.diffusion_substeps
@@ -532,14 +591,15 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
                         box_size=box_size, k_rep=cfg.force.k_rep,
                         adhesion=cfg.adhesion,
                         adhesion_band=cfg.force.adhesion_band,
-                        chunk=cfg.query_chunk, pvary_axes=pvary_axes)
+                        chunk=cfg.query_chunk, pvary_axes=pvary_axes,
+                        pairs=pairs)
                     box_overflow = jnp.maximum(box_overflow,
                                                ovf.astype(jnp.int32))
                 else:
                     nbr_results = grid_mod.resident_apply_fused(
                         spec, grid_env, channels_full, kernels,
                         default_mask=owned_alive, chunk=cfg.query_chunk,
-                        pvary_axes=pvary_axes)
+                        pvary_axes=pvary_axes, pairs=pairs)
 
         # ---------------- agent ops: forces ----------------
         force_arr = None                  # kept for the health guard below
@@ -618,6 +678,12 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
             # 3×3×3 stencil coverage argument consumes (grid.RebuildPolicy)
             step_disp = jnp.max(jnp.where(pool.alive[:, None],
                                           jnp.abs(move_d), 0.0))
+            if pl is not None:
+                # the pair-list skin argument needs the EUCLIDEAN per-agent
+                # motion (a per-axis max does not bound ‖Δpos‖); the list
+                # stays a superset while 2·pair_disp ≤ skin
+                step_disp_eu = jnp.sqrt(jnp.max(jnp.where(
+                    pool.alive, jnp.sum(move_d * move_d, -1), 0.0)))
 
         # ---------------- health watchdog (§7.5) ----------------
         # One fused reduction over channels the step already materialized;
@@ -660,11 +726,14 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
             # the pool, so the next step must rebuild (never-stale-dead
             # invariant: stale tables only ever index the layout they were
             # built over, with every indexed slot still live)
-            env = grid_mod.RebuildState(
-                grid=env.grid,
+            env = dataclasses.replace(
+                env,
                 steps_since=env.steps_since + 1,
                 disp_accum=env.disp_accum + step_disp,
-                dirty=(deaths > 0) | (births > 0))
+                dirty=(deaths > 0) | (births > 0),
+                **({"pairs": pairs,
+                    "pair_disp": env.pair_disp + step_disp_eu}
+                   if pl is not None else {}))
 
         n_live_end = jnp.sum(owned_of(pool).astype(jnp.int32))
         stats = dataclasses.replace(
@@ -675,6 +744,7 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
             # slots needed to have committed every staged agent (§4.3
             # provenance: the capacity rung target)
             capacity_demand=n_live_end + birth_overflow,
+            pair_overflow=pair_overflow, pair_demand=pair_demand,
             rebuilds=rebuilt, rebuild_skips=1 - rebuilt, health=health)
         return pool, conc, rng, stats, env
 
@@ -732,7 +802,8 @@ class Simulation:
             env = grid_mod.initial_rebuild_state(
                 self.spec, self.config.capacity,
                 jnp.asarray(self.config.domain_lo, jnp.float32),
-                jnp.asarray(self.config.cell_size, jnp.float32))
+                jnp.asarray(self.config.cell_size, jnp.float32),
+                pairlist=self.config.pairlist)
         return EngineState(pool=pool, conc=conc, rng=jax.random.PRNGKey(seed),
                            iteration=jnp.zeros((), jnp.int32),
                            stats=StepStats.zeros(), env=env)
@@ -781,6 +852,11 @@ class Simulation:
                 if "birth_overflow" in flags:
                     raise RuntimeError(
                         f"iteration {i}: birth overflow; raise EngineConfig.capacity")
+                if "pair_overflow" in flags:
+                    raise RuntimeError(
+                        f"iteration {i}: pair-list overflow (an agent has > "
+                        f"{self.config.pairlist.max_pairs} in-range(+skin) "
+                        f"candidates); raise PairListConfig.max_pairs")
             if callback is not None:
                 callback(i, state)
         return state
@@ -941,6 +1017,8 @@ class CapacityLadder(LadderDriverBase):
       birth_overflow  → ``capacity``       (rung target: capacity_demand)
       box_overflow    → ``max_per_run``    (uniform grid; target box_demand)
                         ``max_per_box``    (hash grid bucket width)
+      pair_overflow   → ``pairlist.max_pairs`` (Verlet list row width;
+                        rung target: pair_demand)
 
     Growth events are recorded in ``self.rungs`` and recompiles counted in
     ``self.recompiles`` (benchmarks/capacity.py reports both).
@@ -967,7 +1045,13 @@ class CapacityLadder(LadderDriverBase):
     def _diagnose(self, stats: StepStats) -> Optional[EngineConfig]:
         """New config for the overflow recorded in ``stats`` (None = no grow)."""
         cfg, lad = self.config, self.ladder
-        changes: Dict[str, int] = {}
+        changes: Dict = {}
+        if int(stats["pair_overflow"]):
+            demand = int(stats["pair_demand"])
+            changes["pairlist"] = dataclasses.replace(
+                cfg.pairlist,
+                max_pairs=next_rung(cfg.pairlist.max_pairs, demand,
+                                    lad.growth_factor))
         if int(stats["box_overflow"]):
             demand = int(stats["box_demand"])
             if cfg.environment == "hash_grid":
@@ -995,21 +1079,38 @@ class CapacityLadder(LadderDriverBase):
 
     def _grow(self, new_cfg: EngineConfig, prev: EngineState,
               iteration: int) -> EngineState:
-        self._log_rungs(iteration,
-                        [(f, getattr(self.config, f), getattr(new_cfg, f))
-                         for f in ("capacity", "max_per_box", "max_per_run")])
-        self.config = new_cfg
+        rungs = [(f, getattr(self.config, f), getattr(new_cfg, f))
+                 for f in ("capacity", "max_per_box", "max_per_run")]
+        if new_cfg.pairlist is not None and self.config.pairlist is not None:
+            rungs.append(("max_pairs", self.config.pairlist.max_pairs,
+                          new_cfg.pairlist.max_pairs))
+        self._log_rungs(iteration, rungs)
+        old_cfg, self.config = self.config, new_cfg
         self._sim = Simulation(new_cfg, self.behaviors)
-        if new_cfg.capacity != prev.pool.capacity:
+        cap_grew = new_cfg.capacity != prev.pool.capacity
+        pairs_grew = (new_cfg.pairlist is not None
+                      and old_cfg.pairlist is not None
+                      and (cap_grew or new_cfg.pairlist.max_pairs
+                           != old_cfg.pairlist.max_pairs))
+        if cap_grew or pairs_grew:
             env = prev.env
             if env is not None:
                 # the rewound step re-runs with this cache: growing it the
                 # way a pre-sized build would have laid it out keeps the
-                # grown trajectory bit-identical (grid.grow_grid_state)
-                env = dataclasses.replace(
-                    env, grid=grid_mod.grow_grid_state(env.grid,
-                                                       new_cfg.capacity))
-            prev = dataclasses.replace(
-                prev, pool=compaction.grow_pool(prev.pool, new_cfg.capacity),
-                env=env)
+                # grown trajectory bit-identical (grid.grow_grid_state /
+                # grid.grow_pairlist — a cached list that overflowed never
+                # survives a kept step, so zero-padding matches a pre-sized
+                # build exactly)
+                if cap_grew:
+                    env = dataclasses.replace(
+                        env, grid=grid_mod.grow_grid_state(env.grid,
+                                                           new_cfg.capacity))
+                if pairs_grew and env.pairs is not None:
+                    env = dataclasses.replace(
+                        env, pairs=grid_mod.grow_pairlist(
+                            env.pairs, new_cfg.capacity,
+                            new_cfg.pairlist.max_pairs))
+            pool = (compaction.grow_pool(prev.pool, new_cfg.capacity)
+                    if cap_grew else prev.pool)
+            prev = dataclasses.replace(prev, pool=pool, env=env)
         return prev

@@ -47,6 +47,14 @@ def pair_force(q_pos: jnp.ndarray, q_dia: jnp.ndarray, q_type: jnp.ndarray,
     q_*: (B, ...) query channels; n_*: (B, M, ...) neighbor candidates;
     valid: (B, M). Returns (B, M, 3) forces (zero where invalid / out of range).
     adhesion: (T, T) type-adhesion matrix or None (no adhesion).
+
+    Exact-zero-outside-reach contract (grid.PairList relies on it): a pair
+    farther apart than (d_i + d_j)/2 + adhesion_band contributes exactly
+    +0.0 to every output component and does not count as ``interacting`` —
+    so pruning such candidates out of the stream, or carrying stale extras
+    under skin reuse, cannot change the accumulated force by even one ulp.
+    The reach is ≤ interaction_radius (the same bound the 3×3×3 grid stencil
+    already assumes), hence ≤ the pair-list filter radius r + skin.
     """
     d = n_pos - q_pos[:, None, :]                      # (B, M, 3)
     dist2 = jnp.sum(d * d, axis=-1)

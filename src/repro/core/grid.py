@@ -295,6 +295,96 @@ class RebuildPolicy:
         return float(self.displacement_bound) if self.mode == "every_k" else 0.0
 
 
+@dataclasses.dataclass(frozen=True)
+class PairListConfig:
+    """Static Verlet pair-list configuration (hashable; part of the jit key).
+
+    skin:      extra filter radius beyond the interaction radius. The list is
+               built at ``r + skin`` and stays a superset of every in-range
+               pair while each agent's accumulated euclidean displacement
+               since the build is ≤ ``skin/2`` (triangle inequality: two
+               agents approaching head-on close the gap by at most
+               2·(skin/2) = skin). skin=0 ⇒ the list is exact only for the
+               build step, so it pairs with every-step rebuilds.
+    max_pairs: P — fixed per-agent width of the index table. Demand above P
+               flags ``pair_overflow`` in StepStats (never silent; the
+               capacity ladder grows this rung with bit-identical rewind).
+    """
+    skin: float = 0.0
+    max_pairs: int = 32
+
+    def __post_init__(self):
+        if self.skin < 0:
+            raise ValueError(f"pairlist.skin must be ≥ 0, got {self.skin!r}")
+        if not isinstance(self.max_pairs, int) or self.max_pairs < 1:
+            raise ValueError(f"pairlist.max_pairs must be an int ≥ 1, "
+                             f"got {self.max_pairs!r}")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PairList:
+    """Compacted per-agent candidate table (Verlet list, DESIGN.md §3.4).
+
+    Built once per grid rebuild by :func:`build_pairlist` from the same
+    streamed 3×3×3 candidate runs the fused sweep consumes, keeping only
+    candidates within ``radius`` (= r + skin). Row order inside the table is
+    run-major, lane-minor — exactly the order the streamed sweep accumulates
+    — and ``run_off`` keeps the 9 per-run segment boundaries, so
+    :func:`resident_apply_fused` can replay the identical two-level
+    (per-run, then across-run) accumulation over the pruned set (dropped
+    candidates contribute exact zeros; see the parity caveat there — float
+    sums can still wiggle by ~1 ulp because XLA's lane reduction is
+    lane-position sensitive).
+
+    idx:     (C, P) int32 — sorted-pool candidate positions, row-packed
+    run_off: (C, 10) int32 — cumulative per-run segment offsets into idx
+             (off[:, 0] = 0, off[:, 9] = per-row stored count), capped at P
+    count:   (C,) int32 — UNCAPPED per-row demand (provenance for the ladder)
+    demand:  () int32 — max over rows of ``count``; overflow ⇔ demand > P
+    """
+    idx: jnp.ndarray
+    run_off: jnp.ndarray
+    count: jnp.ndarray
+    demand: jnp.ndarray
+
+
+def initial_pairlist(capacity: int, max_pairs: int) -> PairList:
+    """Zero tables — what a fresh build writes for rows it never visits."""
+    return PairList(idx=jnp.zeros((capacity, max_pairs), jnp.int32),
+                    run_off=jnp.zeros((capacity, 10), jnp.int32),
+                    count=jnp.zeros((capacity,), jnp.int32),
+                    demand=jnp.zeros((), jnp.int32))
+
+
+def grow_pairlist(pairs: PairList, new_capacity: int, new_max_pairs: int
+                  ) -> PairList:
+    """Grow a cached PairList to a larger pool capacity and/or table width.
+
+    Ladder-rewind counterpart of :func:`grow_grid_state`: zero row/column
+    padding is exactly what a pre-sized build would have written (new rows
+    were never visited; columns past a row's count are never written — a
+    cached list that *overflowed* is never carried, because the ladder
+    rewinds the overflowing step before its post-state is kept, so the
+    capped ``run_off`` never actually engaged). Supports a leading shard
+    axis (distributed ladder: arrays (S, C, ...)).
+    """
+    old_c = pairs.count.shape[-1]
+    old_p = pairs.idx.shape[-1]
+    if new_capacity < old_c or new_max_pairs < old_p:
+        raise ValueError(f"grow_pairlist: ({new_capacity}, {new_max_pairs}) "
+                         f"< ({old_c}, {old_p})")
+    if new_capacity == old_c and new_max_pairs == old_p:
+        return pairs
+    lead = len(pairs.count.shape) - 1
+    row_pad = [(0, 0)] * lead + [(0, new_capacity - old_c)]
+    return PairList(
+        idx=jnp.pad(pairs.idx, row_pad + [(0, new_max_pairs - old_p)]),
+        run_off=jnp.pad(pairs.run_off, row_pad + [(0, 0)]),
+        count=jnp.pad(pairs.count, row_pad),
+        demand=pairs.demand)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class RebuildState:
@@ -306,14 +396,24 @@ class RebuildState:
     disp_accum:  () float32 — accumulated max per-agent per-axis |Δposition|
                  since the build (the displacement-bound budget spent)
     dirty:       () bool — a structural change invalidated ``grid``
+    pairs:       cached PairList built alongside ``grid`` (None when the
+                 pair-list stage is disabled — no pytree leaves, so old
+                 checkpoints and sharding specs are unchanged)
+    pair_disp:   () float32 — accumulated max per-agent EUCLIDEAN ‖Δposition‖
+                 since the build. Separate from ``disp_accum`` (a per-axis
+                 max, which does NOT bound the euclidean motion the skin
+                 argument needs); list reuse requires 2·pair_disp ≤ skin.
     """
     grid: GridState
     steps_since: jnp.ndarray
     disp_accum: jnp.ndarray
     dirty: jnp.ndarray
+    pairs: Optional[PairList] = None
+    pair_disp: Optional[jnp.ndarray] = None
 
 
-def initial_rebuild_state(spec: GridSpec, capacity: int, origin, box_size
+def initial_rebuild_state(spec: GridSpec, capacity: int, origin, box_size,
+                          pairlist: Optional[PairListConfig] = None
                           ) -> RebuildState:
     """Pre-first-step cache: empty tables, dirty so step 0 always builds."""
     ident = jnp.arange(capacity, dtype=jnp.int32)
@@ -327,10 +427,15 @@ def initial_rebuild_state(spec: GridSpec, capacity: int, origin, box_size
         counts=jnp.zeros((spec.table_size,), cdt),
         max_count=jnp.zeros((), cdt),
         max_run_count=jnp.zeros((), cdt))
+    pairs = pair_disp = None
+    if pairlist is not None:
+        pairs = initial_pairlist(capacity, pairlist.max_pairs)
+        pair_disp = jnp.zeros((), jnp.float32)
     return RebuildState(grid=grid,
                         steps_since=jnp.zeros((), jnp.int32),
                         disp_accum=jnp.zeros((), jnp.float32),
-                        dirty=jnp.ones((), bool))
+                        dirty=jnp.ones((), bool),
+                        pairs=pairs, pair_disp=pair_disp)
 
 
 def grow_grid_state(grid: GridState, new_capacity: int) -> GridState:
@@ -494,6 +599,85 @@ def run_bounds(spec: GridSpec, grid: GridState, query_pos: jnp.ndarray
     return s, n
 
 
+def build_pairlist(spec: GridSpec, grid: GridState, position: jnp.ndarray,
+                   alive: jnp.ndarray, *, radius, max_pairs: int,
+                   chunk: Optional[int] = None,
+                   pvary_axes: Tuple[str, ...] = ()) -> PairList:
+    """Distance-filter the streamed candidate runs into a packed PairList.
+
+    One pass with the exact block/run decomposition of the streamed sweep
+    (same ``active_block_list`` blocks over ``alive``, same clamped slices,
+    same 9 z-runs truncated at ``run_capacity``), keeping only candidates
+    with ‖Δpos‖² ≤ radius² (inclusive, so behaviors that interact AT their
+    radius — e.g. Infection's ``dist² ≤ r²`` — are covered at skin=0).
+    Each row's kept candidates are cumsum-compacted in run-major lane-minor
+    order; per-row demand past ``max_pairs`` parks in a discarded column and
+    is reported uncapped through ``count``/``demand`` (§4.2 never-silent).
+
+    ``position``/``alive`` must be the RESIDENT grid-ordered channels of the
+    build (sorted position == slot id), as everywhere in this module.
+
+    Compaction is gather-based: a row-major cumsum over the (B, 9·R) valid
+    mask followed by a per-row binary search (searchsorted) for each of the
+    P output lanes. A scatter formulation (``.at[dst].set``) is the obvious
+    alternative but serializes element-by-element on XLA:CPU — measured
+    ~20× slower than the whole pruned sweep it feeds.
+    """
+    c = position.shape[0]
+    b = min(chunk if chunk is not None else spec.query_chunk, c)
+    p = max_pairs
+    r_cap = spec.run_capacity
+    blk_idx, n_blk = compaction.active_block_list(alive, b)
+    lane = jnp.arange(r_cap, dtype=jnp.int32)
+    r2 = jnp.square(jnp.asarray(radius, position.dtype))
+    out_rank = jnp.arange(1, p + 1, dtype=jnp.int32)                 # (P,)
+
+    carry0 = (jnp.zeros((c, p), jnp.int32), jnp.zeros((c, 10), jnp.int32),
+              jnp.zeros((c,), jnp.int32), jnp.zeros((), jnp.int32))
+    if pvary_axes:   # under shard_map: mark the carry varying on those axes
+        carry0 = tuple(_pcast_varying(v, pvary_axes) for v in carry0)
+
+    def body(i, carry):
+        idx_t, off_t, cnt_t, demand = carry
+        # clamp the window so a trailing partial block stays in range; overlap
+        # rows recompute identical values (pure per-row function of channels)
+        sl = jnp.minimum(blk_idx[i] * b, c - b)
+        rows = sl + jnp.arange(b, dtype=jnp.int32)                       # (B,)
+        qpos = jax.lax.dynamic_slice_in_dim(position, sl, b, axis=0)
+        arow = jax.lax.dynamic_slice_in_dim(alive, sl, b, axis=0)
+        s, n = run_bounds(spec, grid, qpos)                              # (B,9)
+        n = jnp.minimum(n, r_cap)
+
+        # all 9 runs at once, run-major lane-minor: (B, 9, R) → (B, 9R)
+        pos = (s[:, :, None] + lane[None, None, :]).reshape(b, 9 * r_cap)
+        valid = (lane[None, None, :] < n[:, :, None]).reshape(b, 9 * r_cap)
+        valid &= pos != rows[:, None]              # resident: position == slot
+        valid &= arow[:, None]
+        safe = jnp.where(valid, pos, 0)
+        d = position[safe] - qpos[:, None, :]
+        valid &= jnp.sum(d * d, axis=-1) <= r2
+        inc = jnp.cumsum(valid.astype(jnp.int32), axis=1)            # (B,9R)
+        cnt = inc[:, -1]                                 # uncapped demand
+        # inverse of the compacting scatter: output lane m holds the source
+        # lane where the running kept-count first reaches m+1
+        src = jax.vmap(lambda a, v: jnp.searchsorted(a, v))(inc, out_rank[None, :].repeat(b, 0))
+        stored = out_rank[None, :] <= jnp.minimum(cnt, p)[:, None]
+        buf = jnp.where(stored,
+                        jnp.take_along_axis(safe, jnp.minimum(src, 9 * r_cap - 1), axis=1),
+                        0)
+        # per-run segment boundaries: kept-count at each run's last lane
+        run_end = inc.reshape(b, 9, r_cap)[:, :, -1]                 # (B,9)
+        off = jnp.concatenate([jnp.zeros((b, 1), jnp.int32),
+                               jnp.minimum(run_end, p)], axis=1)
+        idx_t = jax.lax.dynamic_update_slice(idx_t, buf, (sl, 0))
+        off_t = jax.lax.dynamic_update_slice(off_t, off, (sl, 0))
+        cnt_t = jax.lax.dynamic_update_slice_in_dim(cnt_t, cnt, sl, axis=0)
+        return idx_t, off_t, cnt_t, jnp.maximum(demand, jnp.max(cnt))
+
+    idx_t, off_t, cnt_t, demand = jax.lax.fori_loop(0, n_blk, body, carry0)
+    return PairList(idx=idx_t, run_off=off_t, count=cnt_t, demand=demand)
+
+
 def neighbor_runs(spec: GridSpec, grid: GridState, query_pos: jnp.ndarray
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Candidate neighbors as *sorted-pool positions*, all 9 runs materialized.
@@ -548,7 +732,7 @@ def chunk_apply(channels: Dict[str, jnp.ndarray],
                 chunk: int,
                 pvary_axes: Tuple[str, ...] = (),
                 ) -> Dict[str, jnp.ndarray]:
-    """The one chunked query loop shared by every environment (DESIGN.md §3.4).
+    """The one chunked query loop shared by every environment (DESIGN.md §3.5).
 
     The chunk loop has a *dynamic* trip count ⌈n_query / chunk⌉ — with
     static-region detection on, compute really does shrink with the active set
@@ -726,6 +910,7 @@ def resident_apply_fused(spec: GridSpec,
                          default_mask: jnp.ndarray,
                          chunk: Optional[int] = None,
                          pvary_axes: Tuple[str, ...] = (),
+                         pairs: Optional[PairList] = None,
                          ) -> Dict[str, Dict[str, jnp.ndarray]]:
     """Multi-kernel :func:`resident_apply`: ONE candidate stream per block.
 
@@ -748,7 +933,32 @@ def resident_apply_fused(spec: GridSpec,
         kernel (its mask slice is all-False there) — identical to the
         sequential path never visiting it.
 
-    Returns ``{kernel.name: {out_name: (C, ...) array}}``.
+    **from_pairlist mode** (``pairs`` given, DESIGN.md §3.4): instead of
+    streaming the 9 z-runs at width R, gather the row's pruned candidates
+    ONCE at width P = pairs.idx.shape[-1] and evaluate each kernel once per
+    run *segment* of the packed table. Parity vs the streamed sweep:
+
+      * ``build_pairlist`` kept candidates in run-major lane-minor order
+        with per-run boundaries (``run_off``), so each run's masked segment
+        presents the surviving candidates in the streamed order with the
+        dropped ones replaced by exact zeros (out-of-reach candidates
+        contribute +0.0 / int 0 in every kernel — the same identity the
+        streamed reduction already relies on), and the across-run
+        accumulation order is identical. With skin=0 and an every-step
+        rebuild the listed set is built at this step's positions, so
+        per-kernel INTEGER outputs are bit-exact vs the streamed sweep and
+        float outputs agree to the last bit in almost every row — but not
+        unconditionally: XLA:CPU lowers the lane-axis ``jnp.sum`` inside a
+        pair_fn to a lane-POSITION-sensitive partial-accumulator scheme, so
+        packing bit-equal addends into different lanes (or a different
+        width P ≠ R) can regroup a near-cancelling row's sum by 1-2 ulp.
+        Same-mode comparisons (ladder rewind vs pre-sized, shard counts,
+        the Pallas block map) share one layout and stay fully bit-exact.
+      * Under every_k reuse (skin>0, 2·pair_disp ≤ skin) the listed set is
+        an exact superset of the in-range pairs at *current* positions; the
+        residue vs a fresh streamed sweep is float-association only (the
+        same nonzero contributions may group into different run segments
+        once agents cross cell lines).
     """
     if not kernels:
         return {}
@@ -772,7 +982,8 @@ def resident_apply_fused(spec: GridSpec,
     blk_idx, n_blk = compaction.active_block_list(union_mask, b)
     gather_ch = {ch: channels[ch] for ch in reads}      # the pruned stream
     q_src = dict(gather_ch)
-    q_src.setdefault("position", channels["position"])  # run_bounds needs it
+    if pairs is None:
+        q_src.setdefault("position", channels["position"])  # run_bounds
     lane = jnp.arange(r_cap, dtype=jnp.int32)
 
     outs = {k.name: {name: jnp.zeros((c, *sfx), dt)
@@ -781,6 +992,65 @@ def resident_apply_fused(spec: GridSpec,
     if pvary_axes:   # under shard_map: mark the carry varying on those axes
         outs = {kn: {n: _pcast_varying(v, pvary_axes) for n, v in o.items()}
                 for kn, o in outs.items()}
+
+    def acc_zeros():
+        acc0 = {k.name: {name: jnp.zeros((b, *sfx), dt)
+                         for name, (sfx, dt) in k.out_specs.items()}
+                for k in kernels}
+        if pvary_axes:   # inner carry must match the varying results it sums
+            acc0 = {kn: {n_: _pcast_varying(v, pvary_axes)
+                         for n_, v in o.items()} for kn, o in acc0.items()}
+        return acc0
+
+    def kernel_round(q, nbr, valid, rows, accs):
+        new = {}
+        for k in kernels:
+            res = k.pair_fn(q, nbr, valid, rows)
+            acc = accs[k.name]
+            new[k.name] = {
+                name: acc[name] + res[name].astype(acc[name].dtype)
+                if name in res else acc[name] for name in acc}
+        return new
+
+    def writeback(outs, accs, kmasks, sl):
+        new_outs = {}
+        for k, km in zip(kernels, kmasks):
+            ko = {}
+            for name, val in accs[k.name].items():
+                val = jnp.where(
+                    km.reshape((b,) + (1,) * (val.ndim - 1)), val, 0)
+                ko[name] = jax.lax.dynamic_update_slice_in_dim(
+                    outs[k.name][name], val, sl, axis=0)
+            new_outs[k.name] = ko
+        return new_outs
+
+    if pairs is not None:
+        p = pairs.idx.shape[-1]
+        lane_p = jnp.arange(p, dtype=jnp.int32)
+
+        def body(i, outs):
+            sl = jnp.minimum(blk_idx[i] * b, c - b)
+            rows = sl + jnp.arange(b, dtype=jnp.int32)                   # (B,)
+            q = {ch: jax.lax.dynamic_slice_in_dim(v, sl, b, axis=0)
+                 for ch, v in q_src.items()}
+            kmasks = [jax.lax.dynamic_slice_in_dim(m, sl, b, axis=0)
+                      for m in masks]
+            idx_b = jax.lax.dynamic_slice(pairs.idx, (sl, 0), (b, p))
+            off_b = jax.lax.dynamic_slice(pairs.run_off, (sl, 0), (b, 10))
+            stored = lane_p[None, :] < off_b[:, -1:]
+            posc = jnp.where(stored, idx_b, 0)
+            nbr = {ch: v[posc] for ch, v in gather_ch.items()}  # ONE gather
+
+            def run(j, accs):
+                lo = jax.lax.dynamic_slice_in_dim(off_b, j, 1, axis=1)
+                hi = jax.lax.dynamic_slice_in_dim(off_b, j + 1, 1, axis=1)
+                valid = (lane_p[None, :] >= lo) & (lane_p[None, :] < hi)
+                return kernel_round(q, nbr, valid, rows, accs)
+
+            accs = jax.lax.fori_loop(0, 9, run, acc_zeros())
+            return writeback(outs, accs, kmasks, sl)
+
+        return jax.lax.fori_loop(0, n_blk, body, outs)
 
     def body(i, outs):
         # clamp the window so a trailing partial block stays in range; overlap
@@ -800,32 +1070,10 @@ def resident_apply_fused(spec: GridSpec,
             valid &= pos != rows[:, None]          # resident: position == slot
             pos = jnp.where(valid, pos, 0)
             nbr = {ch: v[pos] for ch, v in gather_ch.items()}  # ONE gather
-            new = {}
-            for k in kernels:
-                res = k.pair_fn(q, nbr, valid, rows)
-                acc = accs[k.name]
-                new[k.name] = {
-                    name: acc[name] + res[name].astype(acc[name].dtype)
-                    if name in res else acc[name] for name in acc}
-            return new
+            return kernel_round(q, nbr, valid, rows, accs)
 
-        acc0 = {k.name: {name: jnp.zeros((b, *sfx), dt)
-                         for name, (sfx, dt) in k.out_specs.items()}
-                for k in kernels}
-        if pvary_axes:   # inner carry must match the varying results it sums
-            acc0 = {kn: {n_: _pcast_varying(v, pvary_axes)
-                         for n_, v in o.items()} for kn, o in acc0.items()}
-        accs = jax.lax.fori_loop(0, 9, run, acc0)
-        new_outs = {}
-        for k, km in zip(kernels, kmasks):
-            ko = {}
-            for name, val in accs[k.name].items():
-                val = jnp.where(
-                    km.reshape((b,) + (1,) * (val.ndim - 1)), val, 0)
-                ko[name] = jax.lax.dynamic_update_slice_in_dim(
-                    outs[k.name][name], val, sl, axis=0)
-            new_outs[k.name] = ko
-        return new_outs
+        accs = jax.lax.fori_loop(0, 9, run, acc_zeros())
+        return writeback(outs, accs, kmasks, sl)
 
     return jax.lax.fori_loop(0, n_blk, body, outs)
 

@@ -56,6 +56,13 @@ class StepStats:
     capacity_demand:  slots the pool would have needed this step to commit
                       every staged agent (live + dropped); the ladder's
                       ``capacity`` / ``local_capacity`` rung target
+    pair_overflow:    a Verlet pair-list row demanded more than
+                      ``pairlist.max_pairs`` entries this build — truncated
+                      candidates mean possibly-missed pairs (§4.2). The
+                      ladder grows the ``max_pairs`` rung from pair_demand
+    pair_demand:      which-capacity provenance for pair_overflow: the
+                      largest observed per-agent in-range(+skin) candidate
+                      count of the current pair list (0 when disabled)
     rebuilds:         1 if this step rebuilt its environment (grid build ran)
     rebuild_skips:    1 if this step reused a cached build instead
                       (RebuildPolicy mode='every_k'; grid.py). The two split
@@ -78,6 +85,8 @@ class StepStats:
     thin_slab: jnp.ndarray
     box_demand: jnp.ndarray
     capacity_demand: jnp.ndarray
+    pair_overflow: jnp.ndarray
+    pair_demand: jnp.ndarray
     rebuilds: jnp.ndarray
     rebuild_skips: jnp.ndarray
     health: jnp.ndarray
@@ -85,11 +94,13 @@ class StepStats:
     FIELDS = ("n_live", "n_active", "births", "deaths", "box_overflow",
               "birth_overflow", "halo_overflow", "migrate_overflow",
               "in_flight", "thin_slab", "box_demand", "capacity_demand",
+              "pair_overflow", "pair_demand",
               "rebuilds", "rebuild_skips", "health")
 
     # the §4.2 never-silent-loss flags (demands and health are not overflow)
     OVERFLOW_FIELDS = ("box_overflow", "birth_overflow", "halo_overflow",
-                       "migrate_overflow", "in_flight", "thin_slab")
+                       "migrate_overflow", "in_flight", "thin_slab",
+                       "pair_overflow")
 
     @classmethod
     def zeros(cls, shape: tuple = ()) -> "StepStats":

@@ -95,6 +95,56 @@ def k1_run_offsets():
                     dtype=np.int32)
 
 
+def build_block_cols_from_pairs(pairs: "grid.PairList",
+                                row_active: jnp.ndarray,   # (Npad,) bool
+                                n_pad: int,
+                                maxb: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Block-sparse column map derived from a Verlet pair list (grid.PairList)
+    instead of the stencil run ranges.
+
+    For each 128-row block, the unique ascending column blocks are
+    ``idx // BLOCK`` over every stored candidate of its active rows — a
+    subset of what :func:`build_block_cols` would emit, since only blocks
+    actually holding an in-range(+skin) candidate survive. The K1 kernel is
+    unchanged: it re-tests the radius in-kernel and accumulates column blocks
+    sequentially, and a dropped block's contribution is the additive identity
+    (every lane masked to +0.0), so the pruned ascending map reproduces the
+    streamed map's accumulation bit-exactly while skipping the ~6× of tiles
+    that carry no interacting pair.
+
+    Returns (block_cols (n_row_blocks, maxb) int32 with -1 padding, overflow
+    flag ()) — same contract as build_block_cols.
+    """
+    c, p = pairs.idx.shape
+    n_rb = n_pad // BLOCK
+    sentinel = jnp.int32(2 ** 30)
+    lane = jnp.arange(p, dtype=jnp.int32)
+
+    def per_row_block(i):
+        rows = i * BLOCK + jnp.arange(BLOCK, dtype=jnp.int32)
+        safe_rows = jnp.minimum(rows, c - 1)              # Npad ≥ c padding
+        in_pool = rows < c
+        act = row_active[rows] & in_pool
+        idx_b = pairs.idx[safe_rows]                      # (128, P)
+        stored = lane[None, :] < pairs.run_off[safe_rows, -1:]
+        ok = stored & act[:, None]
+        ids = jnp.where(ok, idx_b // BLOCK, sentinel).reshape(-1)
+        ids = jnp.sort(ids)
+        uniq = jnp.concatenate([jnp.ones((1,), bool), ids[1:] != ids[:-1]])
+        uniq &= ids < sentinel
+        pos = jnp.cumsum(uniq.astype(jnp.int32)) - 1
+        n_uniq = jnp.sum(uniq.astype(jnp.int32))
+        out = jnp.full((maxb,), -1, jnp.int32)
+        write = jnp.where(uniq & (pos < maxb), pos, maxb)
+        out = out.at[write].set(ids.astype(jnp.int32), mode="drop")
+        return out, n_uniq > maxb
+
+    cols, ovf = jax.lax.map(per_row_block,
+                            jnp.arange(n_rb, dtype=jnp.int32),
+                            batch_size=min(64, max(n_rb, 1)))
+    return cols, jnp.any(ovf)
+
+
 def collision_force_resident(position: jnp.ndarray, diameter: jnp.ndarray,
                              agent_type: jnp.ndarray, alive: jnp.ndarray,
                              active: jnp.ndarray,
@@ -103,7 +153,8 @@ def collision_force_resident(position: jnp.ndarray, diameter: jnp.ndarray,
                              *, dims: Tuple[int, int, int], k_rep: float = 2.0,
                              adhesion: Optional[Tuple[Tuple[float, ...], ...]] = None,
                              adhesion_band: float = 0.4, maxb: int = 64,
-                             interpret: Optional[bool] = None
+                             interpret: Optional[bool] = None,
+                             pairs: Optional["grid.PairList"] = None
                              ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """K1 over the RESIDENT grid-ordered pool: column map → kernel. No sort,
     no unsort, no candidate matrix.
@@ -131,6 +182,12 @@ def collision_force_resident(position: jnp.ndarray, diameter: jnp.ndarray,
     must be ≥ the maximum interaction distance max(r_i + r_j) +
     adhesion_band, so every interacting pair falls inside the 3×3×3
     neighborhood.
+
+    ``pairs`` (grid.PairList, optional): derive the column map from the
+    Verlet pair list instead of the stencil ranges — only column blocks that
+    hold a listed in-range(+skin) candidate are visited. Bit-exact vs the
+    streamed map (build_block_cols_from_pairs); validity is the engine's
+    2·pair_disp ≤ skin budget.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -147,9 +204,16 @@ def collision_force_resident(position: jnp.ndarray, diameter: jnp.ndarray,
     st = padded(agent_type, 0)
     sa = padded(alive, False)
     sact = padded(active & alive, False)
-    cells = morton.cell_of(sp, origin, box_size, dims)
 
-    block_cols, ovf = build_block_cols(cells, starts, counts, sact, dims, maxb)
+    if pairs is not None:
+        # Verlet pair-list mode: column blocks come from the listed
+        # candidates, not the full stencil ranges (build_block_cols_from_pairs
+        # — bit-exact pruning, the kernel itself is unchanged)
+        block_cols, ovf = build_block_cols_from_pairs(pairs, sact, n_pad, maxb)
+    else:
+        cells = morton.cell_of(sp, origin, box_size, dims)
+        block_cols, ovf = build_block_cols(cells, starts, counts, sact, dims,
+                                           maxb)
 
     data_t = jnp.zeros((8, n_pad), jnp.float32)
     data_t = data_t.at[k1.ROW_X].set(sp[:, 0]).at[k1.ROW_Y].set(sp[:, 1])
@@ -178,7 +242,8 @@ def fused_resident_sweep(spec, grid_env, channels, kernels, default_mask,
                          chunk: Optional[int] = None,
                          pvary_axes: Tuple[str, ...] = (),
                          maxb: int = 64,
-                         interpret: Optional[bool] = None):
+                         interpret: Optional[bool] = None,
+                         pairs: Optional["grid.PairList"] = None):
     """Pallas-backed realization of the fused kernel-list sweep.
 
     Accepts the same ``grid.PairKernel`` registry as
@@ -207,13 +272,14 @@ def fused_resident_sweep(spec, grid_env, channels, kernels, default_mask,
             channels["agent_type"], channels["alive"], active,
             grid_env.starts, grid_env.counts, origin, box_size,
             dims=spec.dims, k_rep=k_rep, adhesion=adhesion,
-            adhesion_band=adhesion_band, maxb=maxb, interpret=interpret)
+            adhesion_band=adhesion_band, maxb=maxb, interpret=interpret,
+            pairs=pairs)
         results["force"] = {"force": f, "force_nnz": nnz}
         ovf = k_ovf
     if rest:
         results.update(grid.resident_apply_fused(
             spec, grid_env, channels, rest, default_mask, chunk,
-            pvary_axes=pvary_axes))
+            pvary_axes=pvary_axes, pairs=pairs))
     return results, ovf
 
 
