@@ -1,0 +1,239 @@
+"""Ensemble engine + simulation service throughput (DESIGN.md §8).
+
+A sweep member is small (tens to hundreds of agents), so a solo step is
+dominated by per-op dispatch and host-sync overhead — exactly the regime
+where vmapping the whole iteration core over a lane axis wins. This
+benchmark measures that win at the *service* level:
+
+  * **Aggregate throughput.** K lanes of an SIR model (per-lane beta via
+    ``ScenarioParams``) advanced in lockstep, vs the honest sequential
+    baseline: the SAME jitted 1-lane program serving every member
+    back-to-back (params are traced, so the baseline pays zero per-member
+    recompiles — the speedup is batching, not compile amortization). Both
+    sides run the *serving loop*: one metric readout (convergence check)
+    per tick, because that host sync is what a sweep actually pays — the
+    ensemble amortizes ONE readout over K lanes where the sequential run
+    syncs every member-step. ``*_tick_pipelined_us`` records the readout-free
+    async-dispatch tick for reference; it is informational (no real sweep
+    can run open-loop — retirement needs the metric).
+
+  * **Admit/retire latency.** Median µs of the jitted lane-indexed scatter
+    (``EnsembleEngine.admit``) and mask flip (``retire``) — the per-request
+    service overhead continuous batching pays at iteration granularity.
+
+  * **Lane occupancy under churn.** A :class:`~repro.serve.SimService` run
+    with 2K requests of staggered step budgets over K lanes; mean occupancy
+    = lane-steps actually used / (ticks × K). The service's job is keeping
+    this near 1.0 (an idle lane still rides through the vmapped compute).
+
+The config deliberately sits in the sweep regime: a domain a few boxes
+across, ``max_per_box`` sized to the actual density, and
+``sort_impl="argsort"`` — the counting sort's scatter passes lower to
+row-at-a-time loops under a batch axis on XLA:CPU, while the comparison
+sort batches cleanly (the O(N) build wins solo at scale, the argsort build
+wins vmapped at sweep scale; both orderings are identical so lane-vs-solo
+parity is unaffected).
+
+Records ``BENCH_ensemble.json``; throughput entries are identity-keyed by
+``n_lanes`` × ``agents_per_lane`` so benchmarks/trend.py never compares
+records measured at different sizes. Env overrides (CI smoke):
+``ENSEMBLE_LANES`` (comma list, default "8,64"), ``ENSEMBLE_AGENTS``,
+``ENSEMBLE_STEPS``.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EngineConfig, ScenarioParams
+from repro.core.behaviors import INFECTED, Infection, RandomWalk
+from repro.core.ensemble import EnsembleEngine
+from repro.serve import SimRequest, SimService
+
+from .common import emit, write_bench_json
+
+SIDE = 12.0
+
+
+def _cfg(agents: int) -> EngineConfig:
+    return EngineConfig(
+        capacity=max(64, -(-agents // 64) * 64),
+        domain_lo=(0.0,) * 3, domain_hi=(SIDE,) * 3,
+        interaction_radius=3.0, use_forces=False, detect_static=False,
+        query_chunk=2048, max_per_box=4, sort_impl="argsort")
+
+
+def _behaviors():
+    return [RandomWalk(sigma=0.8),
+            Infection(radius=3.0, beta=lambda ctx: ctx.params["beta"],
+                      recovery_time=30)]
+
+
+def _sir_arrays(agents: int, seed: int):
+    r = np.random.RandomState(seed)
+    pos = r.uniform(0, SIDE, (agents, 3)).astype(np.float32)
+    types = np.zeros(agents, np.int32)
+    n0 = max(agents // 50, 2)
+    types[:n0] = INFECTED
+    timer = np.zeros(agents, np.int32)
+    timer[:n0] = 30
+    return pos, np.full(agents, 1.0, np.float32), types, timer
+
+
+def _stage(engine: EnsembleEngine, agents: int, seed: int):
+    pos, diam, types, timer = _sir_arrays(agents, seed)
+    return engine.stage_lane(pos, diam, types, {"infect_timer": timer},
+                             seed=seed)
+
+
+def _fill(engine: EnsembleEngine, agents: int, betas) -> object:
+    state = engine.init_state()
+    for lane, beta in enumerate(betas):
+        state = engine.admit(state, lane, _stage(engine, agents, 100 + lane),
+                             ScenarioParams.of(beta=float(beta)))
+    return state
+
+
+_infected = jax.jit(jax.vmap(
+    lambda pool: jnp.sum((pool.agent_type == INFECTED) & pool.alive)))
+
+
+def _ticks_us(engine: EnsembleEngine, state, n: int,
+              readout: bool) -> float:
+    """Median µs per lockstep tick, compile excluded. ``readout=True`` runs
+    the serving loop: one vmapped metric readout (host sync) per tick —
+    what any convergence-checked sweep pays. ``readout=False`` is the
+    open-loop async-dispatch tick (informational)."""
+    jax.block_until_ready(engine.step(state))                   # compile
+    np.asarray(_infected(state.pool))
+    ts = []
+    for _ in range(3):
+        s = state
+        t0 = time.perf_counter()
+        for _ in range(n):
+            s = engine.step(s)
+            if readout:
+                np.asarray(_infected(s.pool))
+        jax.block_until_ready(s)
+        ts.append((time.perf_counter() - t0) * 1e6 / n)
+    return float(np.median(ts))
+
+
+def _throughput(n_lanes: int, agents: int, steps: int) -> dict:
+    cfg = _cfg(agents)
+    template = ScenarioParams.of(beta=0.0)
+    betas = np.linspace(0.1, 0.5, n_lanes)
+
+    ens = EnsembleEngine(cfg, _behaviors(), n_lanes, template)
+    estate = _fill(ens, agents, betas)
+    ens_tick_us = _ticks_us(ens, estate, steps, readout=True)
+    ens_pipe_us = _ticks_us(ens, estate, steps, readout=False)
+
+    # sequential baseline: the SAME jitted 1-lane program serves every
+    # member back-to-back (params traced, zero recompiles between members),
+    # checking its convergence metric each step like any real sweep run —
+    # so K sequential runs cost exactly K × (steps × solo_tick)
+    solo = EnsembleEngine(cfg, _behaviors(), 1, template)
+    sstate = _fill(solo, agents, betas[:1])
+    solo_tick_us = _ticks_us(solo, sstate, steps, readout=True)
+    solo_pipe_us = _ticks_us(solo, sstate, steps, readout=False)
+
+    ens_per_s = n_lanes * agents / (ens_tick_us * 1e-6)
+    seq_per_s = agents / (solo_tick_us * 1e-6)
+    speedup = ens_per_s / seq_per_s
+    emit(f"ensemble_tick_l{n_lanes}_n{agents}", ens_tick_us,
+         f"speedup_vs_sequential={speedup:.2f}")
+    return {"n_lanes": n_lanes, "agents_per_lane": agents, "steps": steps,
+            "ensemble_tick_us": ens_tick_us, "solo_tick_us": solo_tick_us,
+            "ensemble_tick_pipelined_us": ens_pipe_us,
+            "solo_tick_pipelined_us": solo_pipe_us,
+            "ensemble_agent_steps_per_s": ens_per_s,
+            "sequential_agent_steps_per_s": seq_per_s,
+            "speedup_vs_sequential": speedup}
+
+
+def _admit_retire(n_lanes: int, agents: int) -> dict:
+    engine = EnsembleEngine(_cfg(agents), _behaviors(), n_lanes,
+                            ScenarioParams.of(beta=0.0))
+    state = engine.init_state()
+    staged = _stage(engine, agents, 0)
+    params = ScenarioParams.of(beta=0.3)
+    # warm both jitted paths (lane index is traced: one compile each)
+    jax.block_until_ready(engine.admit(state, 0, staged, params))
+    jax.block_until_ready(engine.retire(state, 0))
+    admit_ts, retire_ts = [], []
+    for lane in range(min(n_lanes, 8)):
+        t0 = time.perf_counter()
+        s = engine.admit(state, lane, staged, params)
+        jax.block_until_ready(s)
+        admit_ts.append((time.perf_counter() - t0) * 1e6)
+        t0 = time.perf_counter()
+        s = engine.retire(s, lane)
+        jax.block_until_ready(s)
+        retire_ts.append((time.perf_counter() - t0) * 1e6)
+    admit_us = float(np.median(admit_ts))
+    retire_us = float(np.median(retire_ts))
+    emit(f"ensemble_admit_l{n_lanes}_n{agents}", admit_us)
+    emit(f"ensemble_retire_l{n_lanes}_n{agents}", retire_us)
+    return {"n_lanes": n_lanes, "agents_per_lane": agents,
+            "admit_us": admit_us, "retire_us": retire_us}
+
+
+def _churn(n_lanes: int, agents: int, steps: int) -> dict:
+    """2K staggered-budget requests over K lanes through the SimService:
+    lanes retire and re-admit mid-run, so mean occupancy measures how well
+    continuous batching keeps the vmapped step full."""
+    svc = SimService(_cfg(agents), _behaviors(), n_lanes=n_lanes,
+                     params_template=ScenarioParams.of(beta=0.0))
+    n_req = 2 * n_lanes
+    budgets = np.linspace(max(steps // 3, 2), steps, n_req).astype(int)
+    for uid in range(n_req):
+        pos, diam, types, timer = _sir_arrays(agents, 300 + uid)
+        svc.submit(SimRequest(
+            uid=uid, position=pos, diameter=diam, agent_type=types,
+            extra_init={"infect_timer": timer}, seed=uid,
+            params=ScenarioParams.of(beta=0.3),
+            max_steps=int(budgets[uid])))
+    svc.step()                                   # pay the compile outside
+    lane_steps = n_lanes                         # ... but count its work
+    t0 = time.perf_counter()
+    ticks = 1
+    while svc.queue or any(i is not None for i in svc.lanes):
+        lane_steps += svc.step()
+        ticks += 1
+    wall_s = time.perf_counter() - t0
+    occupancy = lane_steps / (ticks * n_lanes)
+    churn_per_s = (lane_steps - n_lanes) * agents / wall_s
+    emit(f"ensemble_churn_l{n_lanes}_n{agents}", wall_s * 1e6,
+         f"occupancy={occupancy:.3f} ticks={ticks}")
+    return {"n_lanes": n_lanes, "agents_per_lane": agents,
+            "requests": n_req, "ticks": ticks,
+            "mean_occupancy": occupancy,
+            "churn_agent_steps_per_s": churn_per_s}
+
+
+def run() -> None:
+    lanes = [int(x) for x in
+             os.environ.get("ENSEMBLE_LANES", "8,64").split(",")]
+    agents = int(os.environ.get("ENSEMBLE_AGENTS", 64))
+    steps = int(os.environ.get("ENSEMBLE_STEPS", 50))
+
+    throughput = [_throughput(k, agents, steps) for k in lanes]
+    k_max = max(lanes)
+    payload = {
+        "throughput": throughput,
+        "admit_retire": _admit_retire(k_max, agents),
+        "churn": _churn(min(lanes), agents, steps),
+    }
+    write_bench_json("BENCH_ensemble.json", payload)
+    for t in throughput:
+        if t["n_lanes"] >= 64 and t["speedup_vs_sequential"] < 3.0:
+            # RuntimeError, not SystemExit: run.py aggregates failures
+            raise RuntimeError(
+                f"ensemble speedup {t['speedup_vs_sequential']:.2f}× at "
+                f"K={t['n_lanes']} below the 3× acceptance floor")

@@ -1,7 +1,7 @@
 """Paper Fig 11: neighbor-search environment comparison.
 
 BioDynaMo compares its uniform grid against kd-tree (nanoflann) and octree
-(UniBN); pointer-chasing trees have no faithful XLA analogue (DESIGN.md §10.5),
+(UniBN); pointer-chasing trees have no faithful XLA analogue (DESIGN.md §11.5),
 so the comparison set here is: resident sort-based uniform grid (ours,
 grid-ordered pool + run-streaming queries — DESIGN.md §3.2), scatter-table
 grid ('standard implementation'), spatial-hash grid (streamed probes, plus

@@ -19,13 +19,14 @@ import traceback
 
 
 def main() -> None:
-    from . import (allocator, breakdown, capacity, cellsort, neighbor,
-                   optimizations, scaling, sorting)
+    from . import (allocator, breakdown, capacity, cellsort, ensemble,
+                   neighbor, optimizations, scaling, sorting)
 
     modules = [("fig5_breakdown", breakdown), ("fig6_scaling", scaling),
                ("fig7_cellsort", cellsort), ("fig9_optimizations", optimizations),
                ("fig11_neighbor", neighbor), ("fig12_sorting", sorting),
-               ("fig13_allocator", allocator), ("ladder_capacity", capacity)]
+               ("fig13_allocator", allocator), ("ladder_capacity", capacity),
+               ("ensemble_service", ensemble)]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     failed = []

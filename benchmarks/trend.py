@@ -8,8 +8,9 @@ shared runners swing ±30-40%):
 
   * only timing leaves are gated (key ends in ``_us``/``us_per_step``/
     ``ms_per_step`` or sits under a ``search_us``/``build_us``/
-    ``us_per_step`` mapping) — derived quantities (slopes, speedups,
-    counts) are informational;
+    ``us_per_step`` mapping), plus higher-is-better leaves (``*_per_s``
+    throughput rates and ``*occupancy``, gated on the inverted ratio) —
+    other derived quantities (slopes, speedups, counts) are informational;
   * entries faster than ``--floor-us`` in the baseline are reported but
     never gated (short timings on shared CI runners are dominated by
     scheduler noise);
@@ -59,12 +60,21 @@ from typing import Dict, List
 # regression (pairlist_build_us / pairlist_neighbor_us) fails the gate.
 GATED_FILES = ("BENCH_neighbor.json", "BENCH_scaling.json",
                "BENCH_statics.json", "BENCH_distributed.json",
-               "BENCH_capacity.json", "BENCH_breakdown.json")
+               "BENCH_capacity.json", "BENCH_breakdown.json",
+               "BENCH_ensemble.json")
 _FILE_KEY_FILTER = {"BENCH_capacity.json": lambda path: any(
     k in path for k in ("build_us", "neighbor_us", "commit_us"))}
 
 _TIMING_SUFFIXES = ("_us", "us_per_step", "ms_per_step")
 _TIMING_PARENTS = ("search_us", "build_us", "us_per_step")
+
+# Higher-is-better leaves (BENCH_ensemble.json: aggregate throughput rates
+# and lane occupancy). Gated with the INVERTED ratio — baseline/fresh — so
+# a throughput drop fails exactly like a timing rise. These aggregate
+# whole-run measurements (tens of thousands of agent-steps), so the µs
+# noise floor does not apply; their envelope convention is per-key *min*
+# over clean runs (the slow edge), mirroring the per-key max for timings.
+_INVERSE_SUFFIXES = ("_per_s", "occupancy")
 
 
 def _flatten(obj, prefix="") -> Dict[str, float]:
@@ -82,7 +92,8 @@ def _flatten(obj, prefix="") -> Dict[str, float]:
             label = str(i)
             if isinstance(v, dict):
                 tags = [f"{t}={v[t]}"
-                        for t in ("n_shards", "n_agents", "n", "capacity")
+                        for t in ("n_shards", "n_agents", "n", "capacity",
+                                  "n_lanes", "agents_per_lane")
                         if t in v]
                 if tags:
                     label = ",".join(tags)
@@ -100,6 +111,12 @@ def _is_timing(path: str) -> bool:
         return True
     parts = path.split(".")
     return any(p in _TIMING_PARENTS for p in parts[:-1])
+
+
+def _is_inverse(path: str) -> bool:
+    """Higher-is-better leaf (throughput rate / occupancy)."""
+    leaf = path.rsplit(".", 1)[-1]
+    return any(leaf.endswith(s) for s in _INVERSE_SUFFIXES)
 
 
 def compare(baseline_dir: str, fresh_dir: str, threshold: float,
@@ -121,14 +138,21 @@ def compare(baseline_dir: str, fresh_dir: str, threshold: float,
         key_filter = _FILE_KEY_FILTER.get(fname)
         file_rows = []
         for path, bval in sorted(base.items()):
-            if not _is_timing(path) or path not in fresh:
+            inverse = _is_inverse(path)
+            if (not inverse and not _is_timing(path)) or path not in fresh:
                 continue
             if key_filter is not None and not key_filter(path):
                 continue
             fval = fresh[path]
-            base_us = bval * (1000.0 if "ms_per_step" in path else 1.0)
-            ratio = fval / bval if bval > 0 else float("inf")
-            gated = base_us >= floor_us
+            if inverse:
+                # throughput/occupancy: regression = fresh BELOW baseline,
+                # so invert the ratio; whole-run aggregates, no µs floor
+                ratio = bval / fval if fval > 0 else float("inf")
+                gated = True
+            else:
+                base_us = bval * (1000.0 if "ms_per_step" in path else 1.0)
+                ratio = fval / bval if bval > 0 else float("inf")
+                gated = base_us >= floor_us
             file_rows.append({
                 "file": fname, "metric": path, "baseline": bval,
                 "fresh": fval, "ratio": ratio, "gated": gated,

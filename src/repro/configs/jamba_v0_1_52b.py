@@ -2,7 +2,7 @@
 MoE 16e top-2 every other layer, attention:mamba 1:7 (attn at index 4 of each
 8-layer block). Jamba v0.1 uses Mamba-1 internals (d_state=16); we realize all
 SSM layers with the Mamba-2 SSD formulation (TPU-friendly chunked scan) at the
-same state size — documented adaptation (DESIGN.md §10). [arXiv:2403.19887; hf]"""
+same state size — documented adaptation (DESIGN.md §11). [arXiv:2403.19887; hf]"""
 from .base import ArchConfig, LayerDesc
 
 _A, _S = "attn", "ssm"

@@ -5,16 +5,19 @@ from .compaction import grow_channels, grow_pool, repack_slabs
 from .distributed import (DistConfig, DistributedCapacityLadder,
                           DistributedSimulation, DistState)
 from .engine import (CapacityExhausted, CapacityLadder, EngineConfig,
-                     EngineState, LadderConfig, Simulation, StepContext,
-                     make_iteration_core)
+                     EngineState, LadderConfig, ScenarioParams, Simulation,
+                     StepContext, make_iteration_core)
+from .ensemble import (EnsembleCapacityLadder, EnsembleEngine, EnsembleState,
+                       make_ensemble_core)
 from .forces import ForceParams
 from .grid import (BuildResult, GridBuilderDeprecationWarning, GridSpec,
                    PairList, PairListConfig, RebuildPolicy,
                    counting_sort_order, make_builder)
 from .health import HealthConfig, HealthFault
 from .simcheck import (DegradationPolicy, RunReport, SimCheckpointer,
-                       SupervisedRunner, restore_dist_state, restore_state,
-                       save_dist_state, save_state)
+                       SupervisedRunner, restore_dist_state,
+                       restore_ensemble_state, restore_state,
+                       save_dist_state, save_ensemble_state, save_state)
 from .stats import StepStats
 
 __all__ = ["AgentPool", "DtypePolicy", "make_pool", "pool_from_channels",
@@ -28,4 +31,7 @@ __all__ = ["AgentPool", "DtypePolicy", "make_pool", "pool_from_channels",
            "counting_sort_order", "make_builder", "HealthConfig",
            "HealthFault", "DegradationPolicy", "RunReport", "SimCheckpointer",
            "SupervisedRunner", "restore_dist_state", "restore_state",
-           "save_dist_state", "save_state"]
+           "save_dist_state", "save_state", "ScenarioParams",
+           "EnsembleCapacityLadder", "EnsembleEngine", "EnsembleState",
+           "make_ensemble_core", "restore_ensemble_state",
+           "save_ensemble_state"]

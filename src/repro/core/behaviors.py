@@ -43,6 +43,22 @@ from .agents import AgentPool
 from .grid import PairKernel
 
 
+def resolve(value, ctx):
+    """Realize a behavior knob against the step context.
+
+    Every numeric behavior parameter (``Infection.beta``, ``RandomWalk.sigma``,
+    ``GrowDivide.rate``, ...) accepts either a plain number — the static,
+    compiled-in value — or a *callable* ``ctx -> value`` evaluated at trace
+    time against the :class:`~.engine.StepContext`. The callable form is how
+    ensemble lanes get per-lane rates without recompiling: pass
+    ``Infection(beta=lambda ctx: ctx.params["beta"])`` and feed the rate
+    through ``ScenarioParams(rates={"beta": ...})`` — under
+    ``make_ensemble_core`` the traced scalar differs per lane while the
+    program stays one compilation.
+    """
+    return value(ctx) if callable(value) else value
+
+
 @dataclasses.dataclass
 class BehaviorEffects:
     """What a behavior wants to change. All optional; engine merges in order."""
@@ -105,8 +121,10 @@ class GrowDivide(Behavior):
 
     def __call__(self, ctx, pool: AgentPool, rng: jax.Array) -> BehaviorEffects:
         mask = self._mask(ctx, pool)
-        new_dia = jnp.where(mask, pool.diameter + self.rate * ctx.dt, pool.diameter)
-        divide = mask & (new_dia >= self.threshold)
+        rate = resolve(self.rate, ctx)
+        threshold = resolve(self.threshold, ctx)
+        new_dia = jnp.where(mask, pool.diameter + rate * ctx.dt, pool.diameter)
+        divide = mask & (new_dia >= threshold)
         # halve the volume: d' = d / 2^(1/3)
         halved = new_dia * (0.5 ** (1.0 / 3.0))
         mother_dia = jnp.where(divide, halved, new_dia)
@@ -136,7 +154,7 @@ class RandomWalk(Behavior):
         mask = ctx.owned
         if self.applies_to is not None:
             mask &= pool.agent_type == self.applies_to
-        step = self.sigma * rand.normal_rows(rng, pool.capacity, 3)
+        step = resolve(self.sigma, ctx) * rand.normal_rows(rng, pool.capacity, 3)
         new_pos = jnp.where(mask[:, None], pool.position + step * ctx.dt,
                             pool.position)
         new_pos = jnp.clip(new_pos, ctx.domain_lo, ctx.domain_hi)
@@ -198,9 +216,10 @@ class Infection(Behavior):
         exposed = res["exposed"] > 0
         u = rand.uniform_rows(rng, pool.capacity)
         newly = ctx.owned & (pool.agent_type == SUSCEPTIBLE) & exposed \
-            & (u < self.beta)
+            & (u < resolve(self.beta, ctx))
         timer = pool.extra["infect_timer"]
-        timer = jnp.where(newly, self.recovery_time, timer)
+        recovery = jnp.asarray(resolve(self.recovery_time, ctx), timer.dtype)
+        timer = jnp.where(newly, recovery, timer)
         is_inf = pool.agent_type == INFECTED
         timer = jnp.where(is_inf, timer - 1, timer)
         recovered = is_inf & (timer <= 0)
@@ -221,7 +240,7 @@ class Chemotaxis(Behavior):
     def __call__(self, ctx, pool: AgentPool, rng: jax.Array) -> BehaviorEffects:
         g = ctx.substance_gradient(pool.position)           # (C, 3)
         norm = jnp.sqrt(jnp.sum(g * g, -1, keepdims=True) + 1e-12)
-        step = self.speed * ctx.dt * g / norm
+        step = resolve(self.speed, ctx) * ctx.dt * g / norm
         new_pos = jnp.where(ctx.owned[:, None], pool.position + step,
                             pool.position)
         new_pos = jnp.clip(new_pos, ctx.domain_lo, ctx.domain_hi)
@@ -242,7 +261,7 @@ class Secretion(Behavior):
         if self.applies_to is not None:
             mask &= pool.agent_type == self.applies_to
         return BehaviorEffects(
-            secretion=jnp.where(mask, self.rate * ctx.dt, 0.0))
+            secretion=jnp.where(mask, resolve(self.rate, ctx) * ctx.dt, 0.0))
 
 
 class RandomDeath(Behavior):
@@ -259,7 +278,7 @@ class RandomDeath(Behavior):
         if self.applies_to is not None:
             mask &= pool.agent_type == self.applies_to
         u = rand.uniform_rows(rng, pool.capacity)
-        return BehaviorEffects(death_mask=mask & (u < self.rate))
+        return BehaviorEffects(death_mask=mask & (u < resolve(self.rate, ctx)))
 
 
 # Neuroscience: growth cones extend and leave a static trail (paper §5:

@@ -178,6 +178,48 @@ class EngineState:
                                          # None under every_step
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ScenarioParams:
+    """Dynamic per-run scenario knobs, traced INTO the iteration core.
+
+    ``EngineConfig`` is static — every float in it is baked into the jit
+    program, so two runs with different dt or β are two compiles. This
+    pytree carries the knobs that may differ per run *as traced values*:
+    one program serves any parameter point, which is what lets the
+    ensemble engine (ensemble.py) vmap hundreds of differently-
+    parameterized simulations in lockstep and the simulation service
+    (serve/sim_service.py) admit a new parameter point into a free lane
+    without recompiling.
+
+    dt:    () float32 — overrides ``cfg.dt`` (None → use the static value).
+    force: ForceParams field overrides (e.g. ``{"k_rep": x}``) as traced
+           scalars; empty → the static ``cfg.force``. Not supported with
+           ``force_impl='pallas'`` (the kernel bakes its constants).
+    rates: free-form behavior knobs, exposed to behaviors as
+           ``ctx.params`` — a behavior opts in by taking a callable
+           parameter (``Infection(beta=lambda ctx: ctx.params["beta"])``,
+           behaviors.resolve).
+
+    The dict *key sets* are static structure (part of the jit cache key);
+    only the values are traced.
+    """
+    dt: Optional[jnp.ndarray] = None
+    force: Dict[str, jnp.ndarray] = dataclasses.field(default_factory=dict)
+    rates: Dict[str, jnp.ndarray] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def of(cls, dt: Optional[float] = None,
+           force: Optional[Dict[str, float]] = None,
+           **rates) -> "ScenarioParams":
+        """Scalar-array ScenarioParams from plain Python numbers."""
+        return cls(
+            dt=None if dt is None else jnp.asarray(dt, jnp.float32),
+            force={k: jnp.asarray(v, jnp.float32)
+                   for k, v in (force or {}).items()},
+            rates={k: jnp.asarray(v) for k, v in rates.items()})
+
+
 @dataclasses.dataclass
 class StepContext:
     """What behaviors may read/use during one iteration."""
@@ -201,6 +243,10 @@ class StepContext:
                                              # PairKernel.name (empty on the
                                              # sequential path — behaviors
                                              # fall back to neighbor_apply)
+    params: Dict[str, jnp.ndarray] = dataclasses.field(
+        default_factory=dict)                # ScenarioParams.rates — traced
+                                             # per-run behavior knobs ({} when
+                                             # the caller passed none)
 
 
 # -- environment dispatch (module-level: shared by both engines) -------------
@@ -381,8 +427,8 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
                         diff_ops: Optional[diff_mod.DiffusionOps] = None):
     """Build the pure Algorithm-1 iteration body both engines share.
 
-    Returns ``core(pool, conc, rng, iteration, env) -> (pool, conc, rng,
-    StepStats, env)``: resident build (or cached-build reuse under
+    Returns ``core(pool, conc, rng, iteration, env, params=None) -> (pool,
+    conc, rng, StepStats, env)``: resident build (or cached-build reuse under
     RebuildPolicy every_k — ``env`` carries the grid.RebuildState, None
     under every_step) → run-streaming/Pallas forces → behaviors → effects
     merge → death compaction + birth commit → statics bookkeeping →
@@ -402,6 +448,13 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
     diff_ops: substance-grid strategy (diffusion.DiffusionOps). Defaults to
       the full-grid single-device implementation; the distributed engine
       substitutes slab-sharded ops with face-halo exchange.
+
+    The optional trailing ``params`` argument (a :class:`ScenarioParams`
+    pytree of traced scalars) overrides dt / force constants / behavior
+    rates at *runtime* — one compiled program serves every parameter point.
+    ``params=None`` (both engines' default) keeps the static ``cfg`` values
+    and is bit-identical to the pre-params core; the ensemble engine
+    (ensemble.py) vmaps the core over a leading lane axis of params.
     """
     if cfg.force_impl == "pallas" and cfg.environment != "uniform_grid":
         raise ValueError("force_impl='pallas' requires the uniform_grid "
@@ -457,9 +510,25 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
             chunk=cfg.query_chunk, pvary_axes=pvary_axes)
 
     def core(pool: AgentPool, conc: jnp.ndarray, rng: jax.Array,
-             it: jnp.ndarray, env: Optional[grid_mod.RebuildState] = None):
+             it: jnp.ndarray, env: Optional[grid_mod.RebuildState] = None,
+             params: Optional[ScenarioParams] = None):
         rng, k_force, *bkeys = jax.random.split(rng, 2 + len(behaviors))
         stats = StepStats.zeros()
+
+        # dynamic scenario knobs (ScenarioParams): traced dt / force
+        # constants replace the static closure values; with params=None the
+        # expressions below are the compile-time constants they always were
+        dt = cfg.dt if params is None or params.dt is None else params.dt
+        if params is not None and params.force:
+            if cfg.force_impl == "pallas":
+                raise ValueError(
+                    "ScenarioParams.force overrides require force_impl='xla' "
+                    "(the Pallas kernel bakes its force constants)")
+            fp = dataclasses.replace(cfg.force, **params.force)
+            fpair = force_mod.make_force_pair_fn(fp, adhesion)
+        else:
+            fp, fpair = cfg.force, force_pair
+        rates = params.rates if params is not None else {}
 
         # ---------------- pre standalone ops ----------------
         # Resident envs reorder every build (the permutation IS the §4.2
@@ -531,7 +600,7 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
             pair_overflow = (pairs.demand > pl.max_pairs).astype(jnp.int32)
 
         if cfg.diffusion is not None:
-            sub_dt = cfg.dt / cfg.diffusion_substeps
+            sub_dt = dt / cfg.diffusion_substeps
             for _ in range(cfg.diffusion_substeps):
                 conc = diff_ops.step(conc, sub_dt)
 
@@ -573,7 +642,7 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
             kernels = []
             if cfg.use_forces:
                 kernels.append(grid_mod.PairKernel(
-                    "force", force_pair, force_mod.FORCE_OUT_SPECS,
+                    "force", fpair, force_mod.FORCE_OUT_SPECS,
                     reads=force_mod.FORCE_READS, query_mask=active))
             kernels.extend(behavior_kernels)
             if kernels:
@@ -624,10 +693,10 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
                                            ovf.astype(jnp.int32))
                 res = {"force": f, "force_nnz": nnz}
             else:
-                res = nbr_apply(force_pair, force_mod.FORCE_OUT_SPECS,
+                res = nbr_apply(fpair, force_mod.FORCE_OUT_SPECS,
                                 query_mask=active)
             force_arr = res["force"]
-            dx = force_mod.displacement(res["force"], cfg.force, cfg.dt)
+            dx = force_mod.displacement(res["force"], fp, dt)
             new_pos = jnp.clip(pool.position + dx, dlo, dhi)
             new_pos = jnp.where(active[:, None], new_pos, pool.position)
             force_nnz = jnp.where(active, res["force_nnz"],
@@ -637,9 +706,9 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
 
         # ---------------- agent ops: behaviors ----------------
         ctx = StepContext(
-            config=cfg, dt=cfg.dt, domain_lo=dlo, domain_hi=dhi,
+            config=cfg, dt=dt, domain_lo=dlo, domain_hi=dhi,
             iteration=it, owned=owned_alive, neighbor_apply=nbr_apply,
-            neighbor_results=nbr_results,
+            neighbor_results=nbr_results, params=rates,
             substance_gradient=(
                 (lambda p: diff_ops.gradient(conc, p))
                 if cfg.diffusion else (lambda p: jnp.zeros_like(p))),
@@ -668,7 +737,7 @@ def make_iteration_core(cfg: EngineConfig, behaviors: Sequence[Behavior],
 
         # bookkeeping for the next static detection
         move_d = pool.position - pos0
-        moved = jnp.sum(move_d * move_d, -1) > cfg.force.move_eps ** 2
+        moved = jnp.sum(move_d * move_d, -1) > fp.move_eps ** 2
         grew = pool.diameter > dia0 + 1e-12
         pool = dataclasses.replace(pool, moved=moved & pool.alive,
                                    grew=grew & pool.alive)
@@ -944,6 +1013,12 @@ class LadderDriverBase:
 
     ladder: "LadderConfig"
 
+    def _iter_of(self, state) -> int:
+        """Scalar step index for logging/rewind bookkeeping. The ensemble
+        driver overrides this (its ``iteration`` is a per-lane vector; the
+        global tick is the scalar a rewind rewinds to)."""
+        return int(state.iteration)
+
     def step(self, state):
         """One iteration with automatic growth (rewinds the step on overflow).
 
@@ -968,17 +1043,17 @@ class LadderDriverBase:
                 # can checkpoint-and-degrade instead of losing the run
                 e.state = prev
                 e.stats = state.stats
-                e.iteration = int(prev.iteration)
+                e.iteration = self._iter_of(prev)
                 raise
             if new_cfg is None:
                 return state
             grows += 1
             if grows > self.ladder.max_grows_per_step:
                 raise RuntimeError(
-                    f"iteration {int(prev.iteration)}: still overflowing "
+                    f"iteration {self._iter_of(prev)}: still overflowing "
                     f"after {grows - 1} grows — demand outruns "
                     f"growth_factor={self.ladder.growth_factor}")
-            prev = self._grow(new_cfg, prev, int(prev.iteration))
+            prev = self._grow(new_cfg, prev, self._iter_of(prev))
             state = self._sim.step(prev)
 
     def run(self, state, n_iterations: int,

@@ -26,7 +26,7 @@ reduction one at a time (peak candidate footprint B×R instead of B×9R) and
 skips fully-inactive query blocks outright via a dynamic trip count (paper §5
 static regions at block granularity).
 
-Alternative environments (paper Fig 11 comparison, DESIGN.md §10.5):
+Alternative environments (paper Fig 11 comparison, DESIGN.md §11.5):
   * BruteForceEnvironment — exact O(N²) masked sweep (small N oracle).
   * ScatterGridEnvironment — 'standard' grid materializing a dense (boxes × K)
     table by scatter; models the cost of touching O(#boxes) memory that the

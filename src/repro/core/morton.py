@@ -19,7 +19,7 @@ Two distinct key families live here, and the distinction matters (DESIGN.md §3)
 The paper's gap-skipping quadtree traversal (to enumerate Morton codes of a
 non-power-of-two grid in linear time without a sort) is a serial-CPU trick; on
 TPU the fully-parallel XLA sort is faster, so we intentionally do not port it
-(DESIGN.md §10). We keep the paper's choice of Morton over Hilbert (paper
+(DESIGN.md §11). We keep the paper's choice of Morton over Hilbert (paper
 measured only 0.54% difference, Morton decode is far cheaper).
 
 Morton supports 10 bits per dimension in 3-D (grids up to 1024^3 boxes) and 16

@@ -50,7 +50,8 @@ from .distributed import (DistConfig, DistState, DistributedCapacityLadder,
                           DistributedSimulation, OWNED, partition_global,
                           quantile_boundaries)
 from .engine import (CapacityExhausted, CapacityLadder, EngineConfig,
-                     EngineState, Simulation, stage_pool)
+                     EngineState, ScenarioParams, Simulation, stage_pool)
+from .ensemble import EnsembleEngine, EnsembleState
 from .health import HealthFault, describe
 from .stats import StepStats
 
@@ -223,6 +224,67 @@ def restore_state(ckpt_dir: str, cfg: EngineConfig,
     state = _adapt_env(state, saved_mode, cfg,
                        lambda: _template_state(cfg, behaviors))
     return state, cfg
+
+
+# ---------------------------------------------------------------------------
+# Ensemble save / restore
+# ---------------------------------------------------------------------------
+
+def save_ensemble_state(ckpt_dir: str, state: EnsembleState,
+                        cfg: EngineConfig,
+                        extras: Optional[Dict] = None) -> str:
+    """Atomic checkpoint of a whole ensemble — every lane's state, the
+    active mask, per-lane params, and the tick, as one pytree. The step
+    index is the ensemble ``tick`` (per-lane iterations travel as arrays).
+    Callers with host-side lane bookkeeping (serve/sim_service.py's request
+    table) record it through ``extras``."""
+    meta = {"format": _FORMAT, "kind": "ensemble",
+            "knobs": _engine_knobs(cfg), "n_lanes": state.n_lanes}
+    if extras:
+        meta.update(extras)
+    return ckpt_mod.save(ckpt_dir, int(state.tick), state, extras=meta)
+
+
+def restore_ensemble_state(ckpt_dir: str, cfg: EngineConfig,
+                           behaviors: Sequence[Behavior],
+                           params_template: Optional[ScenarioParams] = None,
+                           step: Optional[int] = None,
+                           apply_knobs: str = "all"
+                           ) -> Tuple[EnsembleState, EngineConfig, Dict]:
+    """Restore ``(state, config, manifest_extras)`` for an ensemble run.
+
+    Same bit-exactness contract as :func:`restore_state`: with
+    ``apply_knobs="all"`` the restored config rebuilds the exact jit program
+    the checkpoint ran under, so stepping the restored ensemble replays the
+    uninterrupted trajectory byte for byte on every lane.
+    ``params_template`` must match the structure the run was saved with
+    (the restore template is built from it). The returned extras dict gives
+    services their lane table back.
+    """
+    if step is None:
+        step = ckpt_mod.latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    meta = ckpt_mod.load_manifest(ckpt_dir, step).get("extras", {})
+    knobs = meta.get("knobs")
+    if knobs is None or meta.get("kind") != "ensemble":
+        raise ValueError(f"{ckpt_dir} step {step}: not an ensemble "
+                         f"simulation checkpoint")
+    cfg = _apply_engine_knobs(cfg, knobs, apply_knobs)
+    n_lanes = meta["n_lanes"]
+    saved_mode = knobs["rebuild"]["mode"]
+    tmpl_cfg = cfg
+    if (cfg.rebuild.mode == "every_k") != (saved_mode == "every_k"):
+        tmpl_cfg = dataclasses.replace(
+            cfg, rebuild=grid_mod.RebuildPolicy(**knobs["rebuild"]))
+    tmpl = EnsembleEngine(tmpl_cfg, behaviors, n_lanes,
+                          params_template).init_state()
+    state = ckpt_mod.restore(ckpt_dir, step, tmpl)
+    state = _adapt_env(
+        state, saved_mode, cfg,
+        lambda: EnsembleEngine(cfg, behaviors, n_lanes,
+                               params_template).init_state())
+    return state, cfg, meta
 
 
 # ---------------------------------------------------------------------------

@@ -2,3 +2,4 @@
 from .kv_cache import (PagedCacheSpec, PagedCacheState, admit_sequence,
                        append_token, gather_kv, init_cache, release_sequence)
 from .batching import ContinuousBatcher, Request
+from .sim_service import FinishedSim, SimRequest, SimService

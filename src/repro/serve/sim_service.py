@@ -1,0 +1,228 @@
+"""Simulation-as-a-service — continuous batching over ensemble lanes.
+
+The token-serving side (batching.py) keeps a fixed-slot decode batch full:
+finished sequences retire, queued requests admit into the freed slots, and
+the jitted step always runs at static shape with inactive slots masked. This
+module is the same loop with a *simulation* as the unit of work and an
+ensemble lane (core/ensemble.py) as the slot:
+
+  request  = initial agents + seed + per-request ScenarioParams + step budget
+  admit    = stage a solo init state, write it into a free lane (jitted
+             lane-indexed scatter; no recompile)
+  step     = ONE vmapped Algorithm-1 iteration advances every occupied lane
+             (under the ensemble capacity ladder, so worst-lane overflow
+             grows the shared rung with the usual rewind)
+  stream   = per-tick, per-lane metrics (a user ``metrics_fn`` vmapped over
+             the ensemble) + per-lane StepStats flow back to the caller
+  retire   = converged / budget-exhausted lanes freeze, final state is read
+             out, and the lane returns to the free pool — at *iteration*
+             granularity, like batching.py retires at token granularity
+
+Admission is blocked, never dropped: with every lane occupied a request
+stays queued (the bounded-memory property batching.py inherits from the
+paper's fixed pools). Checkpointing snapshots the whole ensemble plus the
+host-side lane table through core/simcheck.py, so a SIGKILLed service
+resumes mid-churn with every occupied lane bit-exact; the *queue* is the
+caller's to re-submit (requests are caller-owned inputs, not run state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.behaviors import Behavior
+from ..core.engine import (EngineConfig, EngineState, LadderConfig,
+                           ScenarioParams)
+from ..core.ensemble import EnsembleCapacityLadder, EnsembleEngine
+from ..core.simcheck import restore_ensemble_state, save_ensemble_state
+
+
+@dataclasses.dataclass
+class SimRequest:
+    """One simulation to run: initial agents, RNG seed, per-request knobs."""
+    uid: int
+    position: Any                              # (N, 3) initial positions
+    diameter: Any = None
+    agent_type: Any = None
+    extra_init: Optional[Dict[str, Any]] = None
+    seed: int = 0
+    params: Optional[ScenarioParams] = None    # structure must match the
+                                               # service's params_template
+    max_steps: int = 100
+
+
+@dataclasses.dataclass
+class FinishedSim:
+    """A retired simulation: identity, why it ended, and what it produced."""
+    uid: int
+    lane: int
+    steps: int
+    reason: str                                # "converged" | "max_steps"
+    final: EngineState                         # lane state at retirement
+    trajectory: List[Any]                      # per-step metrics_fn values
+
+
+class SimService:
+    """Host-side orchestrator around the jitted ensemble step.
+
+    ``metrics_fn(pool, params) -> value`` is vmapped over lanes and read
+    back each tick (the streamed per-step output); ``converged_fn(value) ->
+    bool`` decides early retirement from the latest metric. Both optional —
+    without them lanes run to their step budget.
+    """
+
+    def __init__(self, config: EngineConfig,
+                 behaviors: Sequence[Behavior] = (), n_lanes: int = 4,
+                 params_template: Optional[ScenarioParams] = None,
+                 metrics_fn: Optional[Callable] = None,
+                 converged_fn: Optional[Callable] = None,
+                 ladder: Optional[LadderConfig] = None):
+        self.driver = EnsembleCapacityLadder(config, behaviors, n_lanes,
+                                             params_template, ladder)
+        self.n_lanes = n_lanes
+        self.metrics_fn = metrics_fn
+        self.converged_fn = converged_fn
+        self.state = self.driver.init_state()
+        self.queue: List[SimRequest] = []
+        self.lanes: List[Optional[dict]] = [None] * n_lanes
+        self.finished: List[FinishedSim] = []
+        self._metrics_jit = None
+
+    @property
+    def engine(self) -> EnsembleEngine:
+        return self.driver.engine
+
+    def _metrics(self, state):
+        if self.metrics_fn is None:
+            return None
+        if self._metrics_jit is None:
+            # (re)built lazily: the ladder swaps engines across rungs but the
+            # metric is shape-polymorphic per compile, like the step itself
+            self._metrics_jit = jax.jit(lambda pool, params: jax.vmap(
+                self.metrics_fn)(pool, params))
+        return np.asarray(self._metrics_jit(state.pool, state.params))
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: SimRequest) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> int:
+        n = 0
+        for i in range(self.n_lanes):
+            if self.lanes[i] is not None:
+                continue
+            if not self.queue:
+                break
+            req = self.queue.pop(0)            # full lanes → stays queued
+            lane_state = self.engine.stage_lane(
+                req.position, req.diameter, req.agent_type, req.extra_init,
+                seed=req.seed)
+            self.state = self.engine.admit(self.state, i, lane_state,
+                                           req.params)
+            self.lanes[i] = {"req": req, "steps": 0, "trajectory": []}
+            n += 1
+        return n
+
+    # -- retirement ----------------------------------------------------------
+    def _retire(self, lane: int, reason: str) -> None:
+        info = self.lanes[lane]
+        final = self.engine.read_lane(self.state, lane)
+        self.finished.append(FinishedSim(
+            uid=info["req"].uid, lane=lane, steps=info["steps"],
+            reason=reason, final=final, trajectory=info["trajectory"]))
+        self.state = self.engine.retire(self.state, lane)
+        self.lanes[lane] = None
+
+    # -- one service tick ----------------------------------------------------
+    def step(self) -> int:
+        """Admit waiting requests, advance every occupied lane one
+        iteration, stream metrics, retire finished lanes. Returns the
+        number of lanes stepped; 0 with everything idle — the early exit
+        never launches the jitted step."""
+        self._admit()
+        if all(info is None for info in self.lanes):
+            return 0
+        self.state = self.driver.step(self.state)
+        metrics = self._metrics(self.state)
+        n = 0
+        for i, info in enumerate(self.lanes):
+            if info is None:
+                continue
+            n += 1
+            info["steps"] += 1
+            m = None if metrics is None else metrics[i]
+            if m is not None:
+                info["trajectory"].append(m)
+            if (self.converged_fn is not None and m is not None
+                    and self.converged_fn(m)):
+                self._retire(i, "converged")
+            elif info["steps"] >= info["req"].max_steps:
+                self._retire(i, "max_steps")
+        return n
+
+    def run_until_drained(self, max_ticks: int = 100_000) -> int:
+        """Tick until the queue and every lane are empty. Returns ticks."""
+        for t in range(max_ticks):
+            if not self.queue and all(info is None for info in self.lanes):
+                return t
+            self.step()
+        raise RuntimeError(f"service not drained after {max_ticks} ticks "
+                           f"({len(self.queue)} queued, "
+                           f"{sum(i is not None for i in self.lanes)} busy)")
+
+    # -- occupancy / introspection -------------------------------------------
+    def occupancy(self) -> float:
+        """Fraction of lanes currently running a simulation."""
+        return sum(i is not None for i in self.lanes) / self.n_lanes
+
+    # -- checkpoint / resume --------------------------------------------------
+    def checkpoint(self, ckpt_dir: str,
+                   extras: Optional[Dict] = None) -> str:
+        """Snapshot the ensemble + the lane table (uid/steps/budget per
+        occupied lane). Queued requests are NOT checkpointed — they are
+        caller-owned inputs; re-submit them after a restore (``extras`` is
+        the place to record what a caller needs for that, e.g. finished
+        uids — it round-trips through ``restored_meta``)."""
+        table = [None if info is None else
+                 {"uid": info["req"].uid, "steps": info["steps"],
+                  "max_steps": info["req"].max_steps}
+                 for info in self.lanes]
+        meta = {"lanes": table}
+        if extras:
+            meta.update(extras)
+        return save_ensemble_state(ckpt_dir, self.state, self.driver.config,
+                                   extras=meta)
+
+    def restore(self, ckpt_dir: str, step: Optional[int] = None) -> int:
+        """Restore ensemble state + lane table; returns the restored tick.
+
+        Bit-exact resume: the rung knobs recorded in the manifest rebuild
+        the exact jit program, occupied lanes pick up mid-trajectory (their
+        streamed trajectories restart empty — history already went to the
+        caller)."""
+        state, cfg, meta = restore_ensemble_state(
+            ckpt_dir, self.driver.config, self.driver.behaviors,
+            self.driver.params_template, step=step)
+        if meta["n_lanes"] != self.n_lanes:
+            raise ValueError(f"checkpoint has {meta['n_lanes']} lanes, "
+                             f"service has {self.n_lanes}")
+        self.driver.config = cfg
+        self.driver._sim = EnsembleEngine(cfg, self.driver.behaviors,
+                                          self.n_lanes,
+                                          self.driver.params_template)
+        self._metrics_jit = None
+        self.state = state
+        self.restored_meta = meta
+        self.lanes = [
+            None if entry is None else
+            {"req": SimRequest(uid=entry["uid"],
+                               position=np.zeros((0, 3), np.float32),
+                               max_steps=entry["max_steps"]),
+             "steps": entry["steps"], "trajectory": []}
+            for entry in meta["lanes"]]
+        return int(state.tick)

@@ -1,0 +1,252 @@
+"""Ensemble engine (DESIGN.md §8): lane-vs-solo bit-exactness is the whole
+contract.
+
+A lane is only a valid unit of service if running a simulation inside the
+vmapped ensemble is *indistinguishable* from running it solo with the same
+seed and params — channels AND rng keys, bit for bit, through admit/retire
+churn and shared-rung ladder growth. These tests pin that, plus the params
+plumbing the ensemble rides on (per-lane ``ScenarioParams`` must be a no-op
+when unused, and must be refused where the compiled program bakes the
+constants in).
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+import pytest
+
+from repro.core import (EngineConfig, EnsembleCapacityLadder, EnsembleEngine,
+                        LadderConfig, ScenarioParams, Simulation)
+from repro.core import behaviors as bhv
+from repro.core import engine as engine_mod
+from repro.core.behaviors import GrowDivide, Infection, RandomWalk
+
+N, CAP = 96, 128
+
+
+def _cfg(**over):
+    base = dict(capacity=CAP, domain_lo=(0.0,) * 3, domain_hi=(48.0,) * 3,
+                interaction_radius=3.0, use_forces=False, detect_static=False,
+                query_chunk=1024, max_per_box=32)
+    base.update(over)
+    return EngineConfig(**base)
+
+
+def _behaviors(param=True):
+    beta = (lambda ctx: ctx.params["beta"]) if param else 0.25
+    return [RandomWalk(sigma=0.8),
+            Infection(radius=3.0, beta=beta, recovery_time=40)]
+
+
+def _arrays(seed):
+    r = np.random.RandomState(seed)
+    pos = r.uniform(0, 48, (N, 3)).astype(np.float32)
+    at = np.zeros((N,), np.int32)
+    at[:8] = bhv.INFECTED
+    timer = np.zeros((N,), np.int32)
+    timer[:8] = 40
+    return pos, np.full((N,), 1.0, np.float32), at, timer
+
+
+def _stage(engine, seed):
+    pos, dia, at, timer = _arrays(seed)
+    return engine.stage_lane(pos, dia, at, {"infect_timer": timer},
+                             seed=seed)
+
+
+def _solo_run(seed, beta, steps, param=True):
+    """Solo oracle: the raw iteration core with (optional) traced params."""
+    cfg, bs = _cfg(), _behaviors(param)
+    sim = Simulation(cfg, bs)
+    pos, dia, at, timer = _arrays(seed)
+    st = sim.init_state(pos, dia, at, {"infect_timer": timer}, seed=seed)
+    core = engine_mod.make_iteration_core(cfg, bs)
+    step = jax.jit(lambda p, c, r, i, e, pr: core(p, c, r, i, e, pr))
+    pool, conc, rng, env = st.pool, st.conc, st.rng, st.env
+    params = ScenarioParams.of(beta=beta) if param else None
+    it = st.iteration
+    for _ in range(steps):
+        pool, conc, rng, _, env = step(pool, conc, rng, it, env, params)
+        it = it + 1
+    return pool, rng
+
+
+def _channels_equal(a, b, where=""):
+    for name, av in a.channels().items():
+        bv = b.channels()[name]
+        assert np.array_equal(np.asarray(av), np.asarray(bv)), \
+            f"{where} channel {name} diverged"
+
+
+# ---------------------------------------------------------------------------
+# lane-vs-solo bit-exactness
+# ---------------------------------------------------------------------------
+
+def test_lanes_bit_exact_vs_solo():
+    """Every lane of a vmapped ensemble — its own seed, its own beta —
+    reproduces the solo run bit for bit, rng keys included."""
+    seeds, betas = [3, 7, 11], [0.15, 0.3, 0.45]
+    steps = 8
+    eng = EnsembleEngine(_cfg(), _behaviors(), n_lanes=3,
+                         params_template=ScenarioParams.of(beta=0.0))
+    st = eng.init_state()
+    for lane, (sd, b) in enumerate(zip(seeds, betas)):
+        st = eng.admit(st, lane, _stage(eng, sd), ScenarioParams.of(beta=b))
+    for _ in range(steps):
+        st = eng.step(st)
+    assert np.array_equal(np.asarray(st.iteration), [steps] * 3)
+    assert int(st.tick) == steps
+    for lane, (sd, b) in enumerate(zip(seeds, betas)):
+        spool, srng = _solo_run(sd, b, steps)
+        lane_state = eng.read_lane(st, lane)
+        _channels_equal(lane_state.pool, spool, f"lane {lane}")
+        assert np.array_equal(np.asarray(lane_state.rng), np.asarray(srng)), \
+            f"lane {lane} rng diverged"
+
+
+def test_params_none_matches_static_config():
+    """The params plumbing is a bit-exact no-op when unused: a solo run with
+    traced beta equals one with the same beta baked into the behavior."""
+    p_static, _ = _solo_run(5, 0.25, steps=6, param=False)
+    p_traced, _ = _solo_run(5, 0.25, steps=6, param=True)
+    _channels_equal(p_static, p_traced, "static-vs-traced")
+
+
+# ---------------------------------------------------------------------------
+# lane masking: retire freezes, stats zero, reuse is independent
+# ---------------------------------------------------------------------------
+
+def test_retired_lane_frozen_and_stats_zeroed():
+    eng = EnsembleEngine(_cfg(), _behaviors(), n_lanes=2,
+                         params_template=ScenarioParams.of(beta=0.0))
+    st = eng.init_state()
+    for lane, sd in enumerate([3, 7]):
+        st = eng.admit(st, lane, _stage(eng, sd),
+                       ScenarioParams.of(beta=0.3))
+    for _ in range(4):
+        st = eng.step(st)
+    frozen = eng.read_lane(st, 0)
+    st = eng.retire(st, 0)
+    for _ in range(5):
+        st = eng.step(st)
+    after = eng.read_lane(st, 0)
+    _channels_equal(after.pool, frozen.pool, "retired lane")
+    assert np.array_equal(np.asarray(after.rng), np.asarray(frozen.rng))
+    # per-lane iteration advances only while active
+    assert np.array_equal(np.asarray(st.iteration), [4, 9])
+    # a frozen lane contributes nothing to the stats the ladder watches
+    assert int(np.asarray(st.stats["n_live"])[0]) == 0
+    assert int(np.asarray(st.stats["n_live"])[1]) > 0
+
+
+def test_lane_reuse_after_churn_matches_oracle():
+    """Retire lane 0 mid-run, admit a NEW simulation into it while lane 1
+    keeps going: the reused lane must match a fresh 1-lane run bit for bit
+    (the admit overwrote rng/params/state — nothing of the previous
+    occupant leaks)."""
+    eng = EnsembleEngine(_cfg(), _behaviors(), n_lanes=2,
+                         params_template=ScenarioParams.of(beta=0.0))
+    st = eng.init_state()
+    for lane, sd in enumerate([3, 7]):
+        st = eng.admit(st, lane, _stage(eng, sd),
+                       ScenarioParams.of(beta=0.3))
+    for _ in range(6):
+        st = eng.step(st)
+    st = eng.retire(st, 0)
+    staged = _stage(eng, 11)
+    st = eng.admit(st, 0, staged, ScenarioParams.of(beta=0.4))
+    for _ in range(7):
+        st = eng.step(st)
+
+    solo = EnsembleEngine(_cfg(), _behaviors(), n_lanes=1,
+                          params_template=ScenarioParams.of(beta=0.0))
+    s1 = solo.admit(solo.init_state(), 0, _stage(solo, 11),
+                    ScenarioParams.of(beta=0.4))
+    for _ in range(7):
+        s1 = solo.step(s1)
+    lane0, oracle = eng.read_lane(st, 0), solo.read_lane(s1, 0)
+    _channels_equal(lane0.pool, oracle.pool, "reused lane")
+    assert np.array_equal(np.asarray(lane0.rng), np.asarray(oracle.rng))
+    assert int(np.asarray(st.iteration)[0]) == 7      # reset on admit
+    assert int(np.asarray(st.iteration)[1]) == 13
+
+
+# ---------------------------------------------------------------------------
+# shared-rung ensemble ladder
+# ---------------------------------------------------------------------------
+
+def test_ensemble_ladder_bit_parity_vs_presized():
+    """Two growing lanes under the shared-rung ladder: the rung is sized off
+    worst-lane demand, the overflowing tick rewinds, and the result is
+    bit-identical to an ensemble pre-sized at the final rung."""
+    cfg = _cfg(capacity=64, domain_hi=(96.0,) * 3, interaction_radius=4.0,
+               max_per_box=4, query_chunk=256)
+    scenario = [GrowDivide(rate=0.8, threshold_diameter=6.0),
+                RandomWalk(sigma=0.3)]
+    steps = 7
+
+    ladder = EnsembleCapacityLadder(cfg, scenario, n_lanes=2,
+                                    ladder=LadderConfig(growth_factor=2.0,
+                                                        round_to=32))
+
+    def admit_all(engine, state):
+        for lane, sd in enumerate([0, 1]):
+            r = np.random.default_rng(sd)
+            pos = r.uniform(4, 92, (48, 3)).astype(np.float32)
+            ls = engine.stage_lane(pos, np.full(48, 5.2, np.float32),
+                                   seed=sd)
+            state = engine.admit(state, lane, ls)
+        return state
+
+    st = admit_all(ladder.engine, ladder.init_state())
+    st = ladder.run(st, steps)
+    assert any(r["field"] == "capacity" for r in ladder.rungs), ladder.rungs
+
+    # oracle: ensemble pre-sized at the ladder's final rung
+    pre = EnsembleEngine(ladder.config, scenario, n_lanes=2)
+    st2 = admit_all(pre, pre.init_state())
+    for _ in range(steps):
+        st2 = pre.step(st2)
+
+    for lane in range(2):
+        a = ladder.engine.read_lane(st, lane)
+        b = pre.read_lane(st2, lane)
+        la, lb = np.asarray(a.pool.alive), np.asarray(b.pool.alive)
+        assert la.sum() == lb.sum() > 48, f"lane {lane}"
+        pa = np.asarray(a.pool.position)[la]
+        pb = np.asarray(b.pool.position)[lb]
+        oa, ob = np.lexsort(pa.T), np.lexsort(pb.T)
+        assert np.array_equal(pa[oa], pb[ob]), \
+            f"lane {lane} positions diverged from pre-sized oracle"
+
+
+# ---------------------------------------------------------------------------
+# guard rails
+# ---------------------------------------------------------------------------
+
+def test_admit_params_must_match_template():
+    eng = EnsembleEngine(_cfg(), _behaviors(), n_lanes=1,
+                         params_template=ScenarioParams.of(beta=0.0))
+    with pytest.raises(ValueError, match="params_template"):
+        eng.admit(eng.init_state(), 0, _stage(eng, 0), None)
+    eng2 = EnsembleEngine(_cfg(), _behaviors(param=False), n_lanes=1)
+    with pytest.raises(ValueError, match="params_template"):
+        eng2.admit(eng2.init_state(), 0, _stage(eng2, 0),
+                   ScenarioParams.of(beta=0.1))
+
+
+def test_scenario_force_overrides_refused_under_pallas():
+    """The pallas force path bakes force constants into the kernel, so
+    traced per-lane force overrides must be refused loudly, not silently
+    ignored."""
+    cfg = _cfg(use_forces=True, force_impl="pallas")
+    core = engine_mod.make_iteration_core(cfg, [])
+    sim = Simulation(cfg, [])
+    pos, dia, _, _ = _arrays(0)
+    st = sim.init_state(pos, dia)
+    with pytest.raises(ValueError, match="Pallas"):
+        core(st.pool, st.conc, st.rng, st.iteration, st.env,
+             ScenarioParams.of(force={"k_rep": 2.0}))
